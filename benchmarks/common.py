@@ -1,0 +1,82 @@
+"""Shared benchmark scaffolding: task construction + timed algorithm runs.
+
+Reduced-scale by default (CPU container): the paper's axes are preserved
+(datasets, models, Dirichlet λ, 4 algorithms, 100-client/10-ES option) but
+rounds and dataset sizes are scaled down; `--full` restores the paper's
+T=4000 / 100-client setting (hours on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import FedCHSConfig, FLTask, run_fed_chs
+from repro.core.baselines import (
+    FedAvgConfig,
+    HierLocalQSGDConfig,
+    WRWGDConfig,
+    run_fedavg,
+    run_hier_local_qsgd,
+    run_wrwgd,
+)
+from repro.data import assign_clusters, dirichlet_partition, make_dataset
+from repro.models.classifier import make_classifier
+
+
+@dataclasses.dataclass
+class BenchScale:
+    train_size: int = 4000
+    test_size: int = 1000
+    num_clients: int = 20
+    num_clusters: int = 5
+    rounds: int = 30
+    local_steps: int = 10
+    eval_every: int = 5
+    # quick mode shrinks LeNet widths (paper's 64/256-kernel LeNet is ~20 min
+    # per algorithm run on this CPU); --full restores Appendix A exactly.
+    lenet_width_scale: float = 0.25
+
+    @classmethod
+    def paper(cls) -> "BenchScale":
+        return cls(train_size=50_000, test_size=10_000, num_clients=100,
+                   num_clusters=10, rounds=4000, local_steps=20, eval_every=100,
+                   lenet_width_scale=1.0)
+
+
+def build_task(dataset: str, model: str, lam: float, scale: BenchScale, *,
+               seed: int = 0) -> FLTask:
+    ds = make_dataset(dataset, train_size=scale.train_size, test_size=scale.test_size,
+                      seed=seed)
+    clients = dirichlet_partition(ds.train_y, scale.num_clients, lam, seed=seed)
+    clusters = assign_clusters(scale.num_clients, scale.num_clusters, seed=seed)
+    clf = make_classifier(model, dataset, ds.spec.image_shape, ds.spec.num_classes,
+                          width_scale=scale.lenet_width_scale)
+    return FLTask(clf, ds, clients, clusters, batch_size=32, seed=seed)
+
+
+ALGORITHMS = ("fed_chs", "fedavg", "wrwgd", "hier_local_qsgd")
+
+
+def run_algorithm(name: str, task: FLTask, scale: BenchScale, *, qsgd: int | None = None,
+                  seed: int = 0):
+    t0 = time.time()
+    if name == "fed_chs":
+        res = run_fed_chs(task, FedCHSConfig(
+            rounds=scale.rounds, local_steps=scale.local_steps,
+            eval_every=scale.eval_every, qsgd_levels=qsgd, seed=seed))
+    elif name == "fedavg":
+        res = run_fedavg(task, FedAvgConfig(
+            rounds=max(scale.rounds // 4, 4), local_steps=scale.local_steps,
+            eval_every=max(scale.eval_every // 4, 1), qsgd_levels=qsgd, seed=seed))
+    elif name == "wrwgd":
+        res = run_wrwgd(task, WRWGDConfig(
+            rounds=scale.rounds * 2, local_steps=scale.local_steps,
+            eval_every=scale.eval_every * 2, seed=seed))
+    elif name == "hier_local_qsgd":
+        res = run_hier_local_qsgd(task, HierLocalQSGDConfig(
+            rounds=max(scale.rounds // 6, 2), local_steps=scale.local_steps,
+            local_epochs=5, eval_every=max(scale.eval_every // 6, 1),
+            qsgd_levels=qsgd if qsgd is not None else 16, seed=seed))
+    else:
+        raise ValueError(name)
+    return res, time.time() - t0

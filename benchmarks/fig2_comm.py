@@ -1,0 +1,88 @@
+"""Paper Fig. 2: total communication (bits) to reach test accuracy Γ,
+with and without QSGD compression, Fed-CHS vs FedAvg(+QSGD) vs Hier-Local-QSGD.
+
+Two claims reproduced (§5.3):
+  * structural — Fed-CHS needs NO parameter-server hop at all: its PS column
+    is exactly 0 bits, while every baseline pays ES→PS or client→PS traffic
+    (which the paper additionally calls out as multi-hop/long-distance);
+  * total bits — with the paper's Fig.-2 configuration (E=5 local epochs per
+    interaction, so K=20 in-cluster iterations cost only 4 uploads) and/or
+    QSGD compression, Fed-CHS reaches Γ with the fewest total bits.
+
+Eval granularity is uniform (every round) so bits-to-Γ is not quantised
+differently across algorithms.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BenchScale, build_task
+from repro.core import FedCHSConfig, run_fed_chs
+from repro.core.baselines import (
+    FedAvgConfig,
+    HierLocalQSGDConfig,
+    run_fedavg,
+    run_hier_local_qsgd,
+)
+
+GAMMA = {"mnist": 0.90, "cifar10": 0.55}
+
+PS_HOPS = ("es_to_ps", "ps_to_es", "client_to_ps", "ps_to_client")
+
+
+def _bits_split(res, gamma):
+    """(edge_mbits, ps_mbits, total_mbits) accumulated up to the first round
+    reaching gamma (None if never reached)."""
+    r = res.rounds_to_accuracy(gamma)
+    if r is None:
+        return None, None, None
+    total = res.ledger.bits_until(r)
+    # hop split at end-of-run ratios (the per-round mix is constant per alg)
+    ps_frac = sum(res.ledger.bits[h] for h in PS_HOPS) / max(res.ledger.total_bits(), 1)
+    return total * (1 - ps_frac) / 1e6, total * ps_frac / 1e6, total / 1e6
+
+
+def run(quick: bool = True):
+    scale = BenchScale()
+    rows = []
+    print("\nFig. 2 (Mbits to reach Γ; '-' = not reached at this reduced scale):")
+    print(f"{'dataset':9s} {'algorithm':22s} {'compressed':>10s} "
+          f"{'edge_Mb':>9s} {'PS_Mb':>8s} {'total_Mb':>9s} {'final_acc':>9s}")
+    datasets = ["mnist"] if quick else ["mnist", "cifar10"]
+    for dataset in datasets:
+        task = build_task(dataset, "lenet" if not quick else "mlp", 0.6, scale)
+        gamma = GAMMA[dataset]
+
+        def emit(name, tag, res, wall):
+            edge, ps, total = _bits_split(res, gamma)
+            fmt = lambda v: f"{v:9.1f}" if v is not None else f"{'-':>9s}"
+            print(f"{dataset:9s} {name:22s} {tag:>10s} {fmt(edge)} "
+                  f"{fmt(ps)[:8]:>8s} {fmt(total)} {res.final_acc():9.4f}")
+            rows.append((f"fig2/{dataset}-{name}-{tag}",
+                         wall / max(len(res.rounds), 1) * 1e6,
+                         f"mbits_to_gamma={None if total is None else round(total, 1)}"))
+
+        for E, qsgd in ((1, None), (1, 16), (5, None), (5, 16)):
+            t0 = time.time()
+            res = run_fed_chs(task, FedCHSConfig(
+                rounds=scale.rounds, local_steps=scale.local_steps,
+                local_epochs=E, eval_every=1, qsgd_levels=qsgd, seed=0))
+            emit(f"fed_chs(E={E})", "qsgd16" if qsgd else "dense",
+                 res, time.time() - t0)
+        for qsgd in (None, 16):
+            t0 = time.time()
+            res = run_fedavg(task, FedAvgConfig(
+                rounds=max(scale.rounds // 4, 4), local_steps=scale.local_steps,
+                eval_every=1, qsgd_levels=qsgd, seed=0))
+            emit("fedavg", "qsgd16" if qsgd else "dense", res, time.time() - t0)
+        t0 = time.time()
+        res = run_hier_local_qsgd(task, HierLocalQSGDConfig(
+            rounds=max(scale.rounds // 6, 2), local_steps=scale.local_steps,
+            local_epochs=5, eval_every=1, qsgd_levels=16, seed=0))
+        emit("hier_local_qsgd", "qsgd16", res, time.time() - t0)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,39 @@
+"""Paper Fig. 3: Fed-CHS sensitivity to K (local rounds), λ (heterogeneity)
+and M (number of ESs)."""
+from __future__ import annotations
+
+from benchmarks.common import BenchScale, build_task, run_algorithm
+from repro.core import FedCHSConfig, run_fed_chs
+
+
+def run(quick: bool = True):
+    rows = []
+    base = BenchScale()
+    print("\nFig. 3a (K sweep, mnist/mlp λ=0.6):")
+    for K in (5, 10, 20):
+        scale = BenchScale(local_steps=K)
+        task = build_task("mnist", "mlp", 0.6, scale)
+        res, wall = run_algorithm("fed_chs", task, scale)
+        print(f"  K={K:3d}  acc={res.final_acc():.4f}")
+        rows.append((f"fig3/K{K}", wall / base.rounds * 1e6, f"acc={res.final_acc():.4f}"))
+
+    print("Fig. 3b (λ sweep):")
+    for lam in (0.1, 0.3, 0.6, 10.0):
+        task = build_task("mnist", "mlp", lam, base)
+        res, wall = run_algorithm("fed_chs", task, base)
+        print(f"  λ={lam:5.1f}  acc={res.final_acc():.4f}")
+        rows.append((f"fig3/lam{lam}", wall / base.rounds * 1e6, f"acc={res.final_acc():.4f}"))
+
+    print("Fig. 3c (M sweep — too many ESs hurt, paper B.2):")
+    for M in (2, 5, 10):
+        scale = BenchScale(num_clusters=M)
+        task = build_task("mnist", "mlp", 0.6, scale)
+        res, wall = run_algorithm("fed_chs", task, scale)
+        print(f"  M={M:3d}  acc={res.final_acc():.4f}")
+        rows.append((f"fig3/M{M}", wall / base.rounds * 1e6, f"acc={res.final_acc():.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

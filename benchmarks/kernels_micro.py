@@ -1,0 +1,38 @@
+"""Microbenchmarks for the Pallas QSGD kernel (interpret mode on CPU; the
+numbers prove correctness-path throughput, not TPU perf — TPU timing comes
+from the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import qsgd_quantize, qsgd_roundtrip
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n in (1 << 16, 1 << 20) if quick else (1 << 16, 1 << 20, 1 << 24):
+        v = jax.random.normal(key, (n,), jnp.float32)
+        us_q = _time(lambda x: qsgd_quantize(x, key, s=16), v)
+        us_rt = _time(lambda x: qsgd_roundtrip(x, key, s=16), v)
+        gbps = n * 4 / (us_q / 1e6) / 1e9
+        rows.append((f"kernel/qsgd_quantize_n{n}", us_q, f"GB/s={gbps:.2f}"))
+        rows.append((f"kernel/qsgd_roundtrip_n{n}", us_rt, ""))
+        print(f"  qsgd n={n:>9d}: quantize {us_q:10.0f} us  roundtrip {us_rt:10.0f} us")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,63 @@
+"""Assemble the §Roofline table from the dry-run JSON records
+(experiments/dryrun/*.json) — run `python -m repro.launch.dryrun` first."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_table(recs: list[dict], *, mesh: str = "single") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r.get("variant", "-")))
+    out = [
+        f"{'arch':20s} {'shape':12s} {'var':7s} {'bound':10s} "
+        f"{'compute_s':>11s} {'memory_s':>11s} {'collect_s':>11s} "
+        f"{'mem/dev GB':>10s} {'MF/HLO':>7s}"
+    ]
+    for r in rows:
+        ratio = r.get("model_vs_hlo")
+        out.append(
+            f"{r['arch']:20s} {r['shape']:12s} {str(r.get('variant', '-')):7s} "
+            f"{r['bound']:10s} {r['compute_s']:11.3e} {r['memory_s']:11.3e} "
+            f"{r['collective_s']:11.3e} "
+            f"{r['memory'].get('peak_bytes', 0) / 1e9:10.2f} "
+            f"{ratio if ratio else float('nan'):7.2f}"
+        )
+    return "\n".join(out)
+
+
+def run(quick: bool = True):
+    recs = load_records()
+    rows = []
+    if not recs:
+        print("  (no dry-run records; run `python -m repro.launch.dryrun` first)")
+        return rows
+    for mesh in ("single", "multi"):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        if not sub:
+            continue
+        print(f"\nRoofline table ({mesh} mesh, {sub[0]['chips']} chips):")
+        print(format_table(recs, mesh=mesh))
+    for r in recs:
+        rows.append((
+            f"roofline/{r['arch']}-{r['shape']}-{r['mesh']}-{r.get('variant', '-')}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"bound={r['bound']}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

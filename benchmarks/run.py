@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (hours on CPU); default is reduced")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,fig2,fig3,fig4,kernels,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import fig2_comm, fig3_hparams, fig4_partial_het, kernels_micro, roofline
+    from benchmarks import table1_accuracy
+
+    suites = {
+        "table1": table1_accuracy.run,
+        "fig2": fig2_comm.run,
+        "fig3": fig3_hparams.run,
+        "fig4": fig4_partial_het.run,
+        "kernels": kernels_micro.run,
+        "roofline": roofline.run,
+    }
+    selected = args.only.split(",") if args.only else list(suites)
+
+    all_rows = []
+    for name in selected:
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        all_rows.extend(suites[name](quick=quick))
+        print(f"[{name} done in {time.time() - t0:.1f}s]", flush=True)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

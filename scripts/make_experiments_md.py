@@ -1,0 +1,152 @@
+"""Regenerate EXPERIMENTS.md §Dry-run and §Roofline from experiments/dryrun/*.json,
+and splice in the hand-authored §Perf log from experiments/perf_log.md.
+
+  PYTHONPATH=src:. python scripts/make_experiments_md.py
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
+PERF_LOG = os.path.join(ROOT, "experiments", "perf_log.md")
+OUT = os.path.join(ROOT, "EXPERIMENTS.md")
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load():
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER[r["shape"]], r["mesh"],
+                             str(r.get("variant"))))
+    return recs
+
+
+def gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+def dryrun_section(recs):
+    lines = [
+        "## §Dry-run",
+        "",
+        "Every (architecture × input shape) lowered **and compiled** with "
+        "`jax.jit(...).lower(...).compile()` on the production meshes "
+        "(single pod 16×16 = 256 chips, multi-pod 2×16×16 = 512 chips). "
+        "`train_4k` lowers one Fed-CHS round (variant `fedchs`; `hfl` = "
+        "star-aggregation baseline); decode shapes lower `serve_step` "
+        "(1 token vs a seq_len cache). long_500k runs for mamba2 / "
+        "recurrentgemma / mistral-nemo (sliding-window variant) and is "
+        "skipped for pure full-attention archs + whisper (DESIGN.md §4): "
+        "33 combos × 2 meshes + 20 HFL-variant train lowerings + 20 `+opt` "
+        "train lowerings + 6 `opt` serve lowerings = "
+        f"{len(recs)} records, all compiled successfully.",
+        "",
+        "| arch | shape | mesh | variant | compile s | bytes/dev (peak) | "
+        "collective bytes/dev | HLO dot GFLOPs/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('variant','-')} | "
+            f"{r['compile_s']} | {gb(r['memory'].get('peak_bytes', 0))} GB | "
+            f"{gb(r['collective_bytes_per_device'])} GB | "
+            f"{r['dot_flops_per_device'] / 1e9:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_section(recs):
+    lines = [
+        "## §Roofline",
+        "",
+        "Terms in seconds/step per chip (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, "
+        "50 GB/s/link ICI). compute = trip-scaled HLO dot FLOPs / peak; memory = "
+        "cost-analysis bytes (trip-scaled) / HBM bw; collective = HLO collective "
+        "operand bytes (all-reduce 2×) / link bw. MODEL_FLOPS = 6·N·D (train, "
+        "N=active params for MoE) or 2·N·D (serve); MF/HLO = MODEL_FLOPS / "
+        "(Σdev HLO dot FLOPs) — the useful-compute fraction (values <1 mean "
+        "HLO does extra work: remat, attention, MoE dispatch; values >1 mean "
+        "the analytic model overestimates, e.g. decode where cache reads "
+        "dominate and matmul work is tiny). Single-pod table = the 40-pair "
+        "baseline grid (33 lowered + 7 structural skips).",
+        "",
+    ]
+    for mesh in ("single", "multi"):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        if not sub:
+            continue
+        lines += [
+            f"### {mesh} mesh ({sub[0]['chips']} chips)",
+            "",
+            "| arch | shape | var | bound | compute s | memory s | collective s "
+            "| peak GB/dev | MF/HLO |",
+            "|---|---|---|---|---|---|---|---|---|",
+        ]
+        for r in sub:
+            mf = r.get("model_vs_hlo")
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('variant','-')} | "
+                f"**{r['bound']}** | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+                f"{r['collective_s']:.3e} | {gb(r['memory'].get('peak_bytes', 0))} | "
+                f"{mf:.2f} |" if mf else
+                f"| {r['arch']} | {r['shape']} | {r.get('variant','-')} | "
+                f"**{r['bound']}** | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+                f"{r['collective_s']:.3e} | {gb(r['memory'].get('peak_bytes', 0))} | - |"
+            )
+        lines.append("")
+        # per-record bottleneck notes
+    return "\n".join(lines)
+
+
+def bottleneck_notes(recs):
+    lines = ["### Dominant-bottleneck notes (single-pod baselines)", ""]
+    seen = set()
+    for r in recs:
+        if r["mesh"] != "single" or str(r.get("variant")) == "hfl":
+            continue
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        note = {
+            "compute": "matmul-limited; gains come from MXU-friendlier tiles or fewer recomputed dots",
+            "memory": "HBM-stream-limited; gains come from tighter activation/cache sharding, "
+                      "vocab padding to shardable sizes, or smaller temporaries",
+            "collective": "ICI-limited; gains come from removing redundant all-gathers / "
+                          "reshaping the layout so contractions stay shard-local",
+        }[r["bound"]]
+        lines.append(f"- **{r['arch']} × {r['shape']}** — bound: {r['bound']} "
+                     f"(c={r['compute_s']:.2e}, m={r['memory_s']:.2e}, "
+                     f"x={r['collective_s']:.2e}); {note}.")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    perf = ""
+    if os.path.exists(PERF_LOG):
+        with open(PERF_LOG) as f:
+            perf = f.read()
+    content = "\n\n".join([
+        "# EXPERIMENTS — Fed-CHS reproduction + multi-pod dry-run + roofline",
+        "(generated by scripts/make_experiments_md.py from experiments/dryrun/*.json; "
+        "§Perf from experiments/perf_log.md; paper-claims validation from "
+        "benchmarks — see bench_output.txt)",
+        dryrun_section(recs),
+        roofline_section(recs),
+        bottleneck_notes(recs),
+        perf,
+    ])
+    with open(OUT, "w") as f:
+        f.write(content + "\n")
+    print(f"wrote {OUT} ({len(recs)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — Fed-CHS: Sequential Federated Learning in Hierarchical Architecture,
+built as a deployable JAX framework (protocol + model zoo + multi-pod runtime)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import save_pytree, load_pytree, save_fl_state, load_fl_state
+
+__all__ = ["save_pytree", "load_pytree", "save_fl_state", "load_fl_state"]

@@ -1,0 +1,79 @@
+"""Checkpointing: parameter pytrees and resumable FL protocol state.
+
+npz-based (no external deps): leaves are stored under their tree paths, so a
+checkpoint is stable across process restarts and readable with plain numpy.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_META_KEY = "__pytree_meta__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    arrays = {}
+    order = []
+    for keypath, leaf in flat:
+        name = _path_str(keypath)
+        order.append(name)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) in ("bfloat16", "float8_e4m3fn"):
+            # numpy cannot serialise ml_dtypes natively; store widened
+            arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+        arrays[name] = arr
+    arrays[_META_KEY] = np.frombuffer(
+        json.dumps({"order": order, "treedef": str(treedef)}).encode(), dtype=np.uint8
+    )
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of `like` (names must match)."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree.flatten_with_path(like)
+        leaves = []
+        for keypath, leaf in flat:
+            name = _path_str(keypath)
+            arr = data[name]
+            assert arr.shape == tuple(leaf.shape), f"{name}: {arr.shape} != {leaf.shape}"
+            leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+        return jax.tree.unflatten(treedef, leaves)
+
+
+def save_fl_state(
+    path: str, params: PyTree, *, round_idx: int, visit_counts: np.ndarray, current: int
+) -> None:
+    """Round-resumable Fed-CHS state: model + scheduler (c vector, m(t))."""
+    save_pytree(path + ".params.npz", params)
+    np.savez(
+        path + ".sched.npz",
+        round_idx=np.int64(round_idx),
+        visit_counts=visit_counts.astype(np.int64),
+        current=np.int64(current),
+    )
+
+
+def load_fl_state(path: str, like_params: PyTree):
+    params = load_pytree(path + ".params.npz", like_params)
+    with np.load(path + ".sched.npz") as s:
+        return params, int(s["round_idx"]), s["visit_counts"].copy(), int(s["current"])

@@ -1,0 +1,22 @@
+"""Communication layer: the QSGD lossy channel (Pallas-backed) + bit accounting.
+
+Re-exports the kernel wrappers so higher layers depend on `repro.comm`,
+not on kernel internals.
+"""
+from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
+from repro.kernels.ops import (
+    qsgd_compress_tree,
+    qsgd_dequantize,
+    qsgd_quantize,
+    qsgd_roundtrip,
+)
+
+__all__ = [
+    "CommLedger",
+    "dense_message_bits",
+    "qsgd_message_bits",
+    "qsgd_compress_tree",
+    "qsgd_dequantize",
+    "qsgd_quantize",
+    "qsgd_roundtrip",
+]

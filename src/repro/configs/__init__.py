@@ -1,0 +1,3 @@
+from repro.configs.base import ArchConfig, MLAConfig
+
+__all__ = ["ArchConfig", "MLAConfig"]

@@ -1,0 +1,18 @@
+"""qwen3-0.6b [dense] — 28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936,
+qk_norm, head_dim=128. [hf:Qwen/Qwen3-8B family card, 0.6B point]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    num_layers=28,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+)

@@ -1,0 +1,25 @@
+# Fed-CHS: Sequential Federated Learning in Hierarchical Architecture.
+# The paper's contribution lives here: the Algorithm-1 protocol (fed_chs),
+# the 2-step next-passing-cluster scheduler, ES topologies, bit-exact
+# communication accounting, baselines, and the TPU-native sharded variant.
+from repro.core.fed_chs import FedCHSConfig, run_fed_chs
+from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
+from repro.core.scheduler import FedCHSScheduler, RandomWalkScheduler, RingScheduler
+from repro.core.simulation import FLTask, RunResult, evaluate
+from repro.core.topology import Topology, make_topology
+
+__all__ = [
+    "FedCHSConfig",
+    "run_fed_chs",
+    "CommLedger",
+    "dense_message_bits",
+    "qsgd_message_bits",
+    "FedCHSScheduler",
+    "RandomWalkScheduler",
+    "RingScheduler",
+    "FLTask",
+    "RunResult",
+    "evaluate",
+    "Topology",
+    "make_topology",
+]

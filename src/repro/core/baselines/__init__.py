@@ -1,0 +1,12 @@
+from repro.core.baselines.fedavg import FedAvgConfig, run_fedavg
+from repro.core.baselines.wrwgd import WRWGDConfig, run_wrwgd
+from repro.core.baselines.hier_local_qsgd import HierLocalQSGDConfig, run_hier_local_qsgd
+
+__all__ = [
+    "FedAvgConfig",
+    "run_fedavg",
+    "WRWGDConfig",
+    "run_wrwgd",
+    "HierLocalQSGDConfig",
+    "run_hier_local_qsgd",
+]

@@ -1,0 +1,79 @@
+"""FedAvg (McMahan et al., 2017) baseline, with optional QSGD-compressed uplinks
+(the paper's Fig. 2 "FedAvg compressed by QSGD" arm).
+
+Per round: every client runs K local SGD steps from the PS model, uploads the
+model delta to the PS (multi-hop in a real deployment; the ledger records the
+client<->PS hop type so Fig. 2's structural comparison is visible), and the PS
+takes the D_n/D_A-weighted average.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
+from repro.core.simulation import FLTask, RunResult, _multi_client_local_sgd_fn, evaluate
+from repro.kernels.ops import qsgd_compress_tree
+from repro.optim.schedules import Schedule, paper_sqrt_schedule
+from repro.utils import tree_add
+
+
+@dataclasses.dataclass
+class FedAvgConfig:
+    rounds: int = 200
+    local_steps: int = 20          # paper B.1: "training epochs in clients ... K=20"
+    eval_every: int = 10
+    bits_per_param: int = 32
+    qsgd_levels: int | None = None
+    seed: int = 0
+    schedule: Schedule | None = None
+
+
+def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
+    task.reset_loaders(config.seed)
+    K = config.local_steps
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = jnp.asarray([sched_fn(k) for k in range(K)], dtype=jnp.float32)
+
+    params = task.init_params()
+    d = task.num_params()
+    ledger = CommLedger()
+    multi_local = _multi_client_local_sgd_fn(task.model)
+    gammas = jnp.asarray(task.global_weights())
+    key = jax.random.PRNGKey(config.seed + 1)
+
+    dense_bits = dense_message_bits(d, config.bits_per_param)
+    up_bits = (
+        qsgd_message_bits(d, config.qsgd_levels)
+        if config.qsgd_levels is not None
+        else dense_bits
+    )
+
+    rounds_log, acc_log, loss_log = [], [], []
+    n = task.num_clients
+    for t in range(config.rounds):
+        # all clients sample K batches; stack to (n, K, B, ...)
+        bx, by = zip(*(task.sample_client_batches(i, K) for i in range(n)))
+        xs = jnp.stack(bx)
+        ys = jnp.stack(by)
+        new_p, losses = multi_local(params, xs, ys, lrs)
+        deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
+        if config.qsgd_levels is not None:
+            key, sub = jax.random.split(key)
+            deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
+        agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+        params = tree_add(params, agg)
+
+        ledger.record("ps_to_client", dense_bits, n)
+        ledger.record("client_to_ps", up_bits, n)
+        ledger.snapshot(t)
+
+        if t % config.eval_every == 0 or t == config.rounds - 1:
+            rounds_log.append(t)
+            acc_log.append(evaluate(task.model, params, task.dataset))
+            loss_log.append(float(jnp.mean(losses)))
+
+    return RunResult("fedavg", rounds_log, acc_log, loss_log, ledger, params)

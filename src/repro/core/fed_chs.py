@@ -1,0 +1,140 @@
+"""Fed-CHS (Algorithm 1) — the paper's contribution, faithful host-level protocol.
+
+Round t:
+  1. ES m(t) broadcasts w^t to its cluster's clients.
+  2. K/E interactions: clients run E local SGD steps from the broadcast model
+     (E=1 reproduces Eq. (5) literally: the uploaded "delta" is eta_k * grad),
+     upload their update, and the ES takes the gamma-weighted aggregate.
+  3. m(t) selects m(t+1) by the 2-step least-traversed / largest-dataset rule
+     and pushes w^{t+1} over a single ES->ES hop. No PS anywhere.
+
+Communication is metered bit-exactly via CommLedger; uplinks can traverse the
+QSGD channel (Pallas kernel) to reproduce the Fig. 2 compression runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
+from repro.core.scheduler import FedCHSScheduler
+from repro.core.simulation import (
+    FLTask,
+    RunResult,
+    _cluster_sgd_fn,
+    _multi_client_local_sgd_fn,
+    evaluate,
+    weighted_tree_sum,
+)
+from repro.core.topology import Topology, make_topology
+from repro.kernels.ops import qsgd_compress_tree
+from repro.optim.schedules import Schedule, paper_sqrt_schedule
+from repro.utils import tree_sub, tree_add
+
+
+@dataclasses.dataclass
+class FedCHSConfig:
+    rounds: int = 200                      # T
+    local_steps: int = 20                  # K (total in-cluster iterations)
+    local_epochs: int = 1                  # E (local steps per upload); K % E == 0
+    topology: str = "random_sparse"        # paper B.1: random sparse, degree <= 3
+    topology_seed: int = 0
+    dynamic: str | None = None             # "leo" / "iov": per-round graphs
+                                           # (core/dynamics.py, Appendix D)
+    initial_cluster: int | None = None     # None -> random per Algorithm 1 line 4
+    eval_every: int = 10
+    bits_per_param: int = 32
+    qsgd_levels: int | None = None         # uplink compression (None = dense)
+    seed: int = 0
+    schedule: Schedule | None = None       # default: paper eta_k = 1/(K sqrt(k+1))
+
+
+def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
+    task.reset_loaders(config.seed)
+    assert config.local_steps % config.local_epochs == 0, "K must divide by E"
+    K, E = config.local_steps, config.local_epochs
+    interactions = K // E
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = np.array([sched_fn(k) for k in range(K)], dtype=np.float32)
+
+    dyn = None
+    if config.dynamic is not None:
+        from repro.core.dynamics import make_dynamic
+
+        dyn = make_dynamic(config.dynamic, task.num_clusters, seed=config.topology_seed)
+        topo = dyn(0)
+    else:
+        topo = make_topology(config.topology, task.num_clusters, seed=config.topology_seed)
+    rng = np.random.default_rng(config.seed)
+    m0 = (
+        int(rng.integers(task.num_clusters))
+        if config.initial_cluster is None
+        else config.initial_cluster
+    )
+    scheduler = FedCHSScheduler(topo, task.cluster_sizes, initial=m0)
+
+    params = task.init_params()
+    d = task.num_params()
+    ledger = CommLedger()
+    cluster_phase = _cluster_sgd_fn(task.model)
+    multi_local = _multi_client_local_sgd_fn(task.model)
+    key = jax.random.PRNGKey(config.seed + 1)
+
+    dense_bits = dense_message_bits(d, config.bits_per_param)
+    up_bits = (
+        qsgd_message_bits(d, config.qsgd_levels)
+        if config.qsgd_levels is not None
+        else dense_bits
+    )
+
+    rounds_log, acc_log, loss_log = [], [], []
+    m = scheduler.state.current
+    for t in range(config.rounds):
+        members = task.cluster_members[m]
+        gammas = jnp.asarray(task.cluster_weights(m))
+
+        if E == 1 and config.qsgd_levels is None:
+            # literal Eq. (5): gradient uplinks, gamma-weighted aggregate step
+            xs, ys = task.sample_cluster_batches(m, K)
+            params, loss = cluster_phase(params, xs, ys, gammas, jnp.asarray(lrs))
+        else:
+            # E>1 (Fig. 2) and/or QSGD channel: clients upload model deltas
+            loss_acc = 0.0
+            for j in range(interactions):
+                lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
+                xs, ys = task.sample_cluster_batches(m, E)
+                xs = jnp.swapaxes(xs, 0, 1)  # (n, E, B, ...)
+                ys = jnp.swapaxes(ys, 0, 1)
+                new_p, losses = multi_local(params, xs, ys, lr_slice)
+                deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
+                if config.qsgd_levels is not None:
+                    key, sub = jax.random.split(key)
+                    deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
+                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+                params = tree_add(params, agg)
+                loss_acc += float(jnp.mean(losses))
+            loss = loss_acc / interactions
+
+        # comm accounting for this round
+        ledger.record("es_to_client", dense_bits, interactions * len(members))
+        ledger.record("client_to_es", up_bits, interactions * len(members))
+
+        # next passing cluster (2-step rule) + one ES->ES model hop.
+        # Under a dynamic network the ES sees *this round's* visibility graph
+        # when choosing the next hop (Appendix-D scenarios).
+        if dyn is not None:
+            scheduler.set_topology(dyn(t))
+        m = scheduler.advance()
+        ledger.record("es_to_es", dense_bits, 1)
+        ledger.snapshot(t)
+
+        if t % config.eval_every == 0 or t == config.rounds - 1:
+            rounds_log.append(t)
+            acc_log.append(evaluate(task.model, params, task.dataset))
+            loss_log.append(float(loss))
+
+    return RunResult("fed_chs", rounds_log, acc_log, loss_log, ledger, params)

@@ -1,0 +1,75 @@
+"""Bit-exact communication accounting.
+
+The paper's §3.2 "Communication Overhead" paragraph and Fig. 2 count information
+bits for three hop types:
+  * client -> ES uplink (gradients)
+  * ES -> client broadcast (model)
+  * ES -> ES sequential pass (model)          [Fed-CHS only]
+  * ES -> PS / PS -> ES / client <-> PS hops  [baselines]
+
+Each model/gradient vector of d floats costs Q bits (Q = 32 d uncompressed; QSGD
+compression changes Q per message and the ledger records the compressed size).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+HOPS = (
+    "client_to_es",
+    "es_to_client",
+    "es_to_es",
+    "es_to_ps",
+    "ps_to_es",
+    "client_to_ps",
+    "ps_to_client",
+    "client_to_client",
+)
+
+
+@dataclasses.dataclass
+class CommLedger:
+    bits: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    messages: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    history: list = dataclasses.field(default_factory=list)  # (round, total_bits) snapshots
+
+    def record(self, hop: str, n_bits: int, count: int = 1) -> None:
+        assert hop in HOPS, f"unknown hop {hop}"
+        assert n_bits >= 0 and count >= 0
+        self.bits[hop] += n_bits * count
+        self.messages[hop] += count
+
+    def snapshot(self, round_idx: int) -> None:
+        self.history.append((round_idx, self.total_bits()))
+
+    def total_bits(self) -> int:
+        return sum(self.bits.values())
+
+    def total_megabytes(self) -> float:
+        return self.total_bits() / 8 / 1e6
+
+    def breakdown(self) -> dict[str, int]:
+        return {h: self.bits[h] for h in HOPS if self.bits[h]}
+
+    def bits_until(self, predicate_round: int) -> int:
+        """Total bits recorded at the first snapshot with round >= predicate_round."""
+        for r, b in self.history:
+            if r >= predicate_round:
+                return b
+        return self.total_bits()
+
+
+def dense_message_bits(num_params: int, bits_per_param: int = 32) -> int:
+    return num_params * bits_per_param
+
+
+def qsgd_message_bits(num_params: int, levels: int, block: int = 2048) -> int:
+    """QSGD-encoded message size (Alistarh et al. 2017), per-block norm + per-entry
+    sign + level index. levels = s quantization levels -> ceil(log2(s+1)) bits/entry,
+    one f32 norm per block, one sign bit per entry.
+    """
+    import math
+
+    level_bits = max(1, math.ceil(math.log2(levels + 1)))
+    n_blocks = math.ceil(num_params / block)
+    return num_params * (1 + level_bits) + n_blocks * 32

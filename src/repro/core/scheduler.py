@@ -1,0 +1,113 @@
+"""Next-passing-cluster selection — the paper's deterministic 2-step rule.
+
+Section 3.2: from the neighbors A(m(t)) of the currently active ES,
+  Step 1: C(t) = argmin_{m' in A(m(t))} c(m')   (least traversed so far)
+  Step 2: if |C(t)| > 1, pick argmax cluster dataset size D_{A,m'}.
+The chosen node's visit count is incremented (Algorithm 1 line 17).
+
+We also ship alternative schedulers to reproduce the baselines' walks:
+`RandomWalkScheduler` (uniform over neighbors — WRWGD's walk) and
+`RingScheduler` (fixed order — ring-topology SFL).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass
+class SchedulerState:
+    current: int
+    visit_counts: np.ndarray  # c(m), length M
+    step: int = 0
+
+
+class FedCHSScheduler:
+    """The paper's 2-step deterministic rule."""
+
+    def __init__(self, topology: Topology, cluster_sizes: list[int], initial: int = 0):
+        assert len(cluster_sizes) == topology.num_nodes
+        self.topology = topology
+        self.cluster_sizes = np.asarray(cluster_sizes)
+        counts = np.zeros(topology.num_nodes, dtype=np.int64)
+        counts[initial] = 1  # the starting ES has been visited once
+        self.state = SchedulerState(current=initial, visit_counts=counts)
+
+    def set_topology(self, topology: Topology) -> None:
+        """Swap the connectivity graph between rounds (dynamic networks —
+        core/dynamics.py). Visit counts and the current node persist: the
+        2-step rule itself is topology-free."""
+        assert topology.num_nodes == self.topology.num_nodes
+        self.topology = topology
+
+    def peek(self) -> int:
+        """Apply the 2-step rule without mutating state."""
+        st = self.state
+        nbrs = self.topology.neighbors(st.current)
+        counts = st.visit_counts[list(nbrs)]
+        least = counts.min()
+        candidates = [m for m, c in zip(nbrs, counts) if c == least]
+        if len(candidates) == 1:
+            return candidates[0]
+        sizes = self.cluster_sizes[candidates]
+        return candidates[int(np.argmax(sizes))]
+
+    def advance(self) -> int:
+        nxt = self.peek()
+        self.state.visit_counts[nxt] += 1
+        self.state.current = nxt
+        self.state.step += 1
+        return nxt
+
+    def schedule(self, rounds: int) -> list[int]:
+        """The full deterministic visiting order for `rounds` rounds (m(0)..m(T-1)).
+
+        Does not mutate `self`; replays on a copy.
+        """
+        saved = SchedulerState(self.state.current, self.state.visit_counts.copy(), self.state.step)
+        order = [self.state.current]
+        for _ in range(rounds - 1):
+            order.append(self.advance())
+        self.state = saved
+        return order
+
+
+class RandomWalkScheduler:
+    """Uniform random neighbor — models WRWGD-style random walks."""
+
+    def __init__(self, topology: Topology, initial: int = 0, seed: int = 0):
+        self.topology = topology
+        self.rng = np.random.default_rng(seed)
+        self.state = SchedulerState(
+            current=initial, visit_counts=np.zeros(topology.num_nodes, dtype=np.int64)
+        )
+        self.state.visit_counts[initial] = 1
+
+    def advance(self) -> int:
+        nbrs = self.topology.neighbors(self.state.current)
+        nxt = int(self.rng.choice(nbrs))
+        self.state.visit_counts[nxt] += 1
+        self.state.current = nxt
+        self.state.step += 1
+        return nxt
+
+
+class RingScheduler:
+    """Fixed-order traversal (requires / induces a ring)."""
+
+    def __init__(self, num_nodes: int, initial: int = 0):
+        self.num_nodes = num_nodes
+        self.state = SchedulerState(
+            current=initial, visit_counts=np.zeros(num_nodes, dtype=np.int64)
+        )
+        self.state.visit_counts[initial] = 1
+
+    def advance(self) -> int:
+        nxt = (self.state.current + 1) % self.num_nodes
+        self.state.visit_counts[nxt] += 1
+        self.state.current = nxt
+        self.state.step += 1
+        return nxt

@@ -1,0 +1,205 @@
+"""Shared FL-simulation machinery: task bundling, jitted local SGD, evaluation.
+
+Every algorithm (Fed-CHS and the three baselines) consumes an `FLTask` and
+produces a `RunResult`; the jitted inner loops are shared so accuracy
+comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ledger import CommLedger
+from repro.data.loader import ClientLoader, batch_iterator
+from repro.data.partition import ClientData
+from repro.data.synthetic import Dataset
+from repro.models.classifier import Classifier
+from repro.utils import tree_num_params
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class FLTask:
+    """Everything an FL algorithm needs to run one experiment."""
+
+    model: Classifier
+    dataset: Dataset
+    clients: list[ClientData]
+    cluster_members: list[list[int]]  # cluster m -> client ids
+    batch_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self.loaders = [
+            ClientLoader(self.dataset, c, self.batch_size, seed=self.seed) for c in self.clients
+        ]
+        self._loader_seed = self.seed
+        self.client_sizes = np.array([c.size for c in self.clients], dtype=np.float64)
+        self.cluster_sizes = [
+            int(sum(self.client_sizes[i] for i in members)) for members in self.cluster_members
+        ]
+
+    def reset_loaders(self, seed: int) -> None:
+        """Reseed the per-client samplers — every algorithm run calls this so
+        same-seed runs are deterministic and runs don't share rng state."""
+        self.loaders = [
+            ClientLoader(self.dataset, c, self.batch_size, seed=seed) for c in self.clients
+        ]
+        self._loader_seed = seed
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)
+
+    @property
+    def num_clusters(self) -> int:
+        return len(self.cluster_members)
+
+    def cluster_weights(self, m: int) -> np.ndarray:
+        """gamma_n^m = D_n / D_{A,m} for clients in cluster m."""
+        sizes = self.client_sizes[self.cluster_members[m]]
+        return (sizes / sizes.sum()).astype(np.float32)
+
+    def global_weights(self) -> np.ndarray:
+        """gamma_n = D_n / D_A over all clients (FedAvg weighting)."""
+        return (self.client_sizes / self.client_sizes.sum()).astype(np.float32)
+
+    def sample_cluster_batches(self, m: int, steps: int):
+        """Stacked batches for every client of cluster m:
+        xs: (steps, n_clients_m, B, ...), ys: (steps, n_clients_m, B)."""
+        members = self.cluster_members[m]
+        xs, ys = [], []
+        for _ in range(steps):
+            bx, by = zip(*(self.loaders[i].next_batch() for i in members))
+            xs.append(np.stack(bx))
+            ys.append(np.stack(by))
+        return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+    def sample_client_batches(self, client: int, steps: int):
+        bx, by = zip(*(self.loaders[client].next_batch() for _ in range(steps)))
+        return jnp.asarray(np.stack(bx)), jnp.asarray(np.stack(by))
+
+    def init_params(self) -> PyTree:
+        return self.model.init(jax.random.PRNGKey(self.seed))
+
+    def num_params(self) -> int:
+        return tree_num_params(self.init_params())
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    rounds: list[int]
+    test_acc: list[float]
+    train_loss: list[float]
+    ledger: CommLedger
+    final_params: PyTree
+
+    def best_acc(self) -> float:
+        return max(self.test_acc) if self.test_acc else 0.0
+
+    def final_acc(self) -> float:
+        return self.test_acc[-1] if self.test_acc else 0.0
+
+    def rounds_to_accuracy(self, gamma: float) -> int | None:
+        for r, a in zip(self.rounds, self.test_acc):
+            if a >= gamma:
+                return r
+        return None
+
+    def bits_to_accuracy(self, gamma: float) -> int | None:
+        r = self.rounds_to_accuracy(gamma)
+        return None if r is None else self.ledger.bits_until(r)
+
+
+# --------------------------------------------------------------------------
+# jitted building blocks, cached per (model, shapes)
+# --------------------------------------------------------------------------
+
+
+@functools.cache
+def _cluster_sgd_fn(model: Classifier):
+    """One Eq.(5) in-cluster phase: scan over K steps of
+    w <- w - eta_k * sum_n gamma_n grad_n(w, xi_{n,k}).
+    xs: (K, n, B, ...), ys: (K, n, B), gammas: (n,), lrs: (K,).
+    Returns (params, mean loss over steps/clients)."""
+
+    grad_fn = jax.vmap(jax.value_and_grad(model.loss), in_axes=(None, 0, 0))
+
+    def phase(params, xs, ys, gammas, lrs):
+        def step(p, inp):
+            x_k, y_k, lr_k = inp
+            losses, grads = grad_fn(p, x_k, y_k)  # per-client
+            agg = jax.tree.map(lambda g: jnp.einsum("n,n...->...", gammas, g), grads)
+            p = jax.tree.map(lambda w, g: w - lr_k * g, p, agg)
+            return p, jnp.dot(gammas, losses)
+
+        params, losses = jax.lax.scan(step, params, (xs, ys, lrs))
+        return params, jnp.mean(losses)
+
+    return jax.jit(phase)
+
+
+@functools.cache
+def _local_sgd_fn(model: Classifier):
+    """E plain local SGD steps for ONE client: xs (E, B, ...), ys (E, B), lrs (E,)."""
+
+    grad_fn = jax.value_and_grad(model.loss)
+
+    def run(params, xs, ys, lrs):
+        def step(p, inp):
+            x, y, lr = inp
+            loss, g = grad_fn(p, x, y)
+            return jax.tree.map(lambda w, gi: w - lr * gi, p, g), loss
+
+        params, losses = jax.lax.scan(step, params, (xs, ys, lrs))
+        return params, jnp.mean(losses)
+
+    return jax.jit(run)
+
+
+@functools.cache
+def _multi_client_local_sgd_fn(model: Classifier):
+    """vmap of _local_sgd_fn over a leading client axis (same E, B)."""
+
+    grad_fn = jax.value_and_grad(model.loss)
+
+    def run_one(params, xs, ys, lrs):
+        def step(p, inp):
+            x, y, lr = inp
+            loss, g = grad_fn(p, x, y)
+            return jax.tree.map(lambda w, gi: w - lr * gi, p, g), loss
+
+        params, losses = jax.lax.scan(step, params, (xs, ys, lrs))
+        return params, jnp.mean(losses)
+
+    return jax.jit(jax.vmap(run_one, in_axes=(None, 0, 0, None)))
+
+
+@functools.cache
+def _eval_fn(model: Classifier):
+    def correct(params, x, y):
+        return jnp.sum((jnp.argmax(model.apply(params, x), axis=-1) == y).astype(jnp.int32))
+
+    return jax.jit(correct)
+
+
+def evaluate(model: Classifier, params: PyTree, dataset: Dataset, batch: int = 512) -> float:
+    fn = _eval_fn(model)
+    n_correct, n = 0, 0
+    for x, y in batch_iterator(dataset.test_x, dataset.test_y, batch):
+        n_correct += int(fn(params, jnp.asarray(x), jnp.asarray(y)))
+        n += len(y)
+    return n_correct / max(n, 1)
+
+
+def weighted_tree_sum(trees: list[PyTree], weights: np.ndarray) -> PyTree:
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    w = jnp.asarray(weights, jnp.float32)
+    return jax.tree.map(lambda x: jnp.einsum("n,n...->...", w, x), stacked)

@@ -1,0 +1,16 @@
+from repro.data.synthetic import make_dataset, DATASETS, Dataset
+from repro.data.partition import dirichlet_partition, assign_clusters, ClientData
+from repro.data.loader import ClientLoader, batch_iterator
+from repro.data.tokens import synthetic_lm_batch
+
+__all__ = [
+    "make_dataset",
+    "DATASETS",
+    "Dataset",
+    "dirichlet_partition",
+    "assign_clusters",
+    "ClientData",
+    "ClientLoader",
+    "batch_iterator",
+    "synthetic_lm_batch",
+]

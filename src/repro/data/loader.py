@@ -1,0 +1,37 @@
+"""Per-client mini-batch sampling (ξ_{n,k} in Eq. 5)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.partition import ClientData
+from repro.data.synthetic import Dataset
+
+
+class ClientLoader:
+    """Stateful sampler of random mini-batches ξ ⊆ D_n for one client."""
+
+    def __init__(self, dataset: Dataset, client: ClientData, batch_size: int, *, seed: int = 0):
+        assert client.size > 0, f"client {client.client_id} has no data"
+        self.dataset = dataset
+        self.client = client
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed + 7919 * client.client_id)
+
+    def next_batch(self) -> tuple[np.ndarray, np.ndarray]:
+        # Every batch is exactly batch_size so cluster batches stack for the
+        # vmapped Eq. (5) aggregation; clients whose Dirichlet shard is
+        # smaller than a batch sample with replacement (still a valid random
+        # xi_{n,k} subset draw).
+        replace = self.client.size < self.batch_size
+        idx = self.rng.choice(self.client.indices, size=self.batch_size, replace=replace)
+        return self.dataset.train_x[idx], self.dataset.train_y[idx]
+
+    @property
+    def num_samples(self) -> int:
+        return self.client.size
+
+
+def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int):
+    """Deterministic full pass (used for test-set evaluation)."""
+    for i in range(0, len(x), batch_size):
+        yield x[i : i + batch_size], y[i : i + batch_size]

@@ -1,0 +1,97 @@
+"""Pallas TPU flash-attention kernel (q-blocked causal/windowed GQA).
+
+Tiling: grid = (B * H, ceil(T / BLOCK_Q)). Each program holds one BLOCK_Q x hd
+query tile in VMEM plus its kv-head's full (S, hd) K and V slabs (VMEM budget
+= 2*S*hd*4 bytes; S<=2048 tiles at hd=128 are ~2 MiB — larger S is handled by
+the pure-JAX online-softmax path in models/attention.py, which this kernel
+mirrors numerically). The MXU sees (BLOCK_Q, hd) @ (hd, S) and
+(BLOCK_Q, S) @ (S, hd) matmuls — both lane-aligned for hd, S multiples of 128.
+
+GQA: query head h reads kv head h // (H // Hkv) via the K/V BlockSpec index
+maps — no head replication in memory.
+
+Used as the TPU fast path for short-S attention (local/sliding-window blocks);
+validated in interpret mode against ref.py / models.attention oracles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+                  window: int | None, seq_len: int, block_q: int):
+    iq = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale      # (bq, hd)
+    k = k_ref[...].astype(jnp.float32)              # (S, hd)
+    v = v_ref[...].astype(jnp.float32)              # (S, hd)
+    s = q @ k.T                                     # (bq, S)
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_len                          # padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    o_ref[...] = ((p @ v) / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q")
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q):
+    """q (B,T,H,hd); k/v (B,S,Hkv,hd) -> (B,T,H,hd). S padded to 128 inside."""
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    pad_t = (-T) % block_q
+    pad_s = (-S) % 128
+    qp = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0))) if pad_t else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0))) if pad_s else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0))) if pad_s else v
+    Tp, Sp = T + pad_t, S + pad_s
+
+    qh = qp.transpose(0, 2, 1, 3).reshape(B * H, Tp, hd)
+    kh = kp.transpose(0, 2, 1, 3).reshape(B * Hkv, Sp, hd)
+    vh = vp.transpose(0, 2, 1, 3).reshape(B * Hkv, Sp, hd)
+
+    grid = (B * H, Tp // block_q)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        seq_len=S, block_q=block_q,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda bh, iq: (bh, iq, 0)),
+            pl.BlockSpec((None, Sp, hd), lambda bh, iq, g=g: (bh // g, 0, 0)),
+            pl.BlockSpec((None, Sp, hd), lambda bh, iq, g=g: (bh // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda bh, iq: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tp, hd), q.dtype),
+        interpret=_interpret(),
+    )(qh, kh, vh)
+
+    out = out.reshape(B, H, Tp, hd).transpose(0, 2, 1, 3)
+    return out[:, :T]

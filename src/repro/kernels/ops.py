@@ -1,0 +1,57 @@
+"""jit'd public wrappers around the Pallas kernels: flat-vector / pytree QSGD.
+
+These handle padding to whole tiles, flattening, and pytree mapping; the
+kernels themselves (qsgd.py) only see dense (n_blocks, block) tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsgd import ROWS_PER_TILE, qsgd_dequantize_blocks, qsgd_quantize_blocks
+
+PyTree = Any
+DEFAULT_BLOCK = 1024
+
+
+def _pad_to_blocks(v: jnp.ndarray, block: int, rows_per_tile: int):
+    n = v.size
+    per_tile = block * rows_per_tile
+    padded = ((n + per_tile - 1) // per_tile) * per_tile
+    flat = jnp.zeros((padded,), jnp.float32).at[:n].set(v.reshape(-1).astype(jnp.float32))
+    return flat.reshape(-1, block), n
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block"))
+def qsgd_quantize(v: jnp.ndarray, key: jax.Array, *, s: int = 16, block: int = DEFAULT_BLOCK):
+    """Quantize an arbitrary-shape f32 array. Returns (q, norms, orig_size)."""
+    blocks, n = _pad_to_blocks(v, block, ROWS_PER_TILE)
+    u = jax.random.uniform(key, blocks.shape, jnp.float32)
+    q, norms = qsgd_quantize_blocks(blocks, u, s=s)
+    return q, norms, n
+
+
+@functools.partial(jax.jit, static_argnames=("s", "shape", "block"))
+def qsgd_dequantize(q, norms, *, s: int = 16, shape: tuple = (), block: int = DEFAULT_BLOCK):
+    import numpy as np
+
+    flat = qsgd_dequantize_blocks(q, norms, s=s).reshape(-1)
+    n = int(np.prod(shape)) if shape else flat.size
+    return flat[:n].reshape(shape)
+
+
+def qsgd_roundtrip(v: jnp.ndarray, key: jax.Array, *, s: int = 16, block: int = DEFAULT_BLOCK):
+    """quantize -> dequantize (the lossy channel a message actually traverses)."""
+    q, norms, _ = qsgd_quantize(v, key, s=s, block=block)
+    return qsgd_dequantize(q, norms, s=s, shape=tuple(v.shape), block=block)
+
+
+def qsgd_compress_tree(tree: PyTree, key: jax.Array, *, s: int = 16) -> PyTree:
+    """Apply the QSGD channel leaf-wise to a gradient pytree."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [qsgd_roundtrip(leaf, k, s=s).astype(leaf.dtype) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)

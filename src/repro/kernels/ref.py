@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels in this package.
+
+QSGD (Alistarh et al., 2017) stochastic quantization, per-block:
+  given a block v (size B) with L2 norm n = ||v||_2 and s levels,
+  each entry i is encoded as sign(v_i) * q_i with
+    p_i = |v_i| / n * s            (in [0, s])
+    q_i = floor(p_i) + Bernoulli(p_i - floor(p_i))   (stochastic rounding)
+  and decoded as  sign * q_i / s * n.
+The stochastic rounding is driven by an explicit uniform tensor `u` so the
+kernel and the oracle are bit-identical (and the kernel needs no on-chip RNG).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qsgd_quantize_blocks_ref(v: jnp.ndarray, u: jnp.ndarray, s: int):
+    """v, u: (n_blocks, block) f32, u in [0,1). Returns (q int8 signed, norms f32).
+
+    q carries the sign: q in [-s, s]. norms: (n_blocks,).
+    """
+    assert v.ndim == 2 and v.shape == u.shape
+    norms = jnp.sqrt(jnp.sum(v * v, axis=1))  # (n_blocks,)
+    safe = jnp.where(norms > 0, norms, 1.0)
+    p = jnp.abs(v) / safe[:, None] * s
+    q = jnp.floor(p + u)  # floor(p) + bernoulli(frac(p))  via shared uniform draw
+    q = jnp.clip(q, 0, s)
+    q = jnp.where(norms[:, None] > 0, q, 0.0)
+    return (jnp.sign(v) * q).astype(jnp.int8), norms.astype(jnp.float32)
+
+
+def qsgd_dequantize_blocks_ref(q: jnp.ndarray, norms: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Inverse map: (n_blocks, block) int8, (n_blocks,) f32 -> f32 blocks."""
+    return q.astype(jnp.float32) * (norms[:, None] / s)
+
+
+def weighted_aggregate_ref(grads: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (5) inner aggregation oracle: grads (n_clients, d), weights (n_clients,)
+    -> (d,) gamma-weighted sum."""
+    return jnp.einsum("n,nd->d", weights, grads)

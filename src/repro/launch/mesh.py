@@ -1,0 +1,41 @@
+"""Production meshes (TPU v5e).
+
+Functions, not module-level constants: importing this module never touches
+jax device state. The dry-run entry point sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run via "
+            "launch/dryrun.py which sets xla_force_host_platform_device_count"
+        )
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 1, model: int = 1, pod: int | None = None):
+    """Tiny mesh over however many real devices exist (tests)."""
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+POD_CHIPS = 256
+MULTI_POD_CHIPS = 512

@@ -1,0 +1,135 @@
+"""Production serving launcher (decode shapes).
+
+Two modes, mirroring launch/train.py:
+
+* default (lower-only): build the full assigned config and
+  ``.lower().compile()`` the serve_step (ONE token vs a seq_len KV/state
+  cache) on the production mesh — the deployment path for decode_32k /
+  long_500k.
+
+* ``--execute``: a real continuous-batching serving loop at reduced (smoke)
+  scale on CPU: a request queue, fixed batch slots, per-slot prefill
+  (teacher-forced cache fill), greedy decode, and slot recycling when a
+  request finishes — the serving analogue of the train driver.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-32b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --execute --requests 12
+"""
+from __future__ import annotations
+
+import os
+
+if "XLA_FLAGS" not in os.environ:  # before any jax import
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k", choices=["decode_32k", "long_500k"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--execute", action="store_true")
+    ap.add_argument("--requests", type=int, default=8, help="execute: total requests")
+    ap.add_argument("--slots", type=int, default=4, help="execute: concurrent batch slots")
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+    if args.execute:
+        _execute(args)
+    else:
+        _lower(args)
+
+
+def _lower(args) -> None:
+    from repro.configs.registry import get_config, long_context_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_lowering, lower_spec
+
+    cfg = (long_context_config(args.arch) if args.shape == "long_500k"
+           else get_config(args.arch))
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    spec = build_lowering(cfg, args.shape, mesh)
+    t0 = time.time()
+    compiled = lower_spec(spec, mesh).compile()
+    mem = compiled.memory_analysis()
+    print(f"{spec.name} on {'2x16x16' if args.multi_pod else '16x16'} mesh: "
+          f"compiled in {time.time() - t0:.1f}s")
+    print(f"  bytes/device: "
+          f"{(mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes) / 2**30:.2f} GiB")
+
+
+def _execute(args) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import smoke_config
+    from repro.data.tokens import synthetic_lm_batch
+    from repro.models import transformer as tf
+
+    cfg = smoke_config(args.arch)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    S = args.slots
+    capacity = args.prompt_len + args.max_new
+    enc_len = cfg.num_audio_frames if cfg.is_encoder_decoder else 0
+    caches = tf.init_caches(cfg, S, capacity, enc_len=enc_len)
+    step = jax.jit(lambda p, c, t: tf.decode_step(cfg, p, c, t))
+
+    rng = np.random.default_rng(0)
+    pending = list(range(args.requests))  # request ids
+    prompts = {
+        r: synthetic_lm_batch(cfg.vocab_size, 1, args.prompt_len, seed=r)["tokens"][0]
+        for r in pending
+    }
+    # slot state: request id (or -1), tokens generated, next input token
+    slot_req = [-1] * S
+    slot_gen = [0] * S
+    cur_tok = np.zeros((S, 1), np.int32)
+    done: dict[int, list[int]] = {}
+    t0 = time.time()
+    steps = 0
+
+    def admit(s: int) -> None:
+        """Prefill request into slot s by teacher-forced ingestion."""
+        nonlocal caches
+        r = pending.pop(0)
+        slot_req[s], slot_gen[s] = r, 0
+        for t in range(args.prompt_len):
+            tok = np.array(cur_tok)
+            tok[s, 0] = prompts[r][t]
+            logits, caches = step(params, caches, jnp.asarray(tok))
+        cur_tok[s, 0] = int(jnp.argmax(logits[s]))
+        done[r] = [int(cur_tok[s, 0])]
+
+    while pending or any(r >= 0 for r in slot_req):
+        for s in range(S):
+            if slot_req[s] < 0 and pending:
+                admit(s)
+        logits, caches = step(params, caches, jnp.asarray(cur_tok))
+        steps += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for s in range(S):
+            r = slot_req[s]
+            if r < 0:
+                continue
+            slot_gen[s] += 1
+            done[r].append(int(nxt[s]))
+            cur_tok[s, 0] = nxt[s]
+            if slot_gen[s] >= args.max_new - 1:
+                slot_req[s] = -1  # retire; slot is re-admitted next iteration
+
+    dt = time.time() - t0
+    total = sum(len(v) for v in done.values())
+    print(f"arch={cfg.name} (reduced) | {args.requests} requests over {S} slots | "
+          f"{total} tokens in {dt:.1f}s ({total / max(dt, 1e-9):.1f} tok/s, "
+          f"{steps} batched decode steps)")
+    for r in list(done)[:2]:
+        print(f"request {r}: {done[r][:12]} ...")
+
+
+if __name__ == "__main__":
+    main()

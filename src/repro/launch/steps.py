@@ -1,0 +1,293 @@
+"""Lowering units for the dry-run and the production launcher.
+
+Three step kinds per architecture:
+
+* ``train`` — one Fed-CHS round (the paper's technique, TPU-native):
+  the `pod` mesh axis carries one *chain* (= active-model copy) per pod;
+  each pod is one cluster (ES + its clients = the pod's data shards).
+  Eq. (5)'s within-cluster aggregation is the gradient all-reduce over the
+  `data` axis only; the sequential ES->ES pass is a roll over the chain dim,
+  which XLA lowers to a pod-axis collective-permute. With `variant="hfl"`
+  the roll is replaced by the star-shaped chain-mean (all-reduce over `pod`)
+  — the conventional HFL/FedAvg baseline the paper compares against.
+  Running pods concurrently on staggered chains is our throughput
+  pipelining of the (single-active-cluster) paper protocol; each chain's
+  visit order is exactly the 2-step scheduler's (ring for 2 pods).
+
+* ``prefill`` — forward over the full prompt (logits; cache extraction is a
+  layout epilogue, see DESIGN.md).
+
+* ``decode`` — serve_step: ONE new token against a seq_len KV/state cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.sharding.specs import batch_pspec, cache_pspecs, named_shardings, param_pspecs
+
+PyTree = Any
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, mode="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, mode="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, mode="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, mode="decode"),
+}
+
+
+def num_chains(mesh: Mesh) -> int:
+    return mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+
+
+def _vocab_axis(cfg: ArchConfig, mesh: Mesh):
+    n_model = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    return "model" if n_model > 1 and cfg.vocab_size % n_model == 0 else None
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+
+def _token_batch_struct(cfg: ArchConfig, batch: int, seq: int, *, chain: int | None,
+                        dtype) -> dict:
+    lead = (chain,) if chain else ()
+    toks = jax.ShapeDtypeStruct((*lead, batch, seq), jnp.int32)
+    out = {"tokens": toks, "labels": toks}
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (*lead, batch, cfg.num_audio_frames, cfg.d_model), dtype
+        )
+    if cfg.num_patches:
+        out["patches"] = jax.ShapeDtypeStruct((*lead, batch, cfg.num_patches, 1024), dtype)
+    return out
+
+
+def abstract_params(cfg: ArchConfig, *, chains: int = 0) -> PyTree:
+    p = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    if chains:
+        p = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((chains, *l.shape), l.dtype), p
+        )
+    return p
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, capacity: int) -> PyTree:
+    enc_len = cfg.num_audio_frames if cfg.is_encoder_decoder else 0
+    return jax.eval_shape(
+        lambda: tf.init_caches(cfg, batch, capacity, enc_len=enc_len)
+    )
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+
+def make_train_round(cfg: ArchConfig, *, variant: str = "fedchs", remat: bool = True,
+                     remat_policy=None, spmd_axis: str | None = None):
+    """(stacked_params (C, ...), batch {tokens (C, B/C, T), ...}, lr) -> (params, loss).
+
+    `spmd_axis` ("pod" on multi-pod meshes) is passed to jax.vmap as
+    spmd_axis_name so shard_map interiors inside the per-chain loss see the
+    chain dim as pod-sharded (the per-chain psums then stay within the
+    chain's own pod — exactly Eq. (5)'s within-cluster aggregation)."""
+
+    def chain_loss(params, batch):
+        return tf.loss_fn(cfg, params, batch, remat=remat, remat_policy=remat_policy)
+
+    def round_fn(stacked_params, batch, lr):
+        C = jax.tree.leaves(stacked_params)[0].shape[0]
+        if C == 1:
+            # single chain: skip the vmap so model interiors may use
+            # shard_map (vmap-of-shard_map is unsupported); the sequential
+            # pass / star mean are identities over a size-1 chain dim.
+            sq = jax.tree.map(lambda x: x[0], stacked_params)
+            bq = jax.tree.map(lambda x: x[0], batch)
+            loss, grads = jax.value_and_grad(chain_loss)(sq, bq)
+            new = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), sq, grads)
+            return jax.tree.map(lambda x: x[None], new), loss
+        losses, grads = jax.vmap(jax.value_and_grad(chain_loss),
+                                 spmd_axis_name=spmd_axis)(stacked_params, batch)
+        new = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), stacked_params, grads)
+        if variant == "fedchs":
+            # sequential ES->ES pass: chain c moves to pod (c+1) % C.
+            # (2-pod ring == the 2-step scheduler's order; lowers to
+            # collective-permute over the pod axis.)
+            passed = jax.tree.map(lambda x: jnp.roll(x, 1, axis=0), new)
+        elif variant == "hfl":
+            # star aggregation at the PS: chain-mean, broadcast back.
+            passed = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    jnp.mean(x, axis=0, keepdims=True), x.shape
+                ).astype(x.dtype),
+                new,
+            )
+        else:
+            raise ValueError(variant)
+        return passed, jnp.mean(losses)
+
+    return round_fn
+
+
+def make_prefill_step(cfg: ArchConfig, *, last_only: bool = False):
+    """last_only (the --opt serving path) slices the hidden state before the
+    LM head instead of materialising (B, T, V) logits and slicing after —
+    §Perf pair 4."""
+
+    def prefill_fn(params, batch):
+        logits, aux = tf.forward(cfg, params, batch, last_only=last_only)
+        return logits[:, -1]
+
+    return prefill_fn
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_fn(params, caches, token):
+        return tf.decode_step(cfg, params, caches, token)
+
+    return decode_fn
+
+
+# --------------------------------------------------------------------------
+# dry-run assembly: (fn, abstract args, in/out shardings)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    name: str
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()  # production buffers (params / caches) are donated
+
+
+def apply_optimizations(cfg: ArchConfig, mesh: Mesh) -> ArchConfig:
+    """Beyond-paper-baseline performance config (EXPERIMENTS.md §Perf):
+    group-limited MoE routing aligned to the data shards; the MoE interior
+    is a shard_map with manual collectives (models/moe_shardmap.py). On
+    multi-pod meshes the chain vmap passes spmd_axis_name="pod" so the
+    interior's psums stay within each chain's pod."""
+    updates: dict = {}
+    if cfg.is_moe and "data" in mesh.axis_names:
+        updates["moe_groups"] = int(mesh.shape["data"])
+        updates["moe_shardmap"] = True  # multi-pod: vmap(spmd_axis_name="pod")
+    return dataclasses.replace(cfg, **updates) if updates else cfg
+
+
+DP_PARAM_THRESHOLD = 1_000_000_000
+
+
+def _use_pure_dp(cfg: ArchConfig, per_chain_batch: int, mesh: Mesh) -> bool:
+    """Sub-1B models are over-sharded by 16-way TP (tiny matmul shards +
+    per-layer activation all-reduces dominate). Replicate params and shard
+    the batch over (data, model) instead — EXPERIMENTS.md §Perf pair 2."""
+    chips = 1
+    for a in ("data", "model"):
+        if a in mesh.axis_names:
+            chips *= mesh.shape[a]
+    return cfg.param_count() < DP_PARAM_THRESHOLD and per_chain_batch % chips == 0
+
+
+def build_lowering(cfg: ArchConfig, shape_name: str, mesh: Mesh, *,
+                   variant: str = "fedchs", optimized: bool = False) -> LoweringSpec:
+    if optimized:
+        cfg = apply_optimizations(cfg, mesh)
+    info = SHAPES[shape_name]
+    seq, gbatch, mode = info["seq_len"], info["global_batch"], info["mode"]
+    dtype = jnp.dtype(cfg.dtype)
+
+    if mode == "train":
+        C = num_chains(mesh)
+        assert gbatch % C == 0
+        params = abstract_params(cfg, chains=C)
+        per_chain = gbatch // C
+        pure_dp = optimized and _use_pure_dp(cfg, per_chain, mesh)
+        pspecs = param_pspecs(jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0))), num_experts=cfg.num_experts, mesh=mesh, expert_axis=cfg.expert_axis)
+        if pure_dp:
+            pspecs = jax.tree.map(
+                lambda s: P(*([None] * len(s))), pspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        chain_axis = "pod" if C > 1 else None
+        pspecs = jax.tree.map(lambda s: P(chain_axis, *s), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        batch = _token_batch_struct(cfg, gbatch // C, seq, chain=C, dtype=dtype)
+        if pure_dp:
+            data_axis = ("data", "model")
+        else:
+            data_axis = "data" if per_chain % mesh.shape["data"] == 0 else None
+        bspec = {
+            k: P(chain_axis, data_axis, *([None] * (v.ndim - 2)))
+            for k, v in batch.items()
+        }
+        remat_policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable if optimized else None
+        )
+        spmd_axis = ("pod" if (optimized and cfg.moe_shardmap and C > 1
+                              and "pod" in mesh.axis_names) else None)
+        fn = make_train_round(cfg, variant=variant, remat_policy=remat_policy,
+                              spmd_axis=spmd_axis)
+        args = (params, batch, jax.ShapeDtypeStruct((), jnp.float32))
+        in_sh = (
+            named_shardings(mesh, pspecs),
+            named_shardings(mesh, bspec),
+            NamedSharding(mesh, P()),
+        )
+        out_sh = (named_shardings(mesh, pspecs), NamedSharding(mesh, P()))
+        return LoweringSpec(f"{cfg.name}:{shape_name}:{variant}", fn, args, in_sh, out_sh,
+                            donate_argnums=(0,))
+
+    params = abstract_params(cfg)
+    pspecs = param_pspecs(params, num_experts=cfg.num_experts, mesh=mesh, expert_axis=cfg.expert_axis)
+
+    if mode == "prefill":
+        batch = _token_batch_struct(cfg, gbatch, seq, chain=None, dtype=dtype)
+        bspec = {k: P(batch_pspec(gbatch, mesh, rank=1)[0], *([None] * (v.ndim - 1)))
+                 for k, v in batch.items()}
+        fn = make_prefill_step(cfg)
+        args = (params, batch)
+        in_sh = (named_shardings(mesh, pspecs), named_shardings(mesh, bspec))
+        logits_spec = NamedSharding(
+            mesh, P(batch_pspec(gbatch, mesh, rank=1)[0], _vocab_axis(cfg, mesh))
+        )
+        return LoweringSpec(f"{cfg.name}:{shape_name}", fn, args, in_sh, logits_spec)
+
+    # decode
+    caches = abstract_caches(cfg, gbatch, seq)
+    cspecs = cache_pspecs(caches, gbatch, mesh)
+    token = jax.ShapeDtypeStruct((gbatch, 1), jnp.int32)
+    tspec = P(batch_pspec(gbatch, mesh, rank=1)[0], None)
+    fn = make_decode_step(cfg)
+    args = (params, caches, token)
+    in_sh = (
+        named_shardings(mesh, pspecs),
+        named_shardings(mesh, cspecs),
+        NamedSharding(mesh, tspec),
+    )
+    out_sh = (
+        NamedSharding(mesh, P(batch_pspec(gbatch, mesh, rank=1)[0], _vocab_axis(cfg, mesh))),
+        named_shardings(mesh, cspecs),
+    )
+    return LoweringSpec(f"{cfg.name}:{shape_name}", fn, args, in_sh, out_sh,
+                        donate_argnums=(1,))
+
+
+def lower_spec(spec: LoweringSpec, mesh: Mesh):
+    from repro.sharding.ctx import model_mesh
+
+    with mesh, model_mesh(mesh):
+        jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                         out_shardings=spec.out_shardings,
+                         donate_argnums=spec.donate_argnums)
+        return jitted.lower(*spec.args)

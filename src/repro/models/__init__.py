@@ -1,0 +1,3 @@
+from repro.models.classifier import Classifier, make_classifier
+
+__all__ = ["Classifier", "make_classifier"]

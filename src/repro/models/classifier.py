@@ -1,0 +1,140 @@
+"""Paper's experiment models (Appendix A): MLP and LeNet, pure JAX.
+
+* MLP — two hidden FC layers: 200/200 (MNIST), 256/512 (CIFAR-10/100), ReLU.
+  The paper treats its loss as (approximately) convex.
+* LeNet — two conv+pool stages then two FC layers:
+  MNIST: conv 64@5x5 -> pool 2x2 -> conv 256@5x5 -> pool -> FC 512 -> FC 128.
+  CIFAR: conv 64@5x5 -> pool -> conv 64@5x5 -> pool -> FC 384 -> FC 192.
+Both expose the same functional interface:
+  params = init(key); logits = apply(params, x); loss/grad helpers below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Classifier:
+    name: str
+    init: Callable[[jax.Array], dict]
+    apply: Callable[[dict, jax.Array], jax.Array]  # (params, x NHWC) -> logits
+    num_classes: int
+
+    def loss(self, params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+        logits = self.apply(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1))
+
+    def loss_and_grad(self, params: dict, x: jax.Array, y: jax.Array):
+        return jax.value_and_grad(self.loss)(params, x, y)
+
+    def accuracy(self, params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+        return jnp.mean((jnp.argmax(self.apply(params, x), axis=-1) == y).astype(jnp.float32))
+
+
+def _dense_init(key, n_in, n_out, scale=None):
+    scale = scale if scale is not None else float(np.sqrt(2.0 / n_in))
+    kw, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(kw, (n_in, n_out), jnp.float32) * scale,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _conv_init(key, h, w, c_in, c_out):
+    fan_in = h * w * c_in
+    kw, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(kw, (h, w, c_in, c_out), jnp.float32) * np.sqrt(2.0 / fan_in),
+        "b": jnp.zeros((c_out,), jnp.float32),
+    }
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, window_dimensions=(1, 2, 2, 1), window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def _mlp_dims(dataset: str) -> tuple[int, int]:
+    return (200, 200) if dataset == "mnist" else (256, 512)
+
+
+def make_mlp(dataset: str, image_shape: tuple[int, int, int], num_classes: int) -> Classifier:
+    h1, h2 = _mlp_dims(dataset)
+    d_in = int(np.prod(image_shape))
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "fc1": _dense_init(k1, d_in, h1),
+            "fc2": _dense_init(k2, h1, h2),
+            "out": _dense_init(k3, h2, num_classes),
+        }
+
+    def apply(params, x):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        return x @ params["out"]["w"] + params["out"]["b"]
+
+    return Classifier(f"mlp-{dataset}", init, apply, num_classes)
+
+
+def make_lenet(dataset: str, image_shape: tuple[int, int, int], num_classes: int,
+               *, width_scale: float = 1.0) -> Classifier:
+    """width_scale < 1 shrinks channel/FC widths uniformly (benchmark quick
+    mode on CPU — conv FLOPs scale with c1*c2); 1.0 is the paper's Appendix-A
+    LeNet exactly."""
+    h, w, c = image_shape
+    if dataset == "mnist":
+        c1, c2, f1, f2 = 64, 256, 512, 128
+    else:
+        c1, c2, f1, f2 = 64, 64, 384, 192
+    if width_scale != 1.0:
+        c1, c2, f1, f2 = (max(8, int(v * width_scale)) for v in (c1, c2, f1, f2))
+    h_out, w_out = h // 4, w // 4  # two 2x2 pools
+    flat = h_out * w_out * c2
+
+    def init(key):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        return {
+            "conv1": _conv_init(k1, 5, 5, c, c1),
+            "conv2": _conv_init(k2, 5, 5, c1, c2),
+            "fc1": _dense_init(k3, flat, f1),
+            "fc2": _dense_init(k4, f1, f2),
+            "out": _dense_init(k5, f2, num_classes),
+        }
+
+    def apply(params, x):
+        x = _maxpool2(jax.nn.relu(_conv(x, params["conv1"])))
+        x = _maxpool2(jax.nn.relu(_conv(x, params["conv2"])))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        return x @ params["out"]["w"] + params["out"]["b"]
+
+    return Classifier(f"lenet-{dataset}", init, apply, num_classes)
+
+
+def make_classifier(model: str, dataset: str, image_shape, num_classes: int,
+                    *, width_scale: float = 1.0) -> Classifier:
+    if model == "mlp":
+        return make_mlp(dataset, tuple(image_shape), num_classes)
+    if model == "lenet":
+        return make_lenet(dataset, tuple(image_shape), num_classes,
+                          width_scale=width_scale)
+    raise ValueError(f"unknown model {model!r}")

@@ -1,0 +1,64 @@
+"""Shared neural building blocks (pure JAX, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, n_in, n_out, *, scale: float | None = None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(n_in)
+    return (jax.random.normal(key, (n_in, n_out), jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps) * weight + bias
+    return out.astype(x.dtype)
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., T) int -> cos, sin of shape (..., T, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., T, H, D); cos/sin: (..., T, 1-broadcastable, D/2). Rotate-half convention."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)
+
+
+def cross_entropy_loss(logits, labels, *, z_loss: float = 0.0):
+    """logits (B, T, V) any float dtype; labels (B, T) int. Mean NLL in f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

@@ -1,0 +1,188 @@
+"""Feed-forward blocks: gated dense FFN and Mixture-of-Experts.
+
+MoE dispatch (TPU adaptation, recorded in DESIGN.md): token-choice top-k
+routing is realised with an *expert-choice capacity* dispatch — each expert
+gathers its top-C tokens, C = num_tokens * k / E — which keeps every shape
+static (XLA requirement), matches top-k FLOPs exactly, and maps onto
+expert-parallel sharding (experts on the `model` mesh axis) with the same
+all-to-all-shaped communication as a GPU token-shuffle. An exact dense top-k
+path (`method="dense_topk"`, computes every expert then masks) is kept for
+small-scale correctness tests.
+
+DeepSeek-V3 details honoured: `num_shared_experts` always-on experts added to
+the routed output; sigmoid router scores with top-k renormalisation; load
+balance auxiliary loss (Switch-style) returned to the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.common import activation, dense_init
+
+
+def _constrain(x, *axes):
+    """Best-effort sharding constraint; no-op without a mesh context (tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*axes))
+    except Exception:  # no mesh / unknown axis names
+        return x
+
+
+# --------------------------------------------------------------------------
+# dense FFN
+# --------------------------------------------------------------------------
+
+
+def init_ffn(cfg: ArchConfig, key, dtype, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act == "silu":  # gated (SwiGLU-family)
+        return {
+            "w_gate": dense_init(k1, d, f, dtype=dtype),
+            "w_in": dense_init(k2, d, f, dtype=dtype),
+            "w_out": dense_init(k3, f, d, dtype=dtype),
+        }
+    return {
+        "w_in": dense_init(k1, d, f, dtype=dtype),
+        "b_in": jnp.zeros((f,), dtype),
+        "w_out": dense_init(k2, f, d, dtype=dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def ffn_forward(cfg: ArchConfig, p: dict, x):
+    act = activation(cfg.act)
+    if "w_gate" in p:
+        return (act(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]
+    return act(x @ p["w_in"] + p["b_in"]) @ p["w_out"] + p["b_out"]
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+
+def init_moe(cfg: ArchConfig, key, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k_r, k_g, k_i, k_o, k_s = jax.random.split(key, 5)
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(f)
+    p = {
+        "router": dense_init(k_r, d, E, dtype=jnp.float32),  # router math in f32
+        "w_gate": (jax.random.normal(k_g, (E, d, f)) * scale_in).astype(dtype),
+        "w_in": (jax.random.normal(k_i, (E, d, f)) * scale_in).astype(dtype),
+        "w_out": (jax.random.normal(k_o, (E, f, d)) * scale_out).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        ks = jax.random.split(k_s, 3)
+        fs = f * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[0], d, fs, dtype=dtype),
+            "w_in": dense_init(ks[1], d, fs, dtype=dtype),
+            "w_out": dense_init(ks[2], fs, d, dtype=dtype),
+        }
+    return p
+
+
+def _router_probs(cfg: ArchConfig, p, x_flat):
+    """x_flat (N, d) -> probs (N, E) in f32. DeepSeek-V3 uses sigmoid scores;
+    classic MoEs use softmax. We use softmax for <=32 experts, sigmoid above."""
+    logits = x_flat.astype(jnp.float32) @ p["router"]
+    if cfg.num_experts > 32:
+        return jax.nn.sigmoid(logits)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _load_balance_loss(probs, E: int):
+    """Switch-style: E * sum_e (mean prob_e) * (mean assignment_e) using soft
+    assignment (differentiable, collapses to the standard form)."""
+    me = jnp.mean(probs, axis=0)
+    return E * jnp.sum(me * me)
+
+
+def moe_forward(cfg: ArchConfig, p: dict, x, *, method: str = "expert_choice",
+                capacity_factor: float = 1.0):
+    """x (B, T, d) -> (y (B, T, d), aux_loss scalar)."""
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    act = activation(cfg.act)
+    if method == "expert_choice" and cfg.moe_shardmap:
+        # manual-collective interior (models/moe_shardmap.py): provably-local
+        # dispatch/combine; one (n_loc, d) psum over `model` per layer instead
+        # of the GSPMD operand-replicated scatter + full-activation all-reduce.
+        from repro.models import moe_shardmap as msm
+        from repro.sharding.ctx import current_mesh
+
+        mesh = current_mesh()
+        if mesh is not None and msm.shardmap_supported(cfg, mesh, B):
+            y, aux = msm.moe_routed_shardmap(cfg, p, x, mesh,
+                                             capacity_factor=capacity_factor)
+            aux = aux * cfg.router_aux_coef
+            if cfg.num_shared_experts:
+                sp = p["shared"]
+                xf = x.reshape(B * T, d)
+                y = (y.reshape(B * T, d)
+                     + (act(xf @ sp["w_gate"]) * (xf @ sp["w_in"])) @ sp["w_out"]
+                     ).reshape(B, T, d)
+            return y, aux
+
+    xf = x.reshape(B * T, d)
+    N = B * T
+    probs = _router_probs(cfg, p, xf)  # (N, E) f32
+    aux = _load_balance_loss(probs, E) * cfg.router_aux_coef
+
+    if method == "dense_topk":
+        # exact token-choice top-k: run every expert on every token, mask.
+        topv, topi = jax.lax.top_k(probs, k)
+        gates = jnp.zeros_like(probs).at[jnp.arange(N)[:, None], topi].set(topv)
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+        h = jnp.einsum("nd,edf->nef", xf, p["w_gate"])
+        u = jnp.einsum("nd,edf->nef", xf, p["w_in"])
+        y_e = jnp.einsum("nef,efd->ned", act(h) * u, p["w_out"])
+        y = jnp.einsum("ne,ned->nd", gates.astype(x.dtype), y_e)
+    elif method == "expert_choice":
+        # group-limited expert choice: route within G token groups (G=1 ->
+        # global routing, the paper-faithful baseline). With moe_groups > 1
+        # the groups are the BATCH ROWS — the batch dim is already sharded
+        # over `data`, so routing/gather/scatter and the expert matmuls stay
+        # shard-local with no resharding (the TPU analogue of DeepSeek-V3's
+        # node-limited routing; EXPERIMENTS.md §Perf iteration 1).
+        G = B if (cfg.moe_groups > 1 and T * k >= E) else 1
+        n = N // G
+        cap = max(1, int(n * k * capacity_factor) // E)
+        xg = xf.reshape(G, n, d)
+        pg = probs.reshape(G, n, E)
+        scores = pg.transpose(0, 2, 1)  # (G, E, n)
+        g, idx = jax.lax.top_k(scores, cap)  # (G, E, C)
+        xe = jnp.take_along_axis(
+            xg, idx.reshape(G, E * cap)[..., None], axis=1
+        ).reshape(G, E, cap, d)
+        h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+        u = jnp.einsum("gecd,edf->gecf", xe, p["w_in"])
+        ye = jnp.einsum("gecf,efd->gecd", act(h) * u, p["w_out"])
+        ye = ye * g[..., None].astype(x.dtype)
+        flat_idx = idx.reshape(G, E * cap)
+        ye_flat = ye.reshape(G, E * cap, d)
+        if G > 1:
+            # pull expert outputs back to the tokens' home shards BEFORE the
+            # combine scatter (one cheap all-to-all of N*k*d instead of
+            # operand-replicated scatter + giant all-reduce)
+            ye_flat = _constrain(ye_flat, "data", None, None)
+            flat_idx = _constrain(flat_idx, "data", None)
+        y = jnp.zeros((G, n, d), x.dtype)
+        y = jax.vmap(lambda yi, ii, vi: yi.at[ii].add(vi))(y, flat_idx, ye_flat)
+        mass = jax.vmap(lambda ii, gi: jnp.zeros((n,), jnp.float32).at[ii].add(gi))(
+            flat_idx, g.reshape(G, E * cap)
+        )
+        y = (y / jnp.maximum(mass, 1e-9)[..., None].astype(x.dtype)).reshape(N, d)
+    else:
+        raise ValueError(method)
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        y = y + (act(xf @ sp["w_gate"]) * (xf @ sp["w_in"])) @ sp["w_out"]
+    return y.reshape(B, T, d), aux

@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (diagonal, per-channel):
+    r_t = sigmoid(W_r x_t),  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses jax.lax.associative_scan over T (O(log T) depth, TPU-friendly);
+decode is a constant-time state update — which is what qualifies
+recurrentgemma for the 500k-context shape.
+
+The full residual block is Griffin's "recurrent block": linear in-proj to
+(x branch, gate branch), temporal conv1d(4) on the x branch, RG-LRU, gated
+out-projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init
+
+_C = 8.0
+
+
+def _lru_scan(a, u):
+    """h_t = a_t h_{t-1} + u_t via associative scan. a, u: (B, T, W)."""
+
+    def combine(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a1 * a2, a2 * u1 + u2
+
+    af, uf = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return uf  # uf[t] = sum_s (prod_{s<u<=t} a) u_s  == h_t with h_{-1}=0
+
+
+def init_rglru_block(cfg: ArchConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a in (0.9, 0.999) at r=0.5 (paper's stable range)
+    lam = jax.random.uniform(ks[4], (w,), jnp.float32, 0.3, 0.8)
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype=dtype),
+        "w_gate": dense_init(ks[1], d, w, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, w)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": dense_init(ks[3], w, w, dtype=dtype),
+        "w_i": dense_init(ks[5], w, w, dtype=dtype),
+        "lambda": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 9), w, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid(xb @ p["w_r"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xb @ p["w_i"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r  # (B,*,W) f32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * xb.astype(jnp.float32)
+
+
+def rglru_block_forward(cfg: ArchConfig, p: dict, x):
+    """x (B,T,d) -> (B,T,d)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = x @ p["w_x"]
+    xb = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    a, u = _gates(p, xb)
+    h = _lru_scan(a, u).astype(x.dtype)
+    return (h * gate) @ p["w_out"]
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, w), dtype),  # last K-1 conv inputs
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_block_decode(cfg: ArchConfig, p: dict, x, cache: dict):
+    """x (B,1,d) -> (B,1,d); O(1) state update."""
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate"])
+    xb = x[:, 0] @ p["w_x"]
+    hist = jnp.concatenate([cache["conv"], xb[:, None, :]], axis=1)  # (B,4,W)
+    xb = jnp.einsum("bkw,kw->bw", hist, p["conv_w"]) + p["conv_b"]
+    a, u = _gates(p, xb)
+    h = a * cache["h"] + u
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y[:, None, :], {"conv": hist[:, 1:], "h": h}

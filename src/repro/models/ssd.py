@@ -1,0 +1,204 @@
+"""Mamba-2 SSD (state-space duality) block — chunked TPU-native implementation.
+
+The recurrence per head (scalar decay a_t, state S in R^{P x N}):
+    S_t = a_t * S_{t-1} + x_t B_t^T          (x_t in R^P, B_t in R^N)
+    y_t = S_t C_t + D * x_t                  (C_t in R^N)
+
+GPU Mamba-2 uses a fused Triton scan; the TPU adaptation (DESIGN.md §3) is the
+*chunked dual form*: split T into chunks of length Q, compute intra-chunk
+contributions as a masked (Q x Q) matmul (MXU-friendly), and carry only the
+(H, P, N) state across chunks with a cheap lax.scan of length T/Q. Memory is
+O(T·P + (T/Q)·P·N) instead of O(T·P·N).
+
+Sharding note (EXPERIMENTS.md §Perf, pair 2): the projections for the wide
+x/z streams (sharded on `model`) are SEPARATE from the tiny B/C/dt streams
+(replicated). Mamba-2's reference code fuses them into one in_proj + one conv,
+which on a TP mesh strands the B/C channels on individual model shards and
+forces per-layer reshuffles; splitting them is mathematically identical.
+
+Layout: x (B, T, H, P); a (B, T, H) in (0,1); B/C (B, T, N) (ngroups=1,
+broadcast over heads like Mamba-2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, rms_norm
+
+
+def ssd_chunked(x, log_a, Bm, Cm, *, chunk: int):
+    """x (B,T,H,P), log_a (B,T,H) (log decay, <=0), Bm/Cm (B,T,N).
+
+    Returns y (B,T,H,P) and final state (B,H,P,N).
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    lc = log_a.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    # cumulative log-decay within each chunk: csum[t] = sum_{u<=t} log_a[u]
+    csum = jnp.cumsum(lc, axis=2)  # (B,nc,Q,H)
+
+    # ---- intra-chunk (dual / attention-like) term ----
+    # M[t,s] = exp(csum[t] - csum[s]) for s <= t (decay from s+1..t)
+    seg = csum[:, :, :, None, :] - csum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # double-where: masked (s > t) entries have seg >> 0, exp overflows to
+    # inf and d(exp)=inf would leak NaN through the where's backward.
+    seg = jnp.where(tri, seg, 0.0)
+    M = jnp.where(tri, jnp.exp(seg), 0.0)
+    # scores[t,s] = C_t . B_s
+    scores = jnp.einsum("bctn,bcsn->bcts", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", scores, M, xc.astype(jnp.float32))
+
+    # ---- chunk-boundary states ----
+    # state contribution of chunk c: sum_s exp(csum[Q-1] - csum[s]) * x_s B_s^T
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcsh,bcshp,bcsn->bchpn", decay_to_end, xc.astype(jnp.float32),
+                     Bc.astype(jnp.float32))
+    A_c = jnp.exp(csum[:, :, -1, :])  # total chunk decay (B,nc,H)
+
+    # ---- inter-chunk scan over nc chunks (carry (B,H,P,N)) ----
+    def step(S_prev, inp):
+        A_k, S_k = inp  # (B,H), (B,H,P,N)
+        S_new = A_k[..., None, None] * S_prev + S_k
+        return S_new, S_prev  # emit the state *entering* the chunk
+
+    S0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    S_final, S_in = jax.lax.scan(
+        step, S0, (A_c.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4))
+    )
+    S_in = S_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: y_t += C_t . (decay_from_start[t] * S_in) ----
+    decay_from_start = jnp.exp(csum)  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", Cc.astype(jnp.float32),
+                         decay_from_start, S_in)
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y.astype(x.dtype), S_final
+
+
+def ssd_decode_step(x, log_a, Bm, Cm, state):
+    """Single token: x (B,H,P), log_a (B,H), Bm/Cm (B,N), state (B,H,P,N)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = a * state + jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32),
+                                   Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+# --------------------------------------------------------------------------
+# full Mamba-2 block (in_proj -> short conv -> SSD -> gated out_proj)
+# --------------------------------------------------------------------------
+
+
+def init_ssd_block(cfg: ArchConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        # wide streams (model-sharded): z (gate) and x
+        "w_in": dense_init(ks[0], d, 2 * d_in, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_in)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        # narrow streams (replicated): B, C (state projections) and dt
+        "w_bc": dense_init(ks[2], d, 2 * N, dtype=dtype),
+        "conv_bc_w": (jax.random.normal(ks[3], (cfg.ssm_conv, 2 * N)) * 0.2).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * N,), dtype),
+        "w_dt": dense_init(ks[5], d, H, dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[6], d_in, d, dtype=dtype),
+    }
+
+
+def _causal_conv(xs, w, b):
+    """Depthwise causal 1-D conv: xs (B,T,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xs.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _streams(cfg: ArchConfig, p: dict, x):
+    """Project x -> (z, x_stream, B, C, dt). x: (B,T,d) or (B,d)."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    zx = x @ p["w_in"]
+    z, xs = jnp.split(zx, [d_in], axis=-1)
+    bc = x @ p["w_bc"]
+    dt = x @ p["w_dt"]
+    return z, xs, bc, dt, d_in, N, H
+
+
+def ssd_block_forward(cfg: ArchConfig, p: dict, x):
+    """x (B,T,d) -> (B,T,d). Training / prefill path."""
+    B, T, d = x.shape
+    z, xs, bc, dt, d_in, N, H = _streams(cfg, p, x)
+    xs = _causal_conv(xs, p["conv_w"], p["conv_b"])
+    bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+    Bm, Cm = jnp.split(bc, [N], axis=-1)
+    xs = xs.reshape(B, T, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    log_a = -jnp.exp(p["A_log"])[None, None, :] * dt  # log decay <= 0
+    # dt also scales the input (mamba2 discretisation)
+    x_in = xs * dt[..., None].astype(xs.dtype)
+    pad_t = (-T) % cfg.ssm_chunk
+    if pad_t:
+        x_in = jnp.pad(x_in, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad_t), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad_t), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad_t), (0, 0)))
+    y, _ = ssd_chunked(x_in, log_a, Bm, Cm, chunk=cfg.ssm_chunk)
+    y = y[:, :T]
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, T, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def init_ssd_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * N), dtype),
+        "state": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }
+
+
+def ssd_block_decode(cfg: ArchConfig, p: dict, x, cache: dict):
+    """x (B,1,d); constant-time decode (this is why mamba2 runs long_500k)."""
+    B, _, d = x.shape
+    z, xs, bc, dt, d_in, N, H = _streams(cfg, p, x[:, 0])
+    # rolling conv states (x stream and bc stream separately)
+    hist = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)  # (B,K,d_in)
+    xs_t = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"])
+    hist_bc = jnp.concatenate([cache["conv_bc"], bc[:, None, :]], axis=1)
+    bc_t = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist_bc, p["conv_bc_w"]) + p["conv_bc_b"]
+    )
+    Bm, Cm = jnp.split(bc_t, [N], axis=-1)
+    xs_t = xs_t.reshape(B, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    log_a = -jnp.exp(p["A_log"])[None, :] * dt
+    x_in = xs_t * dt[..., None].astype(xs_t.dtype)
+    y, state = ssd_decode_step(x_in, log_a, Bm, Cm, cache["state"])
+    y = y + p["D"][None, :, None] * xs_t
+    y = y.reshape(B, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z)[:, None, :], p["norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"conv": hist[:, 1:], "conv_bc": hist_bc[:, 1:], "state": state}

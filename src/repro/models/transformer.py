@@ -1,0 +1,537 @@
+"""Unified decoder-style LM covering all six assigned families.
+
+Structure
+---------
+Layers are grouped into a scanned "superblock": the arch's `block_pattern`
+(e.g. ("rglru","rglru","local") for recurrentgemma) is stacked
+`num_layers // len(pattern)` times and run under jax.lax.scan (small HLO,
+fast AOT compiles at 61+ layers); remainder layers run unscanned as a tail.
+
+Per-layer block kinds: "attn" (full causal; MLA if cfg.mla), "local"
+(sliding window), "ssd" (Mamba-2), "rglru" (Griffin). FFN is dense or MoE
+(cfg.num_experts). Whisper adds an encoder stack + cross-attention; Phi-3-V
+prepends projected patch embeddings; DeepSeek adds an MTP head.
+
+Public entry points (all functional):
+  init_params(cfg, key)
+  forward(cfg, params, batch)           -> logits, aux_loss
+  loss_fn(cfg, params, batch)           -> scalar
+  make_train_step(cfg)                  -> (params, batch, lr) -> (params, loss)
+  prefill(cfg, params, batch)           -> logits_last, caches
+  init_caches(cfg, params, batch, cap)  -> caches (for decode dry-run specs)
+  decode_step(cfg, params, caches, token[, ...]) -> logits, caches
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.common import cross_entropy_loss, dense_init, rms_norm
+
+PyTree = Any
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ==========================================================================
+# per-block init / forward / decode
+# ==========================================================================
+
+
+def _has_ffn(cfg: ArchConfig, kind: str) -> bool:
+    return kind != "ssd"  # mamba2 blocks are mixer-only
+
+
+def init_block(cfg: ArchConfig, kind: str, key, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if kind in ("attn", "local"):
+        if cfg.mla is not None:
+            p["attn"] = attn.init_mla(cfg, k1, dtype)
+        else:
+            p["attn"] = attn.init_attention(cfg, k1, dtype)
+        if cfg.is_encoder_decoder:
+            p["ln_x"] = jnp.ones((cfg.d_model,), dtype)
+            p["xattn"] = attn.init_attention(
+                dataclasses.replace(cfg, qkv_bias=False, qk_norm=False), k3, dtype
+            )
+    elif kind == "ssd":
+        p["mixer"] = ssd_mod.init_ssd_block(cfg, k1, dtype)
+    elif kind == "rglru":
+        p["mixer"] = rglru_mod.init_rglru_block(cfg, k1, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_ffn(cfg, kind):
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = ffn_mod.init_moe(cfg, k2, dtype) if cfg.is_moe else ffn_mod.init_ffn(
+            cfg, k2, dtype
+        )
+    return p
+
+
+def block_forward(cfg: ArchConfig, kind: str, p: dict, x, *, enc_out=None,
+                  moe_method: str = "expert_choice"):
+    """x (B,T,d) -> (x', aux). Causal training/prefill path."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        window = cfg.sliding_window if kind == "local" else None
+        if cfg.mla is not None:
+            y = attn.mla_forward(cfg, p["attn"], h)
+        else:
+            y = attn.attention_forward(cfg, p["attn"], h, window=window)
+        x = x + y
+        if cfg.is_encoder_decoder and enc_out is not None:
+            hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            x = x + _cross_attention(cfg, p["xattn"], hx, enc_out)
+    elif kind == "ssd":
+        x = x + ssd_mod.ssd_block_forward(cfg, p["mixer"], h)
+    elif kind == "rglru":
+        x = x + rglru_mod.rglru_block_forward(cfg, p["mixer"], h)
+    if _has_ffn(cfg, kind):
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, aux = ffn_mod.moe_forward(cfg, p["ffn"], h2, method=moe_method)
+        else:
+            y = ffn_mod.ffn_forward(cfg, p["ffn"], h2)
+        x = x + y
+    return x, aux
+
+
+def _cross_attention(cfg: ArchConfig, p, x, enc_out):
+    """Decoder -> encoder attention (no RoPE, full visibility)."""
+    B, T, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, h, hd)
+    k = (enc_out @ p["wk"]).reshape(B, enc_out.shape[1], hkv, hd)
+    v = (enc_out @ p["wv"]).reshape(B, enc_out.shape[1], hkv, hd)
+    out = attn.blockwise_attention(q, k, v, causal=False)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, capacity: int, dtype,
+                     enc_len: int = 0) -> dict:
+    c: dict = {}
+    if kind in ("attn", "local"):
+        cap = capacity if kind == "attn" else min(capacity, cfg.sliding_window)
+        if cfg.mla is not None:
+            c["self"] = attn.init_mla_cache(cfg, batch, cap, dtype)
+        else:
+            c["self"] = attn.init_attn_cache(cfg, batch, cap, dtype)
+        if cfg.is_encoder_decoder:
+            c["cross_k"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+            c["cross_v"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    elif kind == "ssd":
+        c["mixer"] = ssd_mod.init_ssd_cache(cfg, batch, dtype)
+    elif kind == "rglru":
+        c["mixer"] = rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    return c
+
+
+def block_decode(cfg: ArchConfig, kind: str, p: dict, x, cache: dict,
+                 moe_method: str = "expert_choice"):
+    if kind in ("attn", "local"):
+        window = cfg.sliding_window if kind == "local" else None
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cfg.mla is not None:
+            y, new_self = attn.mla_decode(cfg, p["attn"], h, cache["self"])
+        else:
+            y, new_self = attn.attention_decode(cfg, p["attn"], h, cache["self"], window=window)
+        x = x + y
+        cache = dict(cache, self=new_self)
+        if cfg.is_encoder_decoder:
+            hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            B = x.shape[0]
+            q = (hx @ p["xattn"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+            out = attn.decode_attention(
+                q, cache["cross_k"], cache["cross_v"],
+                jnp.full((B,), cache["cross_k"].shape[1], jnp.int32),
+            )
+            x = x + out.reshape(B, 1, -1) @ p["xattn"]["wo"]
+    else:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if kind == "ssd":
+            y, new_mixer = ssd_mod.ssd_block_decode(cfg, p["mixer"], h, cache["mixer"])
+        else:
+            y, new_mixer = rglru_mod.rglru_block_decode(cfg, p["mixer"], h, cache["mixer"])
+        x = x + y
+        cache = dict(cache, mixer=new_mixer)
+    if _has_ffn(cfg, kind):
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = ffn_mod.moe_forward(cfg, p["ffn"], h2, method=moe_method)
+        else:
+            y = ffn_mod.ffn_forward(cfg, p["ffn"], h2)
+        x = x + y
+    return x, cache
+
+
+# ==========================================================================
+# layer stacking: scanned superblocks + tail
+# ==========================================================================
+
+
+def _layout(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_super, n_tail): num_layers = n_super * len(pattern) + n_tail."""
+    plen = len(cfg.block_pattern)
+    return cfg.num_layers // plen, cfg.num_layers % plen
+
+
+def _stack_trees(trees: list[PyTree]) -> PyTree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    n_super, n_tail = _layout(cfg)
+    plen = len(cfg.block_pattern)
+    keys = jax.random.split(key, cfg.num_layers + cfg.encoder_layers + 8)
+
+    # scanned superblocks: per pattern-position, stacked across n_super repeats
+    super_params = []
+    for pos, kind in enumerate(cfg.block_pattern):
+        reps = [init_block(cfg, kind, keys[r * plen + pos], dtype) for r in range(n_super)]
+        super_params.append(_stack_trees(reps))
+    tail = [
+        init_block(cfg, cfg.block_kind(n_super * plen + i), keys[n_super * plen + i], dtype)
+        for i in range(n_tail)
+    ]
+
+    p: dict = {
+        "embed": dense_init(keys[-1], cfg.vocab_size, cfg.d_model, scale=0.02, dtype=dtype),
+        "super": super_params,
+        "tail": tail,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[-2], cfg.d_model, cfg.vocab_size, dtype=dtype)
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(keys[-3], cfg.encoder_layers)
+        enc_cfg = dataclasses.replace(
+            cfg, qkv_bias=False, qk_norm=False, num_experts=0, act="gelu",
+            block_pattern=("attn",), mla=None,
+        )
+        p["encoder"] = {
+            "blocks": _stack_trees(
+                [_init_encoder_block(enc_cfg, k, dtype) for k in ek]
+            ),
+            "norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    if cfg.num_patches:
+        p["projector"] = dense_init(keys[-4], 1024, cfg.d_model, dtype=dtype)
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": dense_init(keys[-5], 2 * cfg.d_model, cfg.d_model, dtype=dtype),
+            "block": init_block(cfg, "attn", keys[-6], dtype),
+            "norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return p
+
+
+def _init_encoder_block(cfg: ArchConfig, key, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(cfg, k1, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": ffn_mod.init_ffn(cfg, k2, dtype),
+    }
+
+
+def _encoder_forward(cfg: ArchConfig, p: dict, frames):
+    """frames (B, F, d) — stub frontend output — -> encoder states."""
+    x = frames.astype(_dtype(cfg))
+    F = x.shape[1]
+    # sinusoidal positions
+    pos = np.arange(10_000)[:, None] / (
+        10_000 ** (np.arange(0, cfg.d_model, 2)[None, :] / cfg.d_model)
+    )
+    pe = jnp.asarray(
+        np.concatenate([np.sin(pos), np.cos(pos)], axis=-1)[None, :, :], _dtype(cfg)
+    )
+    x = x + pe[:, :F, : cfg.d_model]
+    enc_cfg = dataclasses.replace(
+        cfg, qkv_bias=False, qk_norm=False, num_experts=0, act="gelu",
+        block_pattern=("attn",), mla=None,
+    )
+
+    def body(h, bp):
+        y = attn.blockwise_attention(
+            *_enc_qkv(enc_cfg, bp["attn"], rms_norm(h, bp["ln1"], cfg.norm_eps)),
+            causal=False,
+        )
+        h = h + y.reshape(h.shape[0], h.shape[1], -1) @ bp["attn"]["wo"]
+        h = h + ffn_mod.ffn_forward(enc_cfg, bp["ffn"], rms_norm(h, bp["ln2"], cfg.norm_eps))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, p["blocks"])
+    return rms_norm(x, p["norm"], cfg.norm_eps)
+
+
+def _enc_qkv(cfg: ArchConfig, p, x):
+    B, T, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, h, hd)
+    k = (x @ p["wk"]).reshape(B, T, hkv, hd)
+    v = (x @ p["wv"]).reshape(B, T, hkv, hd)
+    return q, k, v
+
+
+# ==========================================================================
+# full forward / loss / train step
+# ==========================================================================
+
+
+def _embed_inputs(cfg: ArchConfig, params: dict, batch: dict):
+    """Returns (x (B, T', d), enc_out or None, n_prefix)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    enc_out = None
+    n_prefix = 0
+    if cfg.is_encoder_decoder:
+        enc_out = _encoder_forward(cfg, params["encoder"], batch["frames"])
+    if cfg.num_patches:
+        patches = batch["patches"].astype(_dtype(cfg)) @ params["projector"]
+        x = jnp.concatenate([patches, x], axis=1)
+        n_prefix = patches.shape[1]
+    return x, enc_out, n_prefix
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False,
+            moe_method: str = "expert_choice", remat_policy=None,
+            last_only: bool = False):
+    """-> (logits (B, T_tokens, V) — or (B, 1, V) with `last_only` — , aux).
+
+    `last_only` slices the hidden state to the final position BEFORE the LM
+    head: a prefill only needs next-token logits, and the (B, T, V) logits
+    tensor is otherwise the largest in the whole program (EXPERIMENTS.md
+    §Perf pair 4)."""
+    x, enc_out, n_prefix = _embed_inputs(cfg, params, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    plen = len(cfg.block_pattern)
+
+    def super_body(carry, stacked_slice):
+        h, aux = carry
+        for pos, kind in enumerate(cfg.block_pattern):
+            h, a = block_forward(cfg, kind, stacked_slice[pos], h, enc_out=enc_out,
+                                 moe_method=moe_method)
+            aux = aux + a
+        return (h, aux), None
+
+    if remat:
+        body = jax.checkpoint(super_body, policy=remat_policy)
+    else:
+        body = super_body
+    n_super, n_tail = _layout(cfg)
+    if n_super:
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["super"])
+    for i in range(n_tail):
+        kind = cfg.block_kind(n_super * plen + i)
+        x, a = block_forward(cfg, kind, params["tail"][i], x, enc_out=enc_out,
+                             moe_method=moe_method)
+        aux_total = aux_total + a
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    if last_only:
+        x = x[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux_total
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False,
+            moe_method: str = "expert_choice", remat_policy=None):
+    logits, aux = forward(cfg, params, batch, remat=remat, moe_method=moe_method,
+                          remat_policy=remat_policy)
+    loss = cross_entropy_loss(logits, batch["labels"])
+    if cfg.mtp_depth:
+        loss = loss + 0.3 * _mtp_loss(cfg, params, batch)
+    return loss + aux
+
+
+def _mtp_loss(cfg: ArchConfig, params: dict, batch: dict):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict t_{i+2} from the
+    embedding stream shifted by one, fused through one extra block."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    nxt = jnp.take(params["embed"], labels, axis=0)  # t_{i+1} embeddings
+    m = params["mtp"]
+    h = jnp.concatenate(
+        [rms_norm(x, m["norm"], cfg.norm_eps), rms_norm(nxt, m["norm"], cfg.norm_eps)], -1
+    ) @ m["proj"]
+    h, _ = block_forward(cfg, "attn", m["block"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    # labels for t_{i+2}: shift `labels` left by one (last position ignored)
+    l2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+    return cross_entropy_loss(logits, l2)
+
+
+def make_train_step(cfg: ArchConfig, *, remat: bool = True,
+                    moe_method: str = "expert_choice"):
+    """Plain SGD step — the Eq. (5)-compatible unit the FL layer composes."""
+
+    def train_step(params, batch, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat, moe_method=moe_method)
+        )(params)
+        new_params = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params, grads)
+        return new_params, loss
+
+    return train_step
+
+
+# ==========================================================================
+# serving: prefill + single-token decode
+# ==========================================================================
+
+
+def init_caches(cfg: ArchConfig, batch: int, capacity: int, *, enc_len: int = 0):
+    dtype = _dtype(cfg)
+    n_super, n_tail = _layout(cfg)
+    plen = len(cfg.block_pattern)
+    super_caches = []
+    for pos, kind in enumerate(cfg.block_pattern):
+        reps = [
+            init_block_cache(cfg, kind, batch, capacity, dtype, enc_len=enc_len)
+            for _ in range(n_super)
+        ]
+        super_caches.append(_stack_trees(reps))
+    tail = [
+        init_block_cache(cfg, cfg.block_kind(n_super * plen + i), batch, capacity, dtype,
+                         enc_len=enc_len)
+        for i in range(n_tail)
+    ]
+    return {"super": super_caches, "tail": tail}
+
+
+def set_cache_len(caches, new_len: int):
+    """Mark caches as containing `new_len` tokens (dry-run decode specs)."""
+
+    def upd(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "len":
+            return jnp.full(leaf.shape, new_len, leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(upd, caches)
+
+
+def decode_step(cfg: ArchConfig, params: dict, caches, token, *,
+                moe_method: str = "expert_choice"):
+    """token (B, 1) int32 -> (logits (B, V), new caches). One new token vs cache."""
+    x = jnp.take(params["embed"], token, axis=0)
+    plen = len(cfg.block_pattern)
+    n_super, n_tail = _layout(cfg)
+
+    def super_body(h, slices):
+        param_slice, cache_slice = slices
+        new_caches = []
+        for pos, kind in enumerate(cfg.block_pattern):
+            h, nc = block_decode(cfg, kind, param_slice[pos], h, cache_slice[pos],
+                                 moe_method=moe_method)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    new_super = []
+    if n_super:
+        x, ys = jax.lax.scan(super_body, x, (params["super"], tuple(caches["super"])))
+        new_super = list(ys)
+    new_tail = []
+    for i in range(n_tail):
+        kind = cfg.block_kind(n_super * plen + i)
+        x, nc = block_decode(cfg, kind, params["tail"][i], x, caches["tail"][i],
+                             moe_method=moe_method)
+        new_tail.append(nc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    return logits, {"super": new_super, "tail": new_tail}
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, *, capacity: int | None = None,
+            moe_method: str = "expert_choice"):
+    """Run the full prompt, return (last-position logits, filled caches).
+
+    Implemented as forward + cache construction per layer. For attention
+    layers the K/V of every position are recomputed blockwise (cheap relative
+    to the forward) — caches come back ready for decode_step.
+    """
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    capacity = capacity or T
+    logits, _ = forward(cfg, params, batch, moe_method=moe_method)
+    caches = init_caches(cfg, B, capacity,
+                         enc_len=batch["frames"].shape[1] if cfg.is_encoder_decoder else 0)
+    if cfg.is_encoder_decoder:
+        caches = _fill_cross_caches(cfg, params, batch, caches)
+    caches = _fill_caches_by_replay(cfg, params, batch, caches, moe_method=moe_method)
+    return logits[:, -1], caches
+
+
+def _fill_cross_caches(cfg: ArchConfig, params, batch, caches):
+    """Encoder K/V are computed once per request and pinned in the cache."""
+    enc_out = _encoder_forward(cfg, params["encoder"], batch["frames"])
+    B, F, _ = enc_out.shape
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def fill(param_tree, cache_tree):
+        def one(pp, cc):
+            if "xattn" not in pp:
+                return cc
+            wk, wv = pp["xattn"]["wk"], pp["xattn"]["wv"]
+            if wk.ndim == 3:  # stacked (n_super, d, hkv*hd)
+                ck = jnp.einsum("bfd,ldk->lbfk", enc_out, wk).reshape(
+                    wk.shape[0], B, F, hkv, hd
+                )
+                cv = jnp.einsum("bfd,ldk->lbfk", enc_out, wv).reshape(
+                    wv.shape[0], B, F, hkv, hd
+                )
+            else:
+                ck = (enc_out @ wk).reshape(B, F, hkv, hd)
+                cv = (enc_out @ wv).reshape(B, F, hkv, hd)
+            return dict(cc, cross_k=ck.astype(cc["cross_k"].dtype),
+                        cross_v=cv.astype(cc["cross_v"].dtype))
+
+        return one(param_tree, cache_tree)
+
+    new_super = [
+        fill(params["super"][pos], caches["super"][pos])
+        for pos in range(len(cfg.block_pattern))
+    ]
+    n_super, n_tail = _layout(cfg)
+    plen = len(cfg.block_pattern)
+    new_tail = [
+        fill(params["tail"][i], caches["tail"][i]) for i in range(n_tail)
+    ]
+    return {"super": new_super, "tail": new_tail}
+
+
+def _fill_caches_by_replay(cfg: ArchConfig, params, batch, caches, *, moe_method):
+    """Decode the prompt token-by-token to fill caches (reference-quality path;
+    serving benchmarks at scale use the dry-run specs, not this loop)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+
+    def step(carry, tok):
+        c = carry
+        _, c = decode_step(cfg, params, c, tok[:, None], moe_method=moe_method)
+        return c, None
+
+    caches, _ = jax.lax.scan(step, caches, tokens.T)
+    return caches

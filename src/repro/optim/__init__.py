@@ -1,0 +1,21 @@
+from repro.optim.schedules import (
+    paper_sqrt_schedule,
+    paper_power_schedule,
+    constant_schedule,
+    nonconvex_schedule,
+)
+from repro.optim.sgd import sgd_init, sgd_step, SGDConfig
+from repro.optim.adamw import adamw_init, adamw_step, AdamWConfig
+
+__all__ = [
+    "paper_sqrt_schedule",
+    "paper_power_schedule",
+    "constant_schedule",
+    "nonconvex_schedule",
+    "sgd_init",
+    "sgd_step",
+    "SGDConfig",
+    "adamw_init",
+    "adamw_step",
+    "AdamWConfig",
+]

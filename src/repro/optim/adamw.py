@@ -1,0 +1,44 @@
+"""AdamW for the transformer substrate (examples/train driver)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params: PyTree) -> dict:
+    return {
+        "mu": jax.tree.map(jnp.zeros_like, params),
+        "nu": jax.tree.map(jnp.zeros_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_step(
+    params: PyTree, grads: PyTree, state: dict, lr, config: AdamWConfig = AdamWConfig()
+) -> tuple[PyTree, dict]:
+    count = state["count"] + 1
+    mu = jax.tree.map(lambda m, g: config.b1 * m + (1 - config.b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: config.b2 * v + (1 - config.b2) * g * g, state["nu"], grads)
+    c1 = 1 - config.b1 ** count.astype(jnp.float32)
+    c2 = 1 - config.b2 ** count.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / c1
+        vhat = v / c2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + config.eps) + config.weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}

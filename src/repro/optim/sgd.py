@@ -1,0 +1,40 @@
+"""SGD (optionally with momentum) over parameter pytrees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    nesterov: bool = False
+
+
+def sgd_init(params: PyTree, config: SGDConfig = SGDConfig()) -> PyTree:
+    if config.momentum == 0.0:
+        return ()
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd_step(
+    params: PyTree, grads: PyTree, opt_state: PyTree, lr, config: SGDConfig = SGDConfig()
+) -> tuple[PyTree, PyTree]:
+    if config.weight_decay:
+        grads = jax.tree.map(lambda g, p: g + config.weight_decay * p, grads, params)
+    if config.momentum == 0.0:
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new_params, opt_state
+    new_state = jax.tree.map(lambda m, g: config.momentum * m + g, opt_state, grads)
+    if config.nesterov:
+        update = jax.tree.map(lambda m, g: config.momentum * m + g, new_state, grads)
+    else:
+        update = new_state
+    new_params = jax.tree.map(lambda p, u: p - lr * u, params, update)
+    return new_params, new_state

@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    HW,
+    analyze_compiled,
+    roofline_terms,
+    model_flops,
+)
+
+__all__ = ["HW", "analyze_compiled", "roofline_terms", "model_flops"]

@@ -1,0 +1,246 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), in seconds:
+    compute    = FLOPs_per_device / peak_FLOP/s
+    memory     = HBM_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+Sources:
+ * `compiled.cost_analysis()` for flops / bytes — but XLA counts a `while`
+   body ONCE, so we re-derive flops by walking the post-optimisation HLO:
+   every `dot` is priced as 2 * prod(out_shape) * prod(lhs_contracting_dims)
+   and scaled by the product of enclosing-loop `known_trip_count`s.
+ * collective bytes: output-shape bytes of every all-reduce / all-gather /
+   reduce-scatter / all-to-all / collective-permute, trip-scaled the same way
+   (all-reduce counted at 2x output bytes — reduce + broadcast phases).
+ * memory bytes: cost_analysis "bytes accessed" scaled by the dot-flops
+   ratio (documented approximation), plus memory_analysis() peak stats.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+
+V5E = HW()
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-+]+)\s*\(.*->.*\{\s*$")
+# shape may be a tuple containing /*index=N*/ comments (hence no [^=] class);
+# the op is the first bare `word(` after the shape.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-+]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_TRIP_RE = re.compile(r'known_trip_count["\s:{]+n["\s:]+\"?(\d+)')
+_CALL_SINGLE_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-+]+)")
+_CALL_MULTI_RE = re.compile(r"(?:branch_computations|called_computations)=\{([^}]*)\}")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over all tensors appearing in a (possibly tuple) shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def parse_hlo(text: str) -> dict:
+    """Parse optimized HLO into {computation: [instr dicts]}, shape table,
+    call edges and while trip counts."""
+    comps: dict[str, list[dict]] = defaultdict(list)
+    shapes: dict[str, str] = {}
+    current = None
+    entry = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if ("{" in line and "->" in line) else None
+        if hdr and not line.startswith(" "):
+            current = hdr.group(1)
+            if line.startswith("ENTRY"):
+                entry = current
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op, rest = m.groups()
+        shapes[name] = shape_str.strip()
+        instr = {"name": name, "shape": shape_str.strip(), "op": op, "rest": rest,
+                 "line": line}
+        comps[current].append(instr)
+    return {"comps": dict(comps), "shapes": shapes, "entry": entry}
+
+
+def _instr_callees(instr) -> list[str]:
+    names = [m.group(1) for m in _CALL_SINGLE_RE.finditer(instr["line"])]
+    for m in _CALL_MULTI_RE.finditer(instr["line"]):
+        for nm in m.group(1).split(","):
+            nm = nm.strip().lstrip("%")
+            if nm:
+                names.append(nm)
+    return names
+
+
+def _dot_flops(instr, shapes) -> float:
+    out = _shape_dims(instr["shape"])
+    cd = _CDIM_RE.search(instr["line"])
+    # lhs operand name = first %ref in the args
+    args = re.findall(r"%([\w.\-+]+)", instr["rest"])
+    contract = 1
+    if cd and args:
+        lhs_shape = _shape_dims(shapes.get(args[0], ""))
+        for d in cd.group(1).split(","):
+            if d and int(d) < len(lhs_shape):
+                contract *= lhs_shape[int(d)]
+    return 2.0 * float(np.prod(out, dtype=np.float64)) * contract if out else 0.0
+
+
+def _conv_flops(instr, shapes) -> float:
+    # convolution: 2 * prod(out) * prod(kernel spatial+input-feature dims)
+    args = re.findall(r"%([\w.\-+]+)", instr["rest"])
+    out = _shape_dims(instr["shape"])
+    if len(args) < 2 or not out:
+        return 0.0
+    rhs = _shape_dims(shapes.get(args[1], ""))
+    k = float(np.prod(rhs, dtype=np.float64)) / max(out[-1] if out else 1, 1)
+    return 2.0 * float(np.prod(out, dtype=np.float64)) * max(k, 1.0)
+
+
+def analyze_hlo_text(text: str) -> dict:
+    """Trip-scaled dot flops + collective bytes by op type (per device)."""
+    parsed = parse_hlo(text)
+    comps, shapes, entry = parsed["comps"], parsed["shapes"], parsed["entry"]
+
+    # while trip counts: map body/cond computation -> trip count
+    trip_of_callee: dict[str, float] = {}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins["op"] == "while":
+                t = _TRIP_RE.search(ins["line"])
+                trip = float(t.group(1)) if t else 1.0
+                for callee in _instr_callees(ins):
+                    trip_of_callee[callee] = trip
+
+    flops = 0.0
+    coll = defaultdict(float)
+    visited_stack: list[str] = []
+
+    def visit(cname: str, mult: float):
+        if cname not in comps or cname in visited_stack:
+            return
+        visited_stack.append(cname)
+        for ins in comps[cname]:
+            op = ins["op"]
+            if op == "dot":
+                nonlocal flops
+                flops += mult * _dot_flops(ins, shapes)
+            elif op == "convolution":
+                flops += mult * _conv_flops(ins, shapes)
+            elif any(op.startswith(c) for c in _COLLECTIVES):
+                base = _shape_bytes(ins["shape"])
+                key = next(c for c in _COLLECTIVES if op.startswith(c))
+                factor = 2.0 if key == "all-reduce" else 1.0
+                coll[key] += mult * base * factor
+            callees = _instr_callees(ins)
+            for callee in callees:
+                m2 = mult * trip_of_callee.get(callee, 1.0) if op == "while" else mult
+                visit(callee, m2)
+        visited_stack.pop()
+
+    if entry:
+        visit(entry, 1.0)
+    return {
+        "dot_flops_per_device": flops,
+        "collective_bytes_per_device": dict(coll),
+        "collective_total_bytes": float(sum(coll.values())),
+    }
+
+
+def analyze_compiled(compiled, *, hints: dict | None = None) -> dict:
+    """Full record for one compiled lowering (per-device numbers)."""
+    ca = compiled.cost_analysis()
+    raw_flops = float(ca.get("flops", 0.0) or 0.0)
+    raw_bytes = float(ca.get("bytes accessed", 0.0) or 0.0)
+    hlo = analyze_hlo_text(compiled.as_text())
+    scaled_flops = hlo["dot_flops_per_device"]
+    scale = scaled_flops / raw_flops if raw_flops > 0 and scaled_flops > raw_flops else 1.0
+    try:
+        mem = compiled.memory_analysis()
+        arg = int(getattr(mem, "argument_size_in_bytes", 0))
+        out = int(getattr(mem, "output_size_in_bytes", 0))
+        tmp = int(getattr(mem, "temp_size_in_bytes", 0))
+        alias = int(getattr(mem, "alias_size_in_bytes", 0))  # donated buffers
+        mem_stats = {
+            "argument_bytes": arg,
+            "output_bytes": out,
+            "temp_bytes": tmp,
+            "alias_bytes": alias,
+            # aliased (donated) buffers appear in both arg and out: count once
+            "peak_bytes": arg + tmp + out - alias,
+        }
+    except Exception:  # pragma: no cover
+        mem_stats = {}
+    return {
+        "raw_flops_per_device": raw_flops,
+        "dot_flops_per_device": scaled_flops,
+        "raw_bytes_per_device": raw_bytes,
+        "scaled_bytes_per_device": raw_bytes * scale,
+        "loop_scale_ratio": scale,
+        "collectives": hlo["collective_bytes_per_device"],
+        "collective_bytes_per_device": hlo["collective_total_bytes"],
+        "memory": mem_stats,
+        **({"hints": hints} if hints else {}),
+    }
+
+
+def roofline_terms(record: dict, *, hw: HW = V5E) -> dict:
+    """Seconds per term + the dominant bottleneck."""
+    compute = record["dot_flops_per_device"] / hw.peak_flops
+    memory = record["scaled_bytes_per_device"] / hw.hbm_bw
+    collective = record["collective_bytes_per_device"] / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    return {**terms, "bound": dom.replace("_s", "")}
+
+
+def model_flops(param_count: int, tokens: float, *, kind: str = "train") -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D forward-only."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * float(param_count) * float(tokens)

@@ -1,0 +1,3 @@
+from repro.sharding.specs import param_pspecs, batch_pspec, cache_pspecs, named_shardings
+
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "named_shardings"]

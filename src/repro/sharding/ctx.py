@@ -1,0 +1,31 @@
+"""Ambient mesh for model-interior manual collectives (shard_map regions).
+
+Model code (`models/ffn.py`) is mesh-agnostic by default (GSPMD infers all
+communication). The shard_map MoE interior needs the concrete Mesh object at
+trace time; the launch layer publishes it here around `.lower()` instead of
+threading a `mesh` argument through every block signature.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from jax.sharding import Mesh
+
+_STACK: list[Mesh] = []
+
+
+@contextlib.contextmanager
+def model_mesh(mesh: Mesh | None):
+    """Publish `mesh` to model code for the duration of a trace/lowering."""
+    if mesh is None:
+        yield
+        return
+    _STACK.append(mesh)
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def current_mesh() -> Mesh | None:
+    return _STACK[-1] if _STACK else None

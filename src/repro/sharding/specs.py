@@ -1,0 +1,163 @@
+"""Partition rules: parameter / activation / cache PartitionSpecs.
+
+Tensor-parallel convention (the `model` mesh axis):
+  * column-parallel in-projections (wq/wk/wv, FFN in/gate, SSD/LRU in-proj):
+    P(None, "model") — output features sharded, no comm on entry;
+  * row-parallel out-projections (wo, FFN out): P("model", None) — contraction
+    over the sharded dim, XLA inserts the block all-reduce;
+  * MoE expert tensors (E, d, f): experts sharded on "model" (expert parallel);
+  * embedding (V, d): P(None, "model") (gather stays local);
+    lm_head (d, V): P(None, "model") (vocab-sharded logits, small final
+    all-reduce inside the softmax).
+  * 1-D vectors (norm scales, biases, decay rates): replicated.
+
+Leaves with extra leading dims (scan-stacked superblocks, Fed-CHS chain dim)
+get Nones prepended — except the chain dim, which the launch layer maps to
+"pod" explicitly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_ROW_PARALLEL = {"wo", "w_out"}
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "w_gate", "w_in", "wq_b", "wkv_b", "w_x", "w_r", "w_i",
+    "conv_w", "projector", "lm_head", "embed", "proj", "wq_a", "wkv_a",
+}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(last.key) if hasattr(last, "key") else str(last)
+
+
+def _in_moe_ffn(path) -> bool:
+    names = [str(p.key) for p in path if hasattr(p, "key")]
+    return "ffn" in names
+
+
+def _base_spec(path, leaf, num_experts: int, expert_axis: str = "model") -> P:
+    """Trailing-dims spec for the *logical* parameter (stacking dims excluded)."""
+    name = _leaf_name(path)
+    if leaf.ndim <= 1:
+        return P()
+    if (
+        num_experts
+        and _in_moe_ffn(path)
+        and name in ("w_gate", "w_in", "w_out")
+        and leaf.ndim >= 3
+        and leaf.shape[-3] == num_experts
+    ):
+        ax = ("data", "model") if expert_axis == "both" else expert_axis
+        return P(ax, None, None)  # expert parallel (E, d, f)
+    if name in _ROW_PARALLEL:
+        return P("model", None)
+    if name in _COL_PARALLEL:
+        return P(None, "model")
+    return P(None, None)
+
+
+def param_pspecs(params: PyTree, *, num_experts: int = 0,
+                 mesh: Mesh | None = None, expert_axis: str = "model") -> PyTree:
+    """PartitionSpec tree matching `params` (handles scan-stacked leading dims).
+
+    Specs are aligned to the TRAILING dims; leading stacking dims (scanned
+    superblocks, FL chains) are replicated unless the caller maps them.
+    When `mesh` is given, any sharded dim that does not divide its axis size
+    falls back to replicated (e.g. vocab 50280 on a 16-way model axis)."""
+
+    def spec(path, leaf):
+        base = _base_spec(path, leaf, num_experts, expert_axis)
+        extra = leaf.ndim - len(base)
+        if extra > 0:
+            base = P(*([None] * extra), *base)
+        elif extra < 0:
+            base = P(*base[-leaf.ndim:]) if leaf.ndim else P()
+        if mesh is not None:
+            dims = []
+            for i, ax in enumerate(base):
+                if ax is None:
+                    dims.append(None)
+                    continue
+                n = 1
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    n *= mesh.shape[a]
+                dims.append(ax if leaf.shape[i] % n == 0 else None)
+            base = P(*dims)
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_pspec(batch_size: int, mesh: Mesh, rank: int = 2) -> P:
+    """Shard the batch dim over as many data-ish axes as divide it."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    use = []
+    div = 1
+    for a in axes:
+        n = mesh.shape[a]
+        if batch_size % (div * n) == 0:
+            use.append(a)
+            div *= n
+    first = tuple(use) if use else None
+    return P(first, *([None] * (rank - 1)))
+
+
+def cache_pspecs(caches: PyTree, batch_size: int, mesh: Mesh) -> PyTree:
+    """KV/state caches: batch dim sharded like the batch, kv-head/state dims
+    sharded on "model" where they divide; scan-stacked leading dim replicated.
+
+    Cache layouts (see models/*): attn k/v (L?, B, S, Hkv, hd); mla c_kv
+    (L?, B, S, r); ssd state (L?, B, H, P, N); conv (L?, B, K, C);
+    rglru h (L?, B, W); len (L?, B).
+    """
+    bspec = batch_pspec(batch_size, mesh, rank=1)
+    baxes = bspec[0]
+
+    n_model = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        # find batch dim: first dim whose size == batch_size
+        dims: list = [None] * leaf.ndim
+        bdim = None
+        for i, s in enumerate(leaf.shape):
+            if s == batch_size:
+                dims[i] = baxes
+                bdim = i
+                break
+        if name in ("k", "v") and leaf.ndim >= 4:
+            hkv = leaf.shape[-2]
+            sdim = leaf.ndim - 3  # (..., B, S, Hkv, hd) -> S
+            if n_model > 1 and hkv % n_model == 0:
+                dims[-2] = "model"  # kv-head parallel
+            elif n_model > 1 and leaf.shape[sdim] % n_model == 0 and sdim != bdim:
+                dims[sdim] = "model"  # sequence-parallel cache (flash-decode style)
+        elif name == "c_kv" and leaf.ndim >= 3:
+            sdim = leaf.ndim - 2  # (..., B, S, r) -> S
+            if n_model > 1 and leaf.shape[sdim] % n_model == 0 and sdim != bdim:
+                dims[sdim] = "model"
+        elif name in ("state", "h", "conv", "cross_k", "cross_v"):
+            tgt = leaf.ndim - 2 if name in ("cross_k", "cross_v") else leaf.ndim - 1
+            if (
+                n_model > 1
+                and leaf.shape[tgt] % n_model == 0
+                and leaf.shape[tgt] >= n_model
+                and tgt != bdim
+            ):
+                dims[tgt] = "model"
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def named_shardings(mesh: Mesh, pspecs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,16 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_task():
+    """Shared small FL task: synthetic MNIST, 20 clients, 4 clusters."""
+    from repro.core.simulation import FLTask
+    from repro.data import assign_clusters, dirichlet_partition, make_dataset
+    from repro.models.classifier import make_classifier
+
+    ds = make_dataset("mnist", train_size=3000, test_size=600, seed=0)
+    clients = dirichlet_partition(ds.train_y, 20, 0.6, seed=0)
+    clusters = assign_clusters(20, 4, seed=0)
+    model = make_classifier("mlp", "mnist", ds.spec.image_shape, 10)
+    return FLTask(model, ds, clients, clusters, batch_size=32, seed=0)

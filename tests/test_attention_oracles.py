@@ -1,0 +1,192 @@
+"""Numeric oracles: blockwise attention, SSD chunking, RG-LRU scan, MoE paths.
+
+Each optimised implementation is checked against a naive reference.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.ffn import init_moe, moe_forward
+from repro.models.rglru import _lru_scan
+from repro.models.ssd import ssd_chunked, ssd_decode_step
+
+
+def naive_attention(q, k, v, *, causal=True, window=None):
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, T, Hkv, g, hd) / math.sqrt(hd)
+    s = jnp.einsum("bthgd,bshd->bthgs", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bthgs,bshd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, v.shape[-1])
+
+
+@pytest.mark.parametrize("T,kv_block", [(64, 16), (100, 32), (128, 128), (37, 64)])
+@pytest.mark.parametrize("H,Hkv", [(4, 4), (8, 2), (6, 1)])
+def test_blockwise_matches_naive(T, kv_block, H, Hkv):
+    key = jax.random.PRNGKey(T * H)
+    B, hd = 2, 16
+    q = jax.random.normal(key, (B, T, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hkv, hd))
+    out = blockwise_attention(q, k, v, causal=True, kv_block=kv_block)
+    ref = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [4, 16, 33])
+def test_blockwise_sliding_window(window):
+    key = jax.random.PRNGKey(0)
+    B, T, H, hd = 2, 80, 4, 16
+    q = jax.random.normal(key, (B, T, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, hd))
+    out = blockwise_attention(q, k, v, causal=True, window=window, kv_block=32)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_mla_distinct_v_dim():
+    key = jax.random.PRNGKey(3)
+    B, T, H, hd, hdv = 2, 48, 4, 24, 12
+    q = jax.random.normal(key, (B, T, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, hdv))
+    out = blockwise_attention(q, k, v, causal=True, kv_block=16)
+    ref = naive_attention(q, k, v, causal=True)
+    assert out.shape == (B, T, H, hdv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_matches_last_row_of_prefill():
+    """decode_attention(q_T) == full attention's last query row."""
+    key = jax.random.PRNGKey(5)
+    B, S, H, hd = 2, 40, 4, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    full = blockwise_attention(q, k, v, causal=True, kv_block=16)
+    dec = decode_attention(q[:, -1:], k, v, jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]), atol=2e-5)
+
+
+# ---------------------------- SSD ----------------------------------------
+
+
+def naive_ssd(x, log_a, Bm, Cm):
+    """Sequential recurrence oracle. x (B,T,H,P), log_a (B,T,H), Bm/Cm (B,T,N)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    S = np.zeros((Bsz, H, P, N), np.float64)
+    ys = []
+    for t in range(T):
+        a = np.exp(np.asarray(log_a[:, t], np.float64))[:, :, None, None]
+        S = a * S + np.einsum(
+            "bhp,bn->bhpn", np.asarray(x[:, t], np.float64), np.asarray(Bm[:, t], np.float64)
+        )
+        ys.append(np.einsum("bhpn,bn->bhp", S, np.asarray(Cm[:, t], np.float64)))
+    return np.stack(ys, axis=1), S
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (64, 16), (64, 64), (48, 16)])
+def test_ssd_chunked_matches_recurrence(T, chunk):
+    key = jax.random.PRNGKey(T + chunk)
+    B, H, P, N = 2, 3, 8, 4
+    x = jax.random.normal(key, (B, T, H, P))
+    log_a = -jax.random.uniform(jax.random.fold_in(key, 1), (B, T, H), minval=0.01, maxval=1.0)
+    Bm = jax.random.normal(jax.random.fold_in(key, 2), (B, T, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 3), (B, T, N))
+    y, S = ssd_chunked(x, log_a, Bm, Cm, chunk=chunk)
+    y_ref, S_ref = naive_ssd(x, log_a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(S), S_ref, atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_decode_continues_prefill_state():
+    key = jax.random.PRNGKey(9)
+    B, T, H, P, N = 1, 16, 2, 4, 4
+    x = jax.random.normal(key, (B, T + 1, H, P))
+    log_a = -jax.random.uniform(jax.random.fold_in(key, 1), (B, T + 1, H), minval=0.1, maxval=1.0)
+    Bm = jax.random.normal(jax.random.fold_in(key, 2), (B, T + 1, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 3), (B, T + 1, N))
+    _, S = ssd_chunked(x[:, :T], log_a[:, :T], Bm[:, :T], Cm[:, :T], chunk=8)
+    y_dec, _ = ssd_decode_step(x[:, T], log_a[:, T], Bm[:, T], Cm[:, T], S)
+    y_ref, _ = naive_ssd(x, log_a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_dec), y_ref[:, T], atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------- RG-LRU -------------------------------------
+
+
+def test_lru_scan_matches_loop():
+    key = jax.random.PRNGKey(11)
+    B, T, W = 2, 33, 8
+    a = jax.random.uniform(key, (B, T, W), minval=0.5, maxval=0.99)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (B, T, W))
+    h_scan = _lru_scan(a, u)
+    h = np.zeros((B, W))
+    for t in range(T):
+        h = np.asarray(a[:, t]) * h + np.asarray(u[:, t])
+        np.testing.assert_allclose(np.asarray(h_scan[:, t]), h, atol=1e-5)
+
+
+# ---------------------------- MoE ----------------------------------------
+
+
+def _moe_cfg(E=4, k=2):
+    return ArchConfig(
+        name="t", family="moe", num_layers=1, d_model=32, num_heads=4, num_kv_heads=4,
+        d_ff=64, vocab_size=128, num_experts=E, experts_per_token=k, dtype="float32",
+    )
+
+
+def test_moe_dense_topk_only_uses_topk_experts():
+    cfg = _moe_cfg()
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    y, aux = moe_forward(cfg, p, x, method="dense_topk")
+    assert y.shape == x.shape and float(aux) >= 0
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_moe_expert_choice_shapes_and_capacity():
+    cfg = _moe_cfg(E=4, k=2)
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    y, aux = moe_forward(cfg, p, x, method="expert_choice")
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_moe_methods_agree_when_capacity_covers_everything():
+    """With E=1 expert and k=1, both dispatch methods are exact and equal."""
+    cfg = _moe_cfg(E=1, k=1)
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    y1, _ = moe_forward(cfg, p, x, method="dense_topk")
+    y2, _ = moe_forward(cfg, p, x, method="expert_choice")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+
+
+def test_moe_load_balance_loss_penalises_collapse():
+    cfg = _moe_cfg(E=4, k=1)
+    from repro.models.ffn import _load_balance_loss
+
+    uniform = jnp.full((64, 4), 0.25)
+    collapsed = jnp.zeros((64, 4)).at[:, 0].set(1.0)
+    assert float(_load_balance_loss(collapsed, 4)) > float(_load_balance_loss(uniform, 4)) * 3

@@ -1,0 +1,52 @@
+"""Baseline algorithms (FedAvg / WRWGD / Hier-Local-QSGD) run + learn +
+meter the hop types the paper's Fig. 2 compares."""
+import pytest
+
+from repro.core.baselines import (
+    FedAvgConfig,
+    HierLocalQSGDConfig,
+    WRWGDConfig,
+    run_fedavg,
+    run_hier_local_qsgd,
+    run_wrwgd,
+)
+
+
+def test_fedavg_learns_and_uses_ps(small_task):
+    res = run_fedavg(small_task, FedAvgConfig(rounds=8, local_steps=8, eval_every=7))
+    assert res.final_acc() > 0.8
+    assert res.ledger.bits["client_to_ps"] > 0
+    assert res.ledger.bits["es_to_es"] == 0
+
+
+def test_wrwgd_learns_with_single_hop_rounds(small_task):
+    res = run_wrwgd(small_task, WRWGDConfig(rounds=30, local_steps=8, eval_every=29))
+    assert res.final_acc() > 0.75
+    # exactly one client->client model hop per round
+    assert res.ledger.messages["client_to_client"] == 30
+
+
+def test_hier_local_qsgd_learns_and_compresses(small_task):
+    res = run_hier_local_qsgd(
+        small_task, HierLocalQSGDConfig(rounds=3, local_steps=10, local_epochs=5,
+                                        qsgd_levels=16, eval_every=2)
+    )
+    assert res.final_acc() > 0.5
+    assert res.ledger.bits["es_to_ps"] > 0  # still offloads to the PS
+    # quantized uplinks are smaller than the dense broadcasts
+    per_up = res.ledger.bits["client_to_es"] / res.ledger.messages["client_to_es"]
+    per_down = res.ledger.bits["es_to_client"] / res.ledger.messages["es_to_client"]
+    assert per_up < per_down / 4
+
+
+def test_fedchs_beats_baselines_on_es_to_ps_traffic(small_task):
+    """The structural claim: Fed-CHS has zero PS traffic; HFL does not."""
+    from repro.core import FedCHSConfig, run_fed_chs
+
+    chs = run_fed_chs(small_task, FedCHSConfig(rounds=4, local_steps=10, eval_every=100))
+    hlq = run_hier_local_qsgd(
+        small_task, HierLocalQSGDConfig(rounds=1, local_steps=10, local_epochs=5,
+                                        eval_every=100)
+    )
+    assert chs.ledger.bits["es_to_ps"] + chs.ledger.bits["ps_to_es"] == 0
+    assert hlq.ledger.bits["es_to_ps"] + hlq.ledger.bits["ps_to_es"] > 0

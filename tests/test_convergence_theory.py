@@ -1,0 +1,99 @@
+"""Sanity checks on the paper's convergence theory (Thm 4.1 / 4.3) using a
+strongly-convex quadratic where every quantity is analytic.
+
+Setup: f_n(w) = 0.5 ||w - c_n||^2 (L = mu = 1), cluster weights uniform.
+F(w) = 0.5||w||^2 - <w, c_bar> + const, minimiser w* = c_bar.
+"""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import FedCHSScheduler
+from repro.core.topology import make_topology
+from repro.optim.schedules import (
+    nonconvex_schedule,
+    paper_power_schedule,
+    paper_sqrt_schedule,
+    schedule_satisfies_theorem,
+)
+
+
+def _run_quadratic(centers_per_cluster, T, K, eta_fn, d=8, seed=0):
+    """Simulate Fed-CHS on the quadratic with exact gradients."""
+    M = len(centers_per_cluster)
+    topo = make_topology("full", M)
+    sched = FedCHSScheduler(topo, [len(c) for c in centers_per_cluster], initial=0)
+    w = np.zeros(d)
+    m = 0
+    gaps = []
+    w_star = np.mean([c for cl in centers_per_cluster for c in cl], axis=0)
+    for t in range(T):
+        centers = centers_per_cluster[m]
+        for k in range(K):
+            grad = np.mean([w - c for c in centers], axis=0)  # Eq.(5) aggregate
+            w = w - eta_fn(k) * grad
+        m = sched.advance()
+        gaps.append(0.5 * np.linalg.norm(w - w_star) ** 2)
+    return np.array(gaps)
+
+
+def _clusters(M, n_per, hetero, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(M, d)) * hetero
+    return [[base[m] + rng.normal(size=d) * 0.5 for _ in range(n_per)] for m in range(M)]
+
+
+def test_linear_rate_in_T_strongly_convex():
+    """Thm 4.1: optimality gap contracts geometrically in T (up to the
+    heterogeneity floor)."""
+    clusters = _clusters(4, 5, hetero=0.3)
+    K = 20
+    gaps = _run_quadratic(clusters, T=60, K=K, eta_fn=paper_sqrt_schedule(K, L=1.0))
+    # geometric decrease in the early phase, then bounded by the mu*Delta_max
+    # heterogeneity floor (Remark 4.2) — not divergence
+    assert gaps[5] < 0.5 * gaps[0]
+    assert gaps[10] < 0.25 * gaps[0]
+    assert gaps[-1] < 0.05
+
+
+def test_zero_gap_when_clusters_iid():
+    """Remark 4.2: identical cluster distributions => Delta_m == 0 => the gap
+    floor vanishes."""
+    d = 8
+    rng = np.random.default_rng(1)
+    shared = [rng.normal(size=d) for _ in range(6)]
+    clusters_iid = [list(shared) for _ in range(4)]  # same data in every cluster
+    K = 20
+    gaps = _run_quadratic(clusters_iid, T=80, K=K, eta_fn=paper_sqrt_schedule(K, L=1.0))
+    assert gaps[-1] < 1e-8, gaps[-1]
+
+
+def test_heterogeneity_raises_the_floor():
+    K = 10
+    g_small = _run_quadratic(_clusters(4, 5, hetero=0.1), 80, K, paper_sqrt_schedule(K))
+    g_large = _run_quadratic(_clusters(4, 5, hetero=2.0), 80, K, paper_sqrt_schedule(K))
+    assert np.mean(g_large[-20:]) > np.mean(g_small[-20:])
+
+
+def test_power_schedule_converges_faster_in_K():
+    """Remark 4.2 second bullet: eta_k = 1/(2LK^q), q>=2 shrinks the K-dependent
+    residual terms faster. Proxy: the within-round drift is smaller."""
+    clusters = _clusters(4, 5, hetero=1.0)
+    gaps_q2 = _run_quadratic(clusters, 40, 20, paper_power_schedule(20, q=2.0))
+    # with q=2, per-round steps are tiny -> near-zero drift; gap stays near init
+    # while sqrt schedule moves it: we just verify stability (no divergence)
+    assert np.all(np.isfinite(gaps_q2))
+    assert gaps_q2[-1] <= gaps_q2[0] * 1.01
+
+
+def test_schedule_premises():
+    for K in (5, 20, 100):
+        assert schedule_satisfies_theorem(K, paper_sqrt_schedule(K), 1.0, strongly_convex=True)
+        assert schedule_satisfies_theorem(K, paper_power_schedule(K, 2.0), 1.0,
+                                          strongly_convex=True)
+    with pytest.raises(AssertionError):
+        nonconvex_schedule(100, q1=0.5, q2=1.8)  # violates 1+q1>q2
+
+
+def test_nonconvex_schedule_valid_region():
+    s = nonconvex_schedule(400, q1=0.5, q2=0.5, L=1.0)
+    assert s(0) == pytest.approx(1.0 / 20.0)

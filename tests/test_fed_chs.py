@@ -1,0 +1,67 @@
+"""Integration tests for the Fed-CHS protocol (Algorithm 1)."""
+import numpy as np
+import pytest
+
+from repro.core import FedCHSConfig, run_fed_chs
+from repro.core.ledger import dense_message_bits, qsgd_message_bits
+from repro.optim.schedules import paper_sqrt_schedule, schedule_satisfies_theorem
+
+
+def test_fed_chs_learns(small_task):
+    res = run_fed_chs(small_task, FedCHSConfig(rounds=25, local_steps=10, eval_every=8, seed=0))
+    assert res.test_acc[0] < 0.5
+    assert res.final_acc() > 0.9, res.test_acc
+    assert not np.isnan(res.train_loss).any()
+
+
+def test_communication_accounting_matches_paper_formula(small_task):
+    """§3.2: <= T*K*Q*N_max uplink bits, exactly T*Q bits ES->ES."""
+    T, K = 12, 8
+    res = run_fed_chs(small_task, FedCHSConfig(rounds=T, local_steps=K, eval_every=100))
+    d = small_task.num_params()
+    Q = dense_message_bits(d)
+    n_max = max(len(m) for m in small_task.cluster_members)
+    assert res.ledger.bits["es_to_es"] == T * Q
+    assert res.ledger.bits["client_to_es"] <= T * K * Q * n_max
+    assert res.ledger.bits["es_to_ps"] == 0  # no PS anywhere
+    assert res.ledger.bits["client_to_ps"] == 0
+
+
+def test_qsgd_compression_reduces_bits_and_still_learns(small_task):
+    dense = run_fed_chs(small_task, FedCHSConfig(rounds=12, local_steps=6, eval_every=100))
+    comp = run_fed_chs(
+        small_task,
+        FedCHSConfig(rounds=12, local_steps=6, qsgd_levels=16, eval_every=11),
+    )
+    assert comp.ledger.bits["client_to_es"] < 0.25 * dense.ledger.bits["client_to_es"]
+    assert comp.final_acc() > 0.6
+
+
+def test_local_epochs_reduce_interactions(small_task):
+    """Fig. 2: E=5 means K/E interactions instead of K."""
+    r1 = run_fed_chs(small_task, FedCHSConfig(rounds=5, local_steps=10, local_epochs=1,
+                                              eval_every=100))
+    r5 = run_fed_chs(small_task, FedCHSConfig(rounds=5, local_steps=10, local_epochs=5,
+                                              eval_every=100))
+    assert r5.ledger.messages["client_to_es"] * 5 == r1.ledger.messages["client_to_es"]
+
+
+def test_deterministic_given_seed(small_task):
+    cfg = FedCHSConfig(rounds=6, local_steps=5, eval_every=5, seed=3)
+    a = run_fed_chs(small_task, cfg)
+    b = run_fed_chs(small_task, cfg)
+    assert a.test_acc == b.test_acc
+
+
+def test_theorem_step_size_premises():
+    K = 20
+    assert schedule_satisfies_theorem(K, paper_sqrt_schedule(K, L=1.0), 1.0,
+                                      strongly_convex=True)
+    assert schedule_satisfies_theorem(K, paper_sqrt_schedule(K, L=2.0), 2.0,
+                                      strongly_convex=True)
+
+
+def test_qsgd_message_bits_formula():
+    d = 100_000
+    assert qsgd_message_bits(d, levels=1) < qsgd_message_bits(d, levels=127)
+    assert qsgd_message_bits(d, levels=15) < dense_message_bits(d) / 5

@@ -1,0 +1,60 @@
+"""Flash-attention Pallas kernel vs the pure-jnp oracles (shape/dtype sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import blockwise_attention
+
+
+@pytest.mark.parametrize("T,S", [(128, 128), (64, 256), (200, 200)])
+@pytest.mark.parametrize("H,Hkv", [(4, 4), (8, 2)])
+def test_flash_matches_blockwise(T, S, H, Hkv):
+    key = jax.random.PRNGKey(T + S + H)
+    B, hd = 2, 32
+    q = jax.random.normal(key, (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=64)
+    ref = blockwise_attention(q, k, v, causal=True, kv_block=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_sliding_window(window):
+    key = jax.random.PRNGKey(7)
+    B, T, H, hd = 1, 192, 2, 32
+    q = jax.random.normal(key, (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, block_q=64)
+    ref = blockwise_attention(q, k, v, causal=True, window=window, kv_block=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    key = jax.random.PRNGKey(1)
+    B, T, H, hd = 1, 64, 2, 64
+    q = jax.random.normal(key, (B, T, H, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, hd)).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64)
+    assert out.dtype == dtype and out.shape == q.shape
+    ref = blockwise_attention(q, k, v, causal=True)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+def test_flash_nonaligned_shapes_padded():
+    key = jax.random.PRNGKey(2)
+    B, T, S, H, hd = 1, 50, 77, 2, 32  # neither T nor S aligned
+    q = jax.random.normal(key, (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=64)
+    ref = blockwise_attention(q, k, v, causal=True, kv_block=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,33 @@
+"""Production launchers (launch/train.py, launch/serve.py) — execute-mode
+smoke tests in subprocesses (the launchers set XLA_FLAGS before jax init)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=240):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-m", *args], env=env, cwd=ROOT,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_execute_smoke():
+    r = _run(["repro.launch.train", "--arch", "qwen3-0.6b", "--execute",
+              "--rounds", "4", "--batch", "2", "--seq", "32"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "loss" in r.stdout and "done" in r.stdout
+
+
+def test_serve_execute_smoke():
+    r = _run(["repro.launch.serve", "--arch", "qwen3-0.6b", "--execute",
+              "--requests", "4", "--slots", "2", "--prompt-len", "4",
+              "--max-new", "6"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "tok/s" in r.stdout
+    # every request produced output
+    assert "4 requests over 2 slots" in r.stdout

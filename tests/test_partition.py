@@ -1,0 +1,69 @@
+"""Dirichlet non-IID partitioner: correctness + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (
+    assign_clusters,
+    dirichlet_partition,
+    iid_partition,
+    label_histogram,
+    partial_heterogeneity_partition,
+)
+
+
+def _labels(n=1000, classes=10, seed=0):
+    return np.random.default_rng(seed).integers(0, classes, size=n).astype(np.int64)
+
+
+@given(
+    n_clients=st.integers(2, 20),
+    alpha=st.floats(0.05, 10.0),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_partition_is_exact_cover(n_clients, alpha, seed):
+    labels = _labels(seed=seed % 7)
+    clients = dirichlet_partition(labels, n_clients, alpha, seed=seed)
+    all_idx = np.concatenate([c.indices for c in clients])
+    assert len(all_idx) == len(labels)
+    assert len(np.unique(all_idx)) == len(labels)  # disjoint + complete
+
+
+def test_smaller_alpha_is_more_heterogeneous():
+    labels = _labels(n=20_000)
+    h_low = label_histogram(labels, dirichlet_partition(labels, 10, 0.1, seed=0), 10)
+    h_high = label_histogram(labels, dirichlet_partition(labels, 10, 100.0, seed=0), 10)
+
+    def skew(h):
+        p = h / np.maximum(h.sum(axis=1, keepdims=True), 1)
+        return np.mean(np.std(p, axis=1))
+
+    assert skew(h_low) > 2 * skew(h_high)
+
+
+def test_iid_partition_balanced():
+    labels = _labels()
+    clients = iid_partition(labels, 10)
+    sizes = [c.size for c in clients]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_assign_clusters_covers_all_clients():
+    members = assign_clusters(100, 10, seed=0)
+    flat = sorted(c for m in members for c in m)
+    assert flat == list(range(100))
+    assert all(8 <= len(m) <= 12 for m in members)
+
+
+def test_partial_heterogeneity_clusters_are_iid():
+    """Fig. 4 mode: cluster-level label dists must be near-uniform even though
+    client-level dists are skewed."""
+    labels = _labels(n=40_000)
+    clients, members = partial_heterogeneity_partition(labels, 40, 4, alpha=0.1, seed=0)
+    hist = label_histogram(labels, clients, 10)
+    cluster_hist = np.stack([hist[m].sum(axis=0) for m in members])
+    p = cluster_hist / cluster_hist.sum(axis=1, keepdims=True)
+    assert np.abs(p - 0.1).max() < 0.02  # clusters ~ global distribution
+    client_p = hist / np.maximum(hist.sum(axis=1, keepdims=True), 1)
+    assert np.std(client_p, axis=1).mean() > 0.05  # clients still skewed

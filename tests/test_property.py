@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import FedCHSScheduler
+from repro.core.topology import make_topology, random_sparse
+from repro.kernels.ops import qsgd_roundtrip
+from repro.utils import tree_weighted_sum, tree_sq_norm
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(3, 16))
+@settings(max_examples=20, deadline=None)
+def test_scheduler_no_starvation(seed, n):
+    """Invariant of the 2-step rule: every ES is visited regularly (no
+    starvation). Note a line/star graph forces hub nodes to be visited ~2x
+    more often than leaves, so counts are NOT balanced in general — the
+    guarantee is a lower bound on every node's visit rate."""
+    topo = random_sparse(n, max_degree=3, seed=seed)
+    sizes = list(np.random.default_rng(seed).integers(1, 100, size=n))
+    sched = FedCHSScheduler(topo, sizes, initial=0)
+    T = 30 * n
+    for _ in range(T):
+        sched.advance()
+    counts = sched.state.visit_counts
+    assert counts.min() >= max(1, T // (10 * n))  # visited at a steady rate
+
+
+@given(
+    weights=st.lists(st.floats(0.01, 1.0), min_size=2, max_size=6),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=20, deadline=None)
+def test_weighted_sum_linearity(weights, seed):
+    """Eq.(5) aggregation is linear: agg(a*x) == a*agg(x)."""
+    key = jax.random.PRNGKey(seed)
+    n = len(weights)
+    trees = [
+        {"w": jax.random.normal(jax.random.fold_in(key, i), (4, 3))} for i in range(n)
+    ]
+    w = np.asarray(weights, np.float32)
+    agg = tree_weighted_sum(trees, w)
+    agg2 = tree_weighted_sum([jax.tree.map(lambda x: 2.0 * x, t) for t in trees], w)
+    np.testing.assert_allclose(np.asarray(agg2["w"]), 2 * np.asarray(agg["w"]), rtol=1e-5)
+
+
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_qsgd_scale_equivariance(scale, seed):
+    """QSGD is positively homogeneous: Q(a*v) == a*Q(v) for a>0 (same draw)."""
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (2048,))
+    q1 = qsgd_roundtrip(v, jax.random.PRNGKey(seed + 1), s=16)
+    q2 = qsgd_roundtrip(v * scale, jax.random.PRNGKey(seed + 1), s=16)
+    np.testing.assert_allclose(np.asarray(q2), np.asarray(q1) * scale, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_qsgd_never_increases_block_norm_by_more_than_bound(seed):
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (4096,))
+    out = qsgd_roundtrip(v, jax.random.fold_in(key, 1), s=16)
+    # each reconstructed entry is at most the block norm
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.linalg.norm(v)) + 1e-5
+
+
+@given(
+    kind=st.sampled_from(["ring", "line", "star", "full", "random_sparse"]),
+    n=st.integers(2, 12),
+    seed=st.integers(0, 20),
+)
+@settings(max_examples=30, deadline=None)
+def test_all_topologies_connected_and_symmetric(kind, n, seed):
+    topo = make_topology(kind, n, seed=seed)
+    topo.validate()
+    assert topo.is_connected()
+
+
+@given(b=st.integers(1, 4), t=st.integers(1, 32), seed=st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_blockwise_attention_rowsums(b, t, seed):
+    """Softmax invariance: with v == ones, attention output is exactly ones."""
+    from repro.models.attention import blockwise_attention
+
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (b, t, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, 2, 8))
+    v = jnp.ones((b, t, 2, 8))
+    out = blockwise_attention(q, k, v, causal=True, kv_block=16)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)

@@ -1,0 +1,75 @@
+"""Unit tests: ES topologies + the paper's 2-step next-cluster rule."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import FedCHSScheduler, RandomWalkScheduler, RingScheduler
+from repro.core.topology import make_topology, random_sparse
+
+
+@pytest.mark.parametrize("kind", ["ring", "line", "star", "full", "random_sparse"])
+@pytest.mark.parametrize("n", [2, 3, 10, 17])
+def test_topologies_valid_and_connected(kind, n):
+    topo = make_topology(kind, n)
+    topo.validate()
+    assert topo.is_connected()
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_random_sparse_degree_cap(seed):
+    topo = random_sparse(12, max_degree=3, seed=seed)
+    assert max(topo.degree(m) for m in range(12)) <= 3
+    assert topo.is_connected()
+
+
+def test_two_step_rule_least_traversed():
+    """Step 1: the scheduler must always pick among least-visited neighbors."""
+    topo = make_topology("full", 5)
+    sched = FedCHSScheduler(topo, [10, 20, 30, 40, 50], initial=0)
+    for _ in range(25):
+        cur = sched.state.current
+        counts = sched.state.visit_counts.copy()  # pre-advance snapshot
+        nxt = sched.advance()
+        nbrs = topo.neighbors(cur)
+        assert counts[nxt] == min(counts[m] for m in nbrs)
+
+
+def test_two_step_rule_tie_break_by_dataset_size():
+    """Step 2: ties broken by largest cluster dataset."""
+    topo = make_topology("full", 4)
+    sizes = [10, 99, 50, 70]
+    sched = FedCHSScheduler(topo, sizes, initial=0)
+    # all neighbors (1,2,3) have count 0 -> pick the largest dataset: node 1
+    assert sched.peek() == 1
+
+
+def test_scheduler_covers_all_clusters():
+    """The visit-count rule drives the walk to cover every ES (paper's goal:
+    'cover a broader range of dataset')."""
+    for seed in range(4):
+        topo = make_topology("random_sparse", 10, seed=seed)
+        sched = FedCHSScheduler(topo, list(range(1, 11)), initial=0)
+        order = sched.schedule(60)
+        assert set(order) == set(range(10)), f"seed {seed}: {sorted(set(order))}"
+
+
+def test_schedule_replay_is_pure():
+    topo = make_topology("ring", 6)
+    sched = FedCHSScheduler(topo, [1] * 6, initial=2)
+    a = sched.schedule(20)
+    b = sched.schedule(20)
+    assert a == b
+
+
+def test_ring_scheduler_fixed_order():
+    s = RingScheduler(4, initial=0)
+    assert [s.advance() for _ in range(6)] == [1, 2, 3, 0, 1, 2]
+
+
+def test_random_walk_stays_on_graph():
+    topo = make_topology("random_sparse", 8, seed=1)
+    s = RandomWalkScheduler(topo, initial=0, seed=0)
+    prev = 0
+    for _ in range(50):
+        nxt = s.advance()
+        assert nxt in topo.neighbors(prev)
+        prev = nxt
