@@ -11,12 +11,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (hours on CPU); default is reduced")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig2,fig3,fig4,kernels,roofline")
+                    help="comma list: table1,fig2,fig3,fig4,kernels,roofline,engine")
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import fig2_comm, fig3_hparams, fig4_partial_het, kernels_micro, roofline
-    from benchmarks import table1_accuracy
+    from benchmarks import engine_speedup, fig2_comm, fig3_hparams, fig4_partial_het
+    from benchmarks import kernels_micro, roofline, table1_accuracy
 
     suites = {
         "table1": table1_accuracy.run,
@@ -25,6 +25,7 @@ def main() -> None:
         "fig4": fig4_partial_het.run,
         "kernels": kernels_micro.run,
         "roofline": roofline.run,
+        "engine": engine_speedup.run,
     }
     selected = args.only.split(",") if args.only else list(suites)
 

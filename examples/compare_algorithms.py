@@ -1,10 +1,13 @@
 """Fed-CHS vs the paper's three baselines on one non-IID task: accuracy AND
-communication cost side-by-side (the paper's Table 1 + Fig. 2 in miniature).
+communication cost side-by-side (the paper's Table 1 + Fig. 2 in miniature),
+plus a Fed-CHS arm over the Top-K sparsifying channel — a compression scheme
+the paper never ran, enabled for free by the pluggable channel stack.
 
   PYTHONPATH=src python examples/compare_algorithms.py [--lam 0.3]
 """
 import argparse
 
+from repro.comm import TopKChannel
 from repro.core import FedCHSConfig, FLTask, run_fed_chs
 from repro.core.baselines import (
     FedAvgConfig, HierLocalQSGDConfig, WRWGDConfig,
@@ -33,6 +36,10 @@ def main():
         "WRWGD": run_wrwgd(task, WRWGDConfig(rounds=48, local_steps=10, eval_every=12)),
         "Hier-Local-QSGD": run_hier_local_qsgd(
             task, HierLocalQSGDConfig(rounds=4, local_steps=10, local_epochs=5, eval_every=1)
+        ),
+        "Fed-CHS (Top-5%)": run_fed_chs(
+            task, FedCHSConfig(rounds=24, local_steps=10, local_epochs=5, eval_every=6,
+                               channel=TopKChannel(0.05))
         ),
     }
     print(f"\n{args.dataset}/{args.model}, Dirichlet({args.lam}) — 20 clients, 5 ES")

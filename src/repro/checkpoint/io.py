@@ -30,7 +30,7 @@ def _path_str(path) -> str:
 
 def save_pytree(path: str, tree: PyTree) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {}
     order = []
     for keypath, leaf in flat:
@@ -50,7 +50,7 @@ def save_pytree(path: str, tree: PyTree) -> None:
 def load_pytree(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of `like` (names must match)."""
     with np.load(path) as data:
-        flat, treedef = jax.tree.flatten_with_path(like)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
         for keypath, leaf in flat:
             name = _path_str(keypath)

@@ -1,17 +1,32 @@
-"""Communication layer: the QSGD lossy channel (Pallas-backed) + bit accounting.
+"""Communication layer: pluggable lossy channels (Pallas-backed QSGD, Top-K,
+dense) + bit-exact accounting.
 
-Re-exports the kernel wrappers so higher layers depend on `repro.comm`,
-not on kernel internals.
+Re-exports the channel abstraction and kernel wrappers so higher layers
+depend on `repro.comm`, not on kernel internals.
 """
+from repro.comm.channels import (
+    Channel,
+    DenseChannel,
+    QSGDChannel,
+    TopKChannel,
+    make_channel,
+)
 from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
 from repro.kernels.ops import (
     qsgd_compress_tree,
     qsgd_dequantize,
     qsgd_quantize,
     qsgd_roundtrip,
+    topk_sparsify,
+    topk_sparsify_tree,
 )
 
 __all__ = [
+    "Channel",
+    "DenseChannel",
+    "QSGDChannel",
+    "TopKChannel",
+    "make_channel",
     "CommLedger",
     "dense_message_bits",
     "qsgd_message_bits",
@@ -19,4 +34,6 @@ __all__ = [
     "qsgd_dequantize",
     "qsgd_quantize",
     "qsgd_roundtrip",
+    "topk_sparsify",
+    "topk_sparsify_tree",
 ]

@@ -1,0 +1,29 @@
+"""Pure message-size formulas (no jax/repro imports — safe at any layer).
+
+Shared by the channel abstraction (`repro.comm.channels`) and the ledger
+(`repro.core.ledger`); both re-export them for back-compat.
+"""
+from __future__ import annotations
+
+import math
+
+
+def dense_message_bits(num_params: int, bits_per_param: int = 32) -> int:
+    return num_params * bits_per_param
+
+
+def qsgd_message_bits(num_params: int, levels: int, block: int = 2048) -> int:
+    """QSGD-encoded message size (Alistarh et al. 2017), per-block norm + per-entry
+    sign + level index. levels = s quantization levels -> ceil(log2(s+1)) bits/entry,
+    one f32 norm per block, one sign bit per entry.
+    """
+    level_bits = max(1, math.ceil(math.log2(levels + 1)))
+    n_blocks = math.ceil(num_params / block)
+    return num_params * (1 + level_bits) + n_blocks * 32
+
+
+def topk_message_bits(num_params: int, fraction: float, bits_per_param: int = 32) -> int:
+    """Top-K sparse encoding: (index, value) pairs for the k survivors."""
+    k = max(1, math.ceil(fraction * num_params))
+    index_bits = max(1, math.ceil(math.log2(max(num_params, 2))))
+    return k * (bits_per_param + index_bits)

@@ -1,0 +1,124 @@
+"""Pluggable lossy communication channels.
+
+A `Channel` owns BOTH sides of a message's cost model:
+  * `compress(tree, key)` — the in-graph lossy transform a pytree message
+    traverses (traceable under jit/vmap/scan, so the round engine can fuse it
+    into the per-interaction loop);
+  * `message_bits(num_params)` — the encoded size of one message, which is
+    what `CommLedger` records.  Drivers never re-derive bit formulas.
+
+Channels are frozen dataclasses: hashable, so the engine can cache one
+compiled round function per (model, channel) pair, and all quantization
+hyper-parameters are static under jit.
+
+`stochastic` tells the engine whether the channel consumes PRNG keys — the
+drivers only advance their key chains for stochastic channels, which keeps
+fixed-seed trajectories identical to the pre-engine implementations.
+
+`per_message` declares how the channel treats a *stacked* uplink (the engine
+hands it client deltas with a leading sender axis on every leaf): True means
+each sender's message must be transformed independently (the engine vmaps
+`compress` over that axis — required when the transform couples entries, like
+Top-K selection), False means the whole stacked leaf may be transformed as
+one vector (QSGD keeps the historical stacked-leaf semantics: its per-entry
+quantization is sender-local anyway except at rare block boundaries, and
+fixed-seed parity with the pre-engine drivers pins it).
+
+Stochastic channels split their key per leaf internally (see
+`qsgd_compress_tree`), so the historical bug class of reusing one subkey
+across every layer of the model cannot reappear in a driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+from repro.comm.bits import dense_message_bits, qsgd_message_bits, topk_message_bits
+from repro.kernels.ops import qsgd_compress_tree, topk_sparsify_tree
+
+PyTree = Any
+
+
+@runtime_checkable
+class Channel(Protocol):
+    """Lossy uplink abstraction: in-graph transform + bit accounting."""
+
+    stochastic: bool
+    per_message: bool
+
+    def compress(self, tree: PyTree, key: jax.Array) -> PyTree:
+        """Apply the lossy roundtrip (what the receiver decodes). Traceable."""
+        ...
+
+    def message_bits(self, num_params: int) -> int:
+        """Encoded size in bits of one message of `num_params` parameters."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseChannel:
+    """Uncompressed float transport — the identity transform."""
+
+    bits_per_param: int = 32
+    stochastic: bool = dataclasses.field(default=False, init=False)
+    per_message: bool = dataclasses.field(default=False, init=False)
+
+    def compress(self, tree: PyTree, key: jax.Array) -> PyTree:
+        return tree
+
+    def message_bits(self, num_params: int) -> int:
+        return dense_message_bits(num_params, self.bits_per_param)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDChannel:
+    """QSGD stochastic quantization (Alistarh et al., 2017), Pallas-backed.
+
+    `levels` is the number of quantization levels s; the roundtrip runs the
+    TPU kernels in `repro.kernels.qsgd` leaf-wise with per-leaf PRNG keys.
+    """
+
+    levels: int = 16
+    stochastic: bool = dataclasses.field(default=True, init=False)
+    per_message: bool = dataclasses.field(default=False, init=False)
+
+    def compress(self, tree: PyTree, key: jax.Array) -> PyTree:
+        return qsgd_compress_tree(tree, key, s=self.levels)
+
+    def message_bits(self, num_params: int) -> int:
+        return qsgd_message_bits(num_params, self.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKChannel:
+    """Deterministic magnitude Top-K sparsification.
+
+    Keeps the ceil(fraction * d) largest-magnitude entries of the WHOLE
+    message (all leaves flattened as one d-vector); the encoding is exactly k
+    (index, value) pairs of ceil(log2(d)) + bits_per_param bits each, so
+    `message_bits` is exact. Top-K selection couples entries, so the channel
+    is `per_message`: the engine applies it to each sender's delta
+    independently. Proof that the channel stack extends beyond the paper's
+    QSGD arm.
+    """
+
+    fraction: float = 0.01
+    bits_per_param: int = 32
+    stochastic: bool = dataclasses.field(default=False, init=False)
+    per_message: bool = dataclasses.field(default=True, init=False)
+
+    def compress(self, tree: PyTree, key: jax.Array) -> PyTree:
+        return topk_sparsify_tree(tree, fraction=self.fraction)
+
+    def message_bits(self, num_params: int) -> int:
+        return topk_message_bits(num_params, self.fraction, self.bits_per_param)
+
+
+def make_channel(qsgd_levels: int | None, bits_per_param: int = 32) -> Channel:
+    """Back-compat shim: the (qsgd_levels, bits_per_param) config pair every
+    algorithm historically exposed, as a Channel."""
+    if qsgd_levels is None:
+        return DenseChannel(bits_per_param)
+    return QSGDChannel(qsgd_levels)

@@ -1,7 +1,9 @@
 # Fed-CHS: Sequential Federated Learning in Hierarchical Architecture.
 # The paper's contribution lives here: the Algorithm-1 protocol (fed_chs),
 # the 2-step next-passing-cluster scheduler, ES topologies, bit-exact
-# communication accounting, baselines, and the TPU-native sharded variant.
+# communication accounting, baselines, the shared jitted round engine, and
+# the TPU-native sharded variant.
+from repro.core.engine import RoundEngine, split_chain
 from repro.core.fed_chs import FedCHSConfig, run_fed_chs
 from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
 from repro.core.scheduler import FedCHSScheduler, RandomWalkScheduler, RingScheduler
@@ -11,6 +13,8 @@ from repro.core.topology import Topology, make_topology
 __all__ = [
     "FedCHSConfig",
     "run_fed_chs",
+    "RoundEngine",
+    "split_chain",
     "CommLedger",
     "dense_message_bits",
     "qsgd_message_bits",

@@ -1,10 +1,12 @@
-"""FedAvg (McMahan et al., 2017) baseline, with optional QSGD-compressed uplinks
-(the paper's Fig. 2 "FedAvg compressed by QSGD" arm).
+"""FedAvg (McMahan et al., 2017) baseline, with optional compressed uplinks
+(the paper's Fig. 2 "FedAvg compressed by QSGD" arm), driven by the shared
+round engine.
 
 Per round: every client runs K local SGD steps from the PS model, uploads the
-model delta to the PS (multi-hop in a real deployment; the ledger records the
-client<->PS hop type so Fig. 2's structural comparison is visible), and the PS
-takes the D_n/D_A-weighted average.
+channel-compressed model delta to the PS (multi-hop in a real deployment; the
+ledger records the client<->PS hop type so Fig. 2's structural comparison is
+visible), and the PS takes the D_n/D_A-weighted average.  A FedAvg round is
+one engine interaction with E=K: the whole round is a single fused jit call.
 """
 from __future__ import annotations
 
@@ -12,13 +14,12 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
-from repro.core.simulation import FLTask, RunResult, _multi_client_local_sgd_fn, evaluate
-from repro.kernels.ops import qsgd_compress_tree
+from repro.comm.channels import Channel, DenseChannel, make_channel
+from repro.core.engine import RoundEngine, split_chain
+from repro.core.ledger import CommLedger
+from repro.core.simulation import FLTask, RunResult, evaluate
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
-from repro.utils import tree_add
 
 
 @dataclasses.dataclass
@@ -28,6 +29,7 @@ class FedAvgConfig:
     eval_every: int = 10
     bits_per_param: int = 32
     qsgd_levels: int | None = None
+    channel: Channel | None = None  # explicit uplink channel
     seed: int = 0
     schedule: Schedule | None = None
 
@@ -36,38 +38,36 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
     task.reset_loaders(config.seed)
     K = config.local_steps
     sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
-    lrs = jnp.asarray([sched_fn(k) for k in range(K)], dtype=jnp.float32)
+    lrs = jnp.asarray([[sched_fn(k) for k in range(K)]], dtype=jnp.float32)  # (1, K)
 
     params = task.init_params()
     d = task.num_params()
     ledger = CommLedger()
-    multi_local = _multi_client_local_sgd_fn(task.model)
+    channel = (
+        config.channel
+        if config.channel is not None
+        else make_channel(config.qsgd_levels, config.bits_per_param)
+    )
+    engine = RoundEngine(task.model, channel)
     gammas = jnp.asarray(task.global_weights())
     key = jax.random.PRNGKey(config.seed + 1)
 
-    dense_bits = dense_message_bits(d, config.bits_per_param)
-    up_bits = (
-        qsgd_message_bits(d, config.qsgd_levels)
-        if config.qsgd_levels is not None
-        else dense_bits
-    )
+    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    up_bits = channel.message_bits(d)
 
     rounds_log, acc_log, loss_log = [], [], []
     n = task.num_clients
     for t in range(config.rounds):
-        # all clients sample K batches; stack to (n, K, B, ...)
+        # all clients stage K batches; one interaction of E=K local steps
         bx, by = zip(*(task.sample_client_batches(i, K) for i in range(n)))
-        xs = jnp.stack(bx)
-        ys = jnp.stack(by)
-        new_p, losses = multi_local(params, xs, ys, lrs)
-        deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
-        if config.qsgd_levels is not None:
-            key, sub = jax.random.split(key)
-            deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
-        agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
-        params = tree_add(params, agg)
+        xs = jnp.stack(bx)[None]  # (1, n, K, B, ...)
+        ys = jnp.stack(by)[None]
+        subs = None
+        if channel.stochastic:
+            key, subs = split_chain(key, 1)
+        params, losses = engine.cluster_round(params, xs, ys, gammas, lrs, subs)
 
-        ledger.record("ps_to_client", dense_bits, n)
+        ledger.record("ps_to_client", down_bits, n)
         ledger.record("client_to_ps", up_bits, n)
         ledger.snapshot(t)
 

@@ -1,12 +1,16 @@
 """Hier-Local-QSGD (Liu et al., 2023a) baseline — classic 3-tier HFL with
-quantized uplinks.
+quantized uplinks, driven by the engine's vmapped multi-cluster round.
 
 Per global round:
   * K/E edge aggregations: every cluster's clients run E local steps from the
-    cluster model; the ES aggregates their (QSGD-quantized) deltas.
-  * After the K in-cluster steps, every ES uploads its (QSGD-quantized) cluster
-    delta to the PS, which takes the D_{A,m}/D_A-weighted average and
-    broadcasts — the star-shaped, communication-heavy step Fed-CHS removes.
+    cluster model; the ES aggregates their channel-compressed deltas.  All M
+    clusters advance together inside one jit call — the engine vmaps the
+    cluster interaction over a padded/masked (M, n_max) client grid instead
+    of looping clusters in Python.
+  * After the K in-cluster steps, every ES uploads its compressed cluster
+    delta to the PS (per-cluster PRNG keys, split per leaf inside the
+    channel), which takes the D_{A,m}/D_A-weighted average and broadcasts —
+    the star-shaped, communication-heavy step Fed-CHS removes.
 """
 from __future__ import annotations
 
@@ -16,11 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
-from repro.core.simulation import FLTask, RunResult, _multi_client_local_sgd_fn, evaluate
-from repro.kernels.ops import qsgd_compress_tree, qsgd_roundtrip
+from repro.comm.channels import Channel, DenseChannel, make_channel
+from repro.core.engine import RoundEngine, split_chain
+from repro.core.ledger import CommLedger
+from repro.core.simulation import FLTask, RunResult, evaluate
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
-from repro.utils import tree_add
 
 
 @dataclasses.dataclass
@@ -31,82 +35,66 @@ class HierLocalQSGDConfig:
     eval_every: int = 10
     bits_per_param: int = 32
     qsgd_levels: int | None = 16   # uplink quantization (client->ES and ES->PS)
+    channel: Channel | None = None     # explicit client->ES channel
+    es_channel: Channel | None = None  # explicit ES->PS channel (defaults to channel)
     seed: int = 0
     schedule: Schedule | None = None
 
 
 def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
     task.reset_loaders(config.seed)
-    assert config.local_steps % config.local_epochs == 0
+    assert config.local_steps % config.local_epochs == 0, "K must divide by E"
     K, E = config.local_steps, config.local_epochs
     interactions = K // E
     sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
     lrs = np.asarray([sched_fn(k) for k in range(K)], dtype=np.float32)
+    lrs_grouped = jnp.asarray(lrs.reshape(interactions, E))
 
     params = task.init_params()
     d = task.num_params()
     ledger = CommLedger()
-    multi_local = _multi_client_local_sgd_fn(task.model)
+    channel = (
+        config.channel
+        if config.channel is not None
+        else make_channel(config.qsgd_levels, config.bits_per_param)
+    )
+    es_channel = config.es_channel if config.es_channel is not None else channel
+    engine = RoundEngine(task.model, channel, es_channel)
     key = jax.random.PRNGKey(config.seed + 1)
 
-    dense_bits = dense_message_bits(d, config.bits_per_param)
-    q_bits = (
-        qsgd_message_bits(d, config.qsgd_levels)
-        if config.qsgd_levels is not None
-        else dense_bits
-    )
+    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    up_bits = channel.message_bits(d)
+    es_up_bits = es_channel.message_bits(d)
 
     M = task.num_clusters
-    cluster_gammas = [jnp.asarray(task.cluster_weights(m)) for m in range(M)]
+    N = task.num_clients  # sum of cluster sizes (clusters partition clients)
+    gammas, mask = task.padded_cluster_weights()
     es_weights = jnp.asarray(
         np.array(task.cluster_sizes, dtype=np.float32) / sum(task.cluster_sizes)
     )
 
     rounds_log, acc_log, loss_log = [], [], []
     for t in range(config.rounds):
-        cluster_params = [params] * M
-        loss_acc = 0.0
-        for j in range(interactions):
-            lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
-            for m in range(M):
-                xs, ys = task.sample_cluster_batches(m, E)
-                xs = jnp.swapaxes(xs, 0, 1)
-                ys = jnp.swapaxes(ys, 0, 1)
-                new_p, losses = multi_local(cluster_params[m], xs, ys, lr_slice)
-                deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, cluster_params[m])
-                if config.qsgd_levels is not None:
-                    key, sub = jax.random.split(key)
-                    deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
-                agg = jax.tree.map(
-                    lambda dl, g=cluster_gammas[m]: jnp.einsum("n,n...->...", g, dl), deltas
-                )
-                cluster_params[m] = tree_add(cluster_params[m], agg)
-                loss_acc += float(jnp.mean(losses))
-                n_m = len(task.cluster_members[m])
-                ledger.record("es_to_client", dense_bits, n_m)
-                ledger.record("client_to_es", q_bits, n_m)
+        xs, ys = task.sample_all_cluster_batches(K, E)  # (J, M, n_max, E, B, ...)
+        subs = es_subs = None
+        if channel.stochastic:
+            key, flat = split_chain(key, interactions * M)
+            subs = flat.reshape(interactions, M, 2)
+        if es_channel.stochastic:
+            key, es_subs = split_chain(key, M)
+        params, losses = engine.multi_cluster_round(
+            params, xs, ys, gammas, mask, es_weights, lrs_grouped, subs, es_subs
+        )
 
-        # ES -> PS quantized cluster deltas, PS aggregates + broadcasts
-        es_deltas = []
-        for m in range(M):
-            delta = jax.tree.map(lambda a, b: a - b, cluster_params[m], params)
-            if config.qsgd_levels is not None:
-                key, sub = jax.random.split(key)
-                delta = jax.tree.map(
-                    lambda leaf: qsgd_roundtrip(leaf, sub, s=config.qsgd_levels).astype(leaf.dtype),
-                    delta,
-                )
-            es_deltas.append(delta)
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *es_deltas)
-        agg = jax.tree.map(lambda x: jnp.einsum("m,m...->...", es_weights, x), stacked)
-        params = tree_add(params, agg)
-        ledger.record("es_to_ps", q_bits, M)
-        ledger.record("ps_to_es", dense_bits, M)
+        ledger.record("es_to_client", down_bits, interactions * N)
+        ledger.record("client_to_es", up_bits, interactions * N)
+        ledger.record("es_to_ps", es_up_bits, M)
+        ledger.record("ps_to_es", down_bits, M)
         ledger.snapshot(t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)
             acc_log.append(evaluate(task.model, params, task.dataset))
-            loss_log.append(loss_acc / (interactions * M))
+            loss_log.append(float(jnp.mean(losses)))
 
     return RunResult("hier_local_qsgd", rounds_log, acc_log, loss_log, ledger, params)

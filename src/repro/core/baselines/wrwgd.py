@@ -1,11 +1,12 @@
 """Weighted Random-Walk Gradient Descent (Ayache & El Rouayheb, 2019) baseline.
 
 The model walks over a *client-level* graph; each visited client runs K local
-SGD steps, then forwards the model to a neighbor chosen with probability
-proportional to a per-client importance weight (the original uses local
-Lipschitz estimates; we use dataset-size weighting, the standard
-"weighted" variant, with uniform as an option). One client->client model hop
-per round.
+SGD steps (one engine grad-round with a single client), then forwards the
+model to a neighbor chosen with probability proportional to a per-client
+importance weight (the original uses local Lipschitz estimates; we use
+dataset-size weighting, the standard "weighted" variant, with uniform as an
+option). One client->client model hop per round, metered via the dense
+channel.
 """
 from __future__ import annotations
 
@@ -14,8 +15,10 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ledger import CommLedger, dense_message_bits
-from repro.core.simulation import FLTask, RunResult, _local_sgd_fn, evaluate
+from repro.comm.channels import DenseChannel
+from repro.core.engine import RoundEngine
+from repro.core.ledger import CommLedger
+from repro.core.simulation import FLTask, RunResult, evaluate
 from repro.core.topology import make_topology
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 
@@ -46,13 +49,16 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
     params = task.init_params()
     d = task.num_params()
     ledger = CommLedger()
-    local = _local_sgd_fn(task.model)
-    dense_bits = dense_message_bits(d, config.bits_per_param)
+    channel = DenseChannel(config.bits_per_param)
+    engine = RoundEngine(task.model, channel)
+    hop_bits = channel.message_bits(d)
+    gamma_one = jnp.ones((1,), jnp.float32)
 
     rounds_log, acc_log, loss_log = [], [], []
     for t in range(config.rounds):
         xs, ys = task.sample_client_batches(current, K)
-        params, loss = local(params, xs, ys, lrs)
+        # a walk step is a 1-client cluster running Eq.(5)-style local SGD
+        params, losses = engine.grad_round(params, xs[:, None], ys[:, None], gamma_one, lrs)
 
         nbrs = list(topo.neighbors(current))
         if config.weighting == "data_size":
@@ -61,12 +67,12 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
         else:
             w = np.full(len(nbrs), 1.0 / len(nbrs))
         current = int(rng.choice(nbrs, p=w))
-        ledger.record("client_to_client", dense_bits, 1)
+        ledger.record("client_to_client", hop_bits, 1)
         ledger.snapshot(t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)
             acc_log.append(evaluate(task.model, params, task.dataset))
-            loss_log.append(float(loss))
+            loss_log.append(float(jnp.mean(losses)))
 
     return RunResult("wrwgd", rounds_log, acc_log, loss_log, ledger, params)

@@ -1,0 +1,258 @@
+"""Unified jitted cluster-round engine shared by all four FL algorithms.
+
+Layering
+--------
+The simulation stack has three layers:
+
+  driver   (fed_chs.py, baselines/*.py)
+      Owns the *protocol*: which cluster trains when, scheduler hops,
+      ledger entries, evaluation cadence.  Pure host-side Python, one
+      engine call per round, no per-interaction device syncs.
+
+  engine   (this module)
+      Owns the *round*: the E-local-steps x K/E-interactions inner loop —
+      local SGD, delta computation, channel compression, gamma-weighted
+      aggregation — fused into a single jit-compiled `lax.scan` (with a
+      `vmap` over clusters for 3-tier HFL).  Batches for the whole round
+      are staged up front (`FLTask.sample_round_batches`), so the only
+      host<->device traffic per round is one params handle and one stacked
+      loss array.
+
+  channel  (repro/comm/channels.py)
+      Owns the *message*: the in-graph lossy transform (dense / QSGD /
+      Top-K) and its `message_bits` accounting.  Compiled into the scan
+      body, so adding a channel never touches a driver or the engine.
+
+Round modes
+-----------
+* `grad_round`  — Eq. (5) literal: every in-cluster iteration uploads a
+  gradient and the ES applies the gamma-weighted step (E=1, dense).
+* `cluster_round` — delta mode: clients run E local steps, upload
+  channel-compressed model deltas, ES aggregates; scan over K/E
+  interactions.
+* `multi_cluster_round` — the Hier-Local-QSGD round: the delta-mode
+  interaction vmapped over all M clusters at once (ragged cluster sizes
+  handled by padding + masking: padded client slots carry zero gamma
+  weight and their deltas are masked to zero before compression), plus the
+  ES->PS compress/aggregate/broadcast step, all inside one jit.
+
+Determinism
+-----------
+`split_chain(key, n)` reproduces n sequential `key, sub = split(key)`
+draws as one fused scan, bit-identical to the eager chains the pre-engine
+drivers used — so fixed-seed trajectories are preserved across the
+refactor (see tests/test_engine_parity.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.channels import Channel, DenseChannel
+from repro.models.classifier import Classifier
+from repro.utils import tree_add, tree_sub
+
+PyTree = Any
+
+
+def _jit_round(fn):
+    """jit with donated params where the backend supports buffer donation
+    (CPU does not; donating there only emits warnings)."""
+    if jax.default_backend() in ("tpu", "gpu"):
+        return jax.jit(fn, donate_argnums=(0,))
+    return jax.jit(fn)
+
+
+# --------------------------------------------------------------------------
+# PRNG plumbing
+# --------------------------------------------------------------------------
+
+
+@functools.cache
+def _split_chain_fn(n: int):
+    def chain(key):
+        def step(k, _):
+            k2, sub = jax.random.split(k)
+            return k2, sub
+
+        return jax.lax.scan(step, key, None, length=n)
+
+    return jax.jit(chain)
+
+
+def split_chain(key: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """n sequential `key, sub = jax.random.split(key)` draws fused into one
+    jitted scan. Returns (advanced key, subs (n, 2))."""
+    if n == 0:
+        return key, jnp.zeros((0, 2), jnp.uint32)
+    return _split_chain_fn(n)(key)
+
+
+def dummy_subs(*lead: int) -> jnp.ndarray:
+    """Placeholder key array for non-stochastic channels (never consumed)."""
+    return jnp.zeros(tuple(lead) + (2,), jnp.uint32)
+
+
+# --------------------------------------------------------------------------
+# compiled round functions, cached per (model, channel) — shapes are handled
+# by jit's own shape-keyed cache
+# --------------------------------------------------------------------------
+
+
+def compress_uplinks(channel: Channel, deltas: PyTree, sub: jax.Array) -> PyTree:
+    """Compress a stacked uplink (leading sender axis on every leaf).
+
+    `per_message` channels (e.g. Top-K, whose selection couples entries) are
+    vmapped over the sender axis with per-sender keys; others transform the
+    stacked leaves directly (QSGD's historical stacked-leaf semantics)."""
+    if getattr(channel, "per_message", False):
+        n = jax.tree.leaves(deltas)[0].shape[0]
+        keys = jax.random.split(sub, n)
+        return jax.vmap(lambda d, k: channel.compress(d, k))(deltas, keys)
+    return channel.compress(deltas, sub)
+
+
+def _local_sgd(model: Classifier):
+    """E local SGD steps for one client: xs (E, B, ...), ys (E, B), lrs (E,)."""
+    grad_fn = jax.value_and_grad(model.loss)
+
+    def run_one(params, xs, ys, lrs):
+        def step(p, inp):
+            x, y, lr = inp
+            loss, g = grad_fn(p, x, y)
+            return jax.tree.map(lambda w, gi: w - lr * gi, p, g), loss
+
+        params, losses = jax.lax.scan(step, params, (xs, ys, lrs))
+        return params, jnp.mean(losses)
+
+    return run_one
+
+
+@functools.cache
+def _grad_round_fn(model: Classifier):
+    """Eq. (5) literal: scan over K steps of
+    w <- w - eta_k * sum_n gamma_n grad_n(w, xi_{n,k}).
+    xs: (K, n, B, ...), ys: (K, n, B), gammas: (n,), lrs: (K,).
+    Returns (params, per-step gamma-weighted losses (K,))."""
+    grad_fn = jax.vmap(jax.value_and_grad(model.loss), in_axes=(None, 0, 0))
+
+    def round_fn(params, xs, ys, gammas, lrs):
+        def step(p, inp):
+            x_k, y_k, lr_k = inp
+            losses, grads = grad_fn(p, x_k, y_k)
+            agg = jax.tree.map(lambda g: jnp.einsum("n,n...->...", gammas, g), grads)
+            p = jax.tree.map(lambda w, g: w - lr_k * g, p, agg)
+            return p, jnp.dot(gammas, losses)
+
+        return jax.lax.scan(step, params, (xs, ys, lrs))
+
+    return _jit_round(round_fn)
+
+
+@functools.cache
+def _delta_round_fn(model: Classifier, channel: Channel):
+    """Delta mode: scan over J = K/E interactions; each interaction runs E
+    local steps per client (vmapped), pushes channel-compressed deltas, and
+    applies the gamma-weighted aggregate.
+    xs: (J, n, E, B, ...), ys: (J, n, E, B), lrs: (J, E), subs: (J, 2).
+    Returns (params, per-interaction mean losses (J,))."""
+    multi_local = jax.vmap(_local_sgd(model), in_axes=(None, 0, 0, None))
+
+    def round_fn(params, xs, ys, gammas, lrs, subs):
+        def interaction(p, inp):
+            x, y, lr, sub = inp
+            new_p, losses = multi_local(p, x, y, lr)
+            deltas = jax.tree.map(lambda a, b: a - b[None], new_p, p)
+            deltas = compress_uplinks(channel, deltas, sub)
+            agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+            return tree_add(p, agg), jnp.mean(losses)
+
+        return jax.lax.scan(interaction, params, (xs, ys, lrs, subs))
+
+    return _jit_round(round_fn)
+
+
+@functools.cache
+def _multi_round_fn(model: Classifier, channel: Channel, es_channel: Channel):
+    """One 3-tier HFL global round, vmapped over all M clusters at once.
+    xs: (J, M, n_max, E, B, ...), ys: (J, M, n_max, E, B), gammas/mask:
+    (M, n_max), es_weights: (M,), lrs: (J, E), subs: (J, M, 2),
+    es_subs: (M, 2).  Padded client slots (mask == 0) carry zero gamma
+    weight and their deltas are zeroed before compression.
+    Returns (params, per-(interaction, cluster) losses (J, M))."""
+    multi_local = jax.vmap(_local_sgd(model), in_axes=(None, 0, 0, None))
+
+    def round_fn(params, xs, ys, gammas, mask, es_weights, lrs, subs, es_subs):
+        M = xs.shape[1]
+        cparams0 = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (M,) + l.shape), params
+        )
+
+        def interaction(cp, inp):
+            x, y, lr, sub = inp
+
+            def one_cluster(p_m, x_m, y_m, g_m, msk_m, sub_m):
+                new_p, losses = multi_local(p_m, x_m, y_m, lr)
+                deltas = jax.tree.map(
+                    lambda a, b: (a - b[None]) * msk_m.reshape((-1,) + (1,) * (a.ndim - 1)),
+                    new_p,
+                    p_m,
+                )
+                deltas = compress_uplinks(channel, deltas, sub_m)
+                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", g_m, dl), deltas)
+                loss = jnp.sum(losses * msk_m) / jnp.sum(msk_m)
+                return tree_add(p_m, agg), loss
+
+            cp, losses = jax.vmap(one_cluster)(cp, x, y, gammas, mask, sub)
+            return cp, losses
+
+        cparams, losses = jax.lax.scan(interaction, cparams0, (xs, ys, lrs, subs))
+
+        # ES -> PS: compressed cluster deltas, PS weighted-aggregates + broadcasts
+        es_deltas = jax.vmap(
+            lambda p_m, sub_m: es_channel.compress(tree_sub(p_m, params), sub_m)
+        )(cparams, es_subs)
+        agg = jax.tree.map(lambda x_: jnp.einsum("m,m...->...", es_weights, x_), es_deltas)
+        return tree_add(params, agg), losses
+
+    return _jit_round(round_fn)
+
+
+# --------------------------------------------------------------------------
+# public facade
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundEngine:
+    """Per-run facade over the cached compiled round functions.
+
+    `channel` compresses client -> ES uplinks; `es_channel` (3-tier HFL
+    only) compresses ES -> PS uplinks and defaults to `channel`.
+    """
+
+    model: Classifier
+    channel: Channel = DenseChannel()
+    es_channel: Channel | None = None
+
+    def grad_round(self, params, xs, ys, gammas, lrs):
+        return _grad_round_fn(self.model)(params, xs, ys, gammas, lrs)
+
+    def cluster_round(self, params, xs, ys, gammas, lrs, subs=None):
+        if subs is None:
+            subs = dummy_subs(xs.shape[0])
+        return _delta_round_fn(self.model, self.channel)(params, xs, ys, gammas, lrs, subs)
+
+    def multi_cluster_round(
+        self, params, xs, ys, gammas, mask, es_weights, lrs, subs=None, es_subs=None
+    ):
+        if subs is None:
+            subs = dummy_subs(xs.shape[0], xs.shape[1])
+        if es_subs is None:
+            es_subs = dummy_subs(xs.shape[1])
+        fn = _multi_round_fn(self.model, self.channel, self.es_channel or self.channel)
+        return fn(params, xs, ys, gammas, mask, es_weights, lrs, subs, es_subs)

@@ -1,39 +1,37 @@
-"""Fed-CHS (Algorithm 1) — the paper's contribution, faithful host-level protocol.
+"""Fed-CHS (Algorithm 1) — the paper's contribution, as a thin strategy driver
+over the jitted round engine (`repro.core.engine`).
 
 Round t:
   1. ES m(t) broadcasts w^t to its cluster's clients.
   2. K/E interactions: clients run E local SGD steps from the broadcast model
      (E=1 reproduces Eq. (5) literally: the uploaded "delta" is eta_k * grad),
      upload their update, and the ES takes the gamma-weighted aggregate.
+     The whole inner loop — local SGD, deltas, channel compression,
+     aggregation — is one fused `lax.scan` on device; batches are staged a
+     round at a time, and the only per-round host traffic is the params
+     handle plus one stacked loss array.
   3. m(t) selects m(t+1) by the 2-step least-traversed / largest-dataset rule
      and pushes w^{t+1} over a single ES->ES hop. No PS anywhere.
 
-Communication is metered bit-exactly via CommLedger; uplinks can traverse the
-QSGD channel (Pallas kernel) to reproduce the Fig. 2 compression runs.
+Communication is metered bit-exactly via CommLedger; uplinks traverse a
+pluggable `Channel` (dense / Pallas-backed QSGD / Top-K) which owns both the
+in-graph lossy transform and the per-message bit accounting.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
+from repro.comm.channels import Channel, DenseChannel, make_channel
+from repro.core.engine import RoundEngine, split_chain
+from repro.core.ledger import CommLedger
 from repro.core.scheduler import FedCHSScheduler
-from repro.core.simulation import (
-    FLTask,
-    RunResult,
-    _cluster_sgd_fn,
-    _multi_client_local_sgd_fn,
-    evaluate,
-    weighted_tree_sum,
-)
-from repro.core.topology import Topology, make_topology
-from repro.kernels.ops import qsgd_compress_tree
+from repro.core.simulation import FLTask, RunResult, evaluate
+from repro.core.topology import make_topology
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
-from repro.utils import tree_sub, tree_add
 
 
 @dataclasses.dataclass
@@ -49,6 +47,8 @@ class FedCHSConfig:
     eval_every: int = 10
     bits_per_param: int = 32
     qsgd_levels: int | None = None         # uplink compression (None = dense)
+    channel: Channel | None = None         # explicit uplink channel; overrides
+                                           # qsgd_levels/bits_per_param
     seed: int = 0
     schedule: Schedule | None = None       # default: paper eta_k = 1/(K sqrt(k+1))
 
@@ -60,6 +60,8 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
     interactions = K // E
     sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
     lrs = np.array([sched_fn(k) for k in range(K)], dtype=np.float32)
+    lrs_flat = jnp.asarray(lrs)                              # (K,)  grad mode
+    lrs_grouped = jnp.asarray(lrs.reshape(interactions, E))  # (J,E) delta mode
 
     dyn = None
     if config.dynamic is not None:
@@ -80,16 +82,20 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
     params = task.init_params()
     d = task.num_params()
     ledger = CommLedger()
-    cluster_phase = _cluster_sgd_fn(task.model)
-    multi_local = _multi_client_local_sgd_fn(task.model)
+    channel = (
+        config.channel
+        if config.channel is not None
+        else make_channel(config.qsgd_levels, config.bits_per_param)
+    )
+    engine = RoundEngine(task.model, channel)
     key = jax.random.PRNGKey(config.seed + 1)
 
-    dense_bits = dense_message_bits(d, config.bits_per_param)
-    up_bits = (
-        qsgd_message_bits(d, config.qsgd_levels)
-        if config.qsgd_levels is not None
-        else dense_bits
-    )
+    down_bits = DenseChannel(config.bits_per_param).message_bits(d)  # model broadcast
+    up_bits = channel.message_bits(d)
+
+    # literal Eq. (5): E=1 dense interactions are gradient uplinks fused into
+    # the per-step gamma-weighted SGD scan
+    grad_mode = E == 1 and isinstance(channel, DenseChannel)
 
     rounds_log, acc_log, loss_log = [], [], []
     m = scheduler.state.current
@@ -97,30 +103,18 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         members = task.cluster_members[m]
         gammas = jnp.asarray(task.cluster_weights(m))
 
-        if E == 1 and config.qsgd_levels is None:
-            # literal Eq. (5): gradient uplinks, gamma-weighted aggregate step
+        if grad_mode:
             xs, ys = task.sample_cluster_batches(m, K)
-            params, loss = cluster_phase(params, xs, ys, gammas, jnp.asarray(lrs))
+            params, losses = engine.grad_round(params, xs, ys, gammas, lrs_flat)
         else:
-            # E>1 (Fig. 2) and/or QSGD channel: clients upload model deltas
-            loss_acc = 0.0
-            for j in range(interactions):
-                lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
-                xs, ys = task.sample_cluster_batches(m, E)
-                xs = jnp.swapaxes(xs, 0, 1)  # (n, E, B, ...)
-                ys = jnp.swapaxes(ys, 0, 1)
-                new_p, losses = multi_local(params, xs, ys, lr_slice)
-                deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
-                if config.qsgd_levels is not None:
-                    key, sub = jax.random.split(key)
-                    deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
-                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
-                params = tree_add(params, agg)
-                loss_acc += float(jnp.mean(losses))
-            loss = loss_acc / interactions
+            xs, ys = task.sample_round_batches(m, K, E)
+            subs = None
+            if channel.stochastic:
+                key, subs = split_chain(key, interactions)
+            params, losses = engine.cluster_round(params, xs, ys, gammas, lrs_grouped, subs)
 
         # comm accounting for this round
-        ledger.record("es_to_client", dense_bits, interactions * len(members))
+        ledger.record("es_to_client", down_bits, interactions * len(members))
         ledger.record("client_to_es", up_bits, interactions * len(members))
 
         # next passing cluster (2-step rule) + one ES->ES model hop.
@@ -129,12 +123,12 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         if dyn is not None:
             scheduler.set_topology(dyn(t))
         m = scheduler.advance()
-        ledger.record("es_to_es", dense_bits, 1)
+        ledger.record("es_to_es", down_bits, 1)
         ledger.snapshot(t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)
             acc_log.append(evaluate(task.model, params, task.dataset))
-            loss_log.append(float(loss))
+            loss_log.append(float(jnp.mean(losses)))
 
     return RunResult("fed_chs", rounds_log, acc_log, loss_log, ledger, params)

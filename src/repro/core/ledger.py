@@ -15,6 +15,16 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 
+from repro.comm.bits import dense_message_bits, qsgd_message_bits, topk_message_bits
+
+__all__ = [
+    "HOPS",
+    "CommLedger",
+    "dense_message_bits",
+    "qsgd_message_bits",
+    "topk_message_bits",
+]
+
 HOPS = (
     "client_to_es",
     "es_to_client",
@@ -57,19 +67,3 @@ class CommLedger:
             if r >= predicate_round:
                 return b
         return self.total_bits()
-
-
-def dense_message_bits(num_params: int, bits_per_param: int = 32) -> int:
-    return num_params * bits_per_param
-
-
-def qsgd_message_bits(num_params: int, levels: int, block: int = 2048) -> int:
-    """QSGD-encoded message size (Alistarh et al. 2017), per-block norm + per-entry
-    sign + level index. levels = s quantization levels -> ceil(log2(s+1)) bits/entry,
-    one f32 norm per block, one sign bit per entry.
-    """
-    import math
-
-    level_bits = max(1, math.ceil(math.log2(levels + 1)))
-    n_blocks = math.ceil(num_params / block)
-    return num_params * (1 + level_bits) + n_blocks * 32

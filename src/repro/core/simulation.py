@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +84,63 @@ class FLTask:
     def sample_client_batches(self, client: int, steps: int):
         bx, by = zip(*(self.loaders[client].next_batch() for _ in range(steps)))
         return jnp.asarray(np.stack(bx)), jnp.asarray(np.stack(by))
+
+    def _stage_round_np(self, m: int, total_steps: int, epochs: int):
+        """Host-side staging of one round of cluster-m batches as numpy:
+        (J, n, E, B, ...). Per-client draw order is identical to epochs-sized
+        incremental sampling, so trajectories don't depend on prefetch depth."""
+        assert total_steps % epochs == 0
+        members = self.cluster_members[m]
+        xs, ys = [], []
+        for _ in range(total_steps):
+            bx, by = zip(*(self.loaders[i].next_batch() for i in members))
+            xs.append(np.stack(bx))
+            ys.append(np.stack(by))
+        x = np.stack(xs)  # (K, n, B, ...)
+        y = np.stack(ys)
+        J = total_steps // epochs
+        x = x.reshape(J, epochs, *x.shape[1:]).swapaxes(1, 2)
+        y = y.reshape(J, epochs, *y.shape[1:]).swapaxes(1, 2)
+        return x, y
+
+    def sample_round_batches(self, m: int, total_steps: int, epochs: int):
+        """Stage one whole round of cluster-m batches, grouped by interaction,
+        for the engine's fused scan:
+        xs: (J, n, E, B, ...), ys: (J, n, E, B) with J = total_steps // epochs.
+        One host->device transfer per round."""
+        x, y = self._stage_round_np(m, total_steps, epochs)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    def sample_all_cluster_batches(self, total_steps: int, epochs: int):
+        """Stage one 3-tier HFL round for EVERY cluster, padded to a uniform
+        client width so the engine can vmap over clusters:
+        xs: (J, M, n_max, E, B, ...), ys: (J, M, n_max, E, B).
+        Padded client slots replicate the cluster's first member (their
+        updates are masked out downstream — see `padded_cluster_weights`)."""
+        n_max = max(len(members) for members in self.cluster_members)
+        per_x, per_y = [], []
+        for m in range(self.num_clusters):
+            x, y = self._stage_round_np(m, total_steps, epochs)  # (J, n_m, E, ...)
+            pad = n_max - x.shape[1]
+            if pad:
+                x = np.concatenate([x, np.repeat(x[:, :1], pad, axis=1)], axis=1)
+                y = np.concatenate([y, np.repeat(y[:, :1], pad, axis=1)], axis=1)
+            per_x.append(x)
+            per_y.append(y)
+        return jnp.asarray(np.stack(per_x, axis=1)), jnp.asarray(np.stack(per_y, axis=1))
+
+    def padded_cluster_weights(self):
+        """(gammas, mask), both (M, n_max): per-cluster client weights padded
+        with zeros, and a 1/0 mask of real client slots."""
+        n_max = max(len(members) for members in self.cluster_members)
+        M = self.num_clusters
+        gammas = np.zeros((M, n_max), np.float32)
+        mask = np.zeros((M, n_max), np.float32)
+        for m in range(M):
+            w = self.cluster_weights(m)
+            gammas[m, : len(w)] = w
+            mask[m, : len(w)] = 1.0
+        return jnp.asarray(gammas), jnp.asarray(mask)
 
     def init_params(self) -> PyTree:
         return self.model.init(jax.random.PRNGKey(self.seed))
@@ -199,7 +256,3 @@ def evaluate(model: Classifier, params: PyTree, dataset: Dataset, batch: int = 5
     return n_correct / max(n, 1)
 
 
-def weighted_tree_sum(trees: list[PyTree], weights: np.ndarray) -> PyTree:
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-    w = jnp.asarray(weights, jnp.float32)
-    return jax.tree.map(lambda x: jnp.einsum("n,n...->...", w, x), stacked)

@@ -12,9 +12,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.qsgd import ROWS_PER_TILE, qsgd_dequantize_blocks, qsgd_quantize_blocks
+from repro.kernels.ref import qsgd_dequantize_blocks_ref, qsgd_quantize_blocks_ref
 
 PyTree = Any
 DEFAULT_BLOCK = 1024
+
+
+def _use_pallas() -> bool:
+    # Off-TPU the Pallas kernels run in interpret mode (a grid-step loop of
+    # dynamic slices — orders of magnitude slower than fused XLA, and worse
+    # still under vmap). The pure-jnp oracle is bit-identical (enforced by
+    # tests/test_kernels_qsgd.py), so route through it everywhere but TPU.
+    return jax.default_backend() == "tpu"
 
 
 def _pad_to_blocks(v: jnp.ndarray, block: int, rows_per_tile: int):
@@ -30,7 +39,10 @@ def qsgd_quantize(v: jnp.ndarray, key: jax.Array, *, s: int = 16, block: int = D
     """Quantize an arbitrary-shape f32 array. Returns (q, norms, orig_size)."""
     blocks, n = _pad_to_blocks(v, block, ROWS_PER_TILE)
     u = jax.random.uniform(key, blocks.shape, jnp.float32)
-    q, norms = qsgd_quantize_blocks(blocks, u, s=s)
+    if _use_pallas():
+        q, norms = qsgd_quantize_blocks(blocks, u, s=s)
+    else:
+        q, norms = qsgd_quantize_blocks_ref(blocks, u, s)
     return q, norms, n
 
 
@@ -38,7 +50,10 @@ def qsgd_quantize(v: jnp.ndarray, key: jax.Array, *, s: int = 16, block: int = D
 def qsgd_dequantize(q, norms, *, s: int = 16, shape: tuple = (), block: int = DEFAULT_BLOCK):
     import numpy as np
 
-    flat = qsgd_dequantize_blocks(q, norms, s=s).reshape(-1)
+    if _use_pallas():
+        flat = qsgd_dequantize_blocks(q, norms, s=s).reshape(-1)
+    else:
+        flat = qsgd_dequantize_blocks_ref(q, norms, s).reshape(-1)
     n = int(np.prod(shape)) if shape else flat.size
     return flat[:n].reshape(shape)
 
@@ -54,4 +69,34 @@ def qsgd_compress_tree(tree: PyTree, key: jax.Array, *, s: int = 16) -> PyTree:
     leaves, treedef = jax.tree.flatten(tree)
     keys = jax.random.split(key, len(leaves))
     out = [qsgd_roundtrip(leaf, k, s=s).astype(leaf.dtype) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_sparsify(v: jnp.ndarray, *, k: int) -> jnp.ndarray:
+    """Keep the k largest-magnitude entries of v (any shape), zero the rest.
+
+    The deterministic sparsification half of a Top-K channel: the receiver
+    reconstructs the dense tensor from (value, index) pairs, so the lossy
+    roundtrip is exactly this masking."""
+    flat = v.reshape(-1)
+    k = min(k, flat.size)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    return (flat * mask).reshape(v.shape)
+
+
+def topk_sparsify_tree(tree: PyTree, *, fraction: float) -> PyTree:
+    """Whole-message Top-K: keep the ceil(fraction * total_size) largest-magnitude
+    entries across ALL leaves of the pytree (one message = one flat vector), so
+    the encoded size is exactly k (index, value) pairs over the full dimension."""
+    import math
+
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+    sparse = topk_sparsify(flat, k=max(1, math.ceil(fraction * flat.size)))
+    out, off = [], 0
+    for leaf in leaves:
+        out.append(sparse[off : off + leaf.size].reshape(leaf.shape).astype(leaf.dtype))
+        off += leaf.size
     return jax.tree.unflatten(treedef, out)

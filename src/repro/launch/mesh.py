@@ -9,6 +9,15 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes, devices) -> jax.sharding.Mesh:
+    # axis_types / AxisType only exist on newer jax; older versions default
+    # to Auto semantics anyway
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devices, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -22,8 +31,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             f"mesh {shape} needs {n} devices, found {len(devices)} — run via "
             "launch/dryrun.py which sets xla_force_host_platform_device_count"
         )
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1, pod: int | None = None):
@@ -33,8 +41,7 @@ def make_debug_mesh(data: int = 1, model: int = 1, pod: int | None = None):
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, jax.devices()[:n])
 
 
 POD_CHIPS = 256

@@ -2,6 +2,7 @@
 and the §1 claim that the 2-step rule is robust to them."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dynamics import iov_gilbert, leo_constellation, make_dynamic

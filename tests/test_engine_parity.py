@@ -1,0 +1,305 @@
+"""Seed-parity regression: the engine-driven algorithms must reproduce the
+pre-refactor (host-level, per-interaction) loop implementations at fixed seed.
+
+The reference implementations below are verbatim copies of the pre-engine
+driver loops: eager per-interaction staging, per-interaction `float()` host
+syncs, Python loops over clusters, `key, sub = jax.random.split(key)` chains.
+The one intentional deviation is the Hier-Local-QSGD ES->PS hop, which now
+splits its PRNG key per leaf (the historical implementation reused one subkey
+for every layer — the bug class the Channel abstraction removes); the
+reference mirrors the FIXED behavior via `qsgd_compress_tree`.
+
+Tolerance: losses within 1e-5, accuracies within 1e-5 (test-set accuracy is
+quantized in steps of 1/test_size, so this effectively requires identical
+predictions). QSGD cases run short horizons: stochastic rounding (`floor`)
+can amplify sub-ulp compiler-fusion differences into level flips over long
+runs, but short fixed-seed trajectories are stable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedCHSConfig, run_fed_chs
+from repro.core.baselines import (
+    FedAvgConfig,
+    HierLocalQSGDConfig,
+    WRWGDConfig,
+    run_fedavg,
+    run_hier_local_qsgd,
+    run_wrwgd,
+)
+from repro.core.scheduler import FedCHSScheduler
+from repro.core.simulation import (
+    _cluster_sgd_fn,
+    _local_sgd_fn,
+    _multi_client_local_sgd_fn,
+    evaluate,
+)
+from repro.core.topology import make_topology
+from repro.kernels.ops import qsgd_compress_tree
+from repro.optim.schedules import paper_sqrt_schedule
+from repro.utils import tree_add
+
+
+def _assert_trajectories_match(ref, new, atol=1e-5):
+    ref_rounds, ref_acc, ref_loss = ref
+    assert ref_rounds == new.rounds
+    np.testing.assert_allclose(new.train_loss, ref_loss, atol=atol, rtol=0)
+    np.testing.assert_allclose(new.test_acc, ref_acc, atol=atol, rtol=0)
+
+
+# --------------------------------------------------------------------------
+# reference implementations (pre-refactor loop structure)
+# --------------------------------------------------------------------------
+
+
+def ref_fed_chs(task, config):
+    task.reset_loaders(config.seed)
+    K, E = config.local_steps, config.local_epochs
+    interactions = K // E
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = np.array([sched_fn(k) for k in range(K)], dtype=np.float32)
+
+    topo = make_topology(config.topology, task.num_clusters, seed=config.topology_seed)
+    rng = np.random.default_rng(config.seed)
+    m0 = (
+        int(rng.integers(task.num_clusters))
+        if config.initial_cluster is None
+        else config.initial_cluster
+    )
+    scheduler = FedCHSScheduler(topo, task.cluster_sizes, initial=m0)
+
+    params = task.init_params()
+    cluster_phase = _cluster_sgd_fn(task.model)
+    multi_local = _multi_client_local_sgd_fn(task.model)
+    key = jax.random.PRNGKey(config.seed + 1)
+
+    rounds_log, acc_log, loss_log = [], [], []
+    m = scheduler.state.current
+    for t in range(config.rounds):
+        gammas = jnp.asarray(task.cluster_weights(m))
+        if E == 1 and config.qsgd_levels is None:
+            xs, ys = task.sample_cluster_batches(m, K)
+            params, loss = cluster_phase(params, xs, ys, gammas, jnp.asarray(lrs))
+        else:
+            loss_acc = 0.0
+            for j in range(interactions):
+                lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
+                xs, ys = task.sample_cluster_batches(m, E)
+                xs = jnp.swapaxes(xs, 0, 1)
+                ys = jnp.swapaxes(ys, 0, 1)
+                new_p, losses = multi_local(params, xs, ys, lr_slice)
+                deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
+                if config.qsgd_levels is not None:
+                    key, sub = jax.random.split(key)
+                    deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
+                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+                params = tree_add(params, agg)
+                loss_acc += float(jnp.mean(losses))
+            loss = loss_acc / interactions
+
+        m = scheduler.advance()
+        if t % config.eval_every == 0 or t == config.rounds - 1:
+            rounds_log.append(t)
+            acc_log.append(evaluate(task.model, params, task.dataset))
+            loss_log.append(float(loss))
+    return rounds_log, acc_log, loss_log
+
+
+def ref_fedavg(task, config):
+    task.reset_loaders(config.seed)
+    K = config.local_steps
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = jnp.asarray([sched_fn(k) for k in range(K)], dtype=jnp.float32)
+
+    params = task.init_params()
+    multi_local = _multi_client_local_sgd_fn(task.model)
+    gammas = jnp.asarray(task.global_weights())
+    key = jax.random.PRNGKey(config.seed + 1)
+
+    rounds_log, acc_log, loss_log = [], [], []
+    n = task.num_clients
+    for t in range(config.rounds):
+        bx, by = zip(*(task.sample_client_batches(i, K) for i in range(n)))
+        xs = jnp.stack(bx)
+        ys = jnp.stack(by)
+        new_p, losses = multi_local(params, xs, ys, lrs)
+        deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
+        if config.qsgd_levels is not None:
+            key, sub = jax.random.split(key)
+            deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
+        agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+        params = tree_add(params, agg)
+
+        if t % config.eval_every == 0 or t == config.rounds - 1:
+            rounds_log.append(t)
+            acc_log.append(evaluate(task.model, params, task.dataset))
+            loss_log.append(float(jnp.mean(losses)))
+    return rounds_log, acc_log, loss_log
+
+
+def ref_wrwgd(task, config):
+    task.reset_loaders(config.seed)
+    K = config.local_steps
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = jnp.asarray([sched_fn(k) for k in range(K)], dtype=jnp.float32)
+
+    topo = make_topology(config.topology, task.num_clients, seed=config.topology_seed)
+    rng = np.random.default_rng(config.seed)
+    current = int(rng.integers(task.num_clients))
+
+    params = task.init_params()
+    local = _local_sgd_fn(task.model)
+
+    rounds_log, acc_log, loss_log = [], [], []
+    for t in range(config.rounds):
+        xs, ys = task.sample_client_batches(current, K)
+        params, loss = local(params, xs, ys, lrs)
+
+        nbrs = list(topo.neighbors(current))
+        if config.weighting == "data_size":
+            w = task.client_sizes[nbrs]
+            w = w / w.sum()
+        else:
+            w = np.full(len(nbrs), 1.0 / len(nbrs))
+        current = int(rng.choice(nbrs, p=w))
+
+        if t % config.eval_every == 0 or t == config.rounds - 1:
+            rounds_log.append(t)
+            acc_log.append(evaluate(task.model, params, task.dataset))
+            loss_log.append(float(loss))
+    return rounds_log, acc_log, loss_log
+
+
+def ref_hier_local_qsgd(task, config):
+    task.reset_loaders(config.seed)
+    K, E = config.local_steps, config.local_epochs
+    interactions = K // E
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = np.asarray([sched_fn(k) for k in range(K)], dtype=np.float32)
+
+    params = task.init_params()
+    multi_local = _multi_client_local_sgd_fn(task.model)
+    key = jax.random.PRNGKey(config.seed + 1)
+
+    M = task.num_clusters
+    cluster_gammas = [jnp.asarray(task.cluster_weights(m)) for m in range(M)]
+    es_weights = jnp.asarray(
+        np.array(task.cluster_sizes, dtype=np.float32) / sum(task.cluster_sizes)
+    )
+
+    rounds_log, acc_log, loss_log = [], [], []
+    for t in range(config.rounds):
+        cluster_params = [params] * M
+        loss_acc = 0.0
+        for j in range(interactions):
+            lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
+            for m in range(M):
+                xs, ys = task.sample_cluster_batches(m, E)
+                xs = jnp.swapaxes(xs, 0, 1)
+                ys = jnp.swapaxes(ys, 0, 1)
+                new_p, losses = multi_local(cluster_params[m], xs, ys, lr_slice)
+                deltas = jax.tree.map(
+                    lambda np_, op: np_ - op[None], new_p, cluster_params[m]
+                )
+                if config.qsgd_levels is not None:
+                    key, sub = jax.random.split(key)
+                    deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
+                agg = jax.tree.map(
+                    lambda dl, g=cluster_gammas[m]: jnp.einsum("n,n...->...", g, dl),
+                    deltas,
+                )
+                cluster_params[m] = tree_add(cluster_params[m], agg)
+                loss_acc += float(jnp.mean(losses))
+
+        es_deltas = []
+        for m in range(M):
+            delta = jax.tree.map(lambda a, b: a - b, cluster_params[m], params)
+            if config.qsgd_levels is not None:
+                key, sub = jax.random.split(key)
+                # per-leaf key split (the fixed ES->PS behavior)
+                delta = qsgd_compress_tree(delta, sub, s=config.qsgd_levels)
+            es_deltas.append(delta)
+        stacked = jax.tree.map(lambda *xs_: jnp.stack(xs_), *es_deltas)
+        agg = jax.tree.map(lambda x: jnp.einsum("m,m...->...", es_weights, x), stacked)
+        params = tree_add(params, agg)
+
+        if t % config.eval_every == 0 or t == config.rounds - 1:
+            rounds_log.append(t)
+            acc_log.append(evaluate(task.model, params, task.dataset))
+            loss_log.append(loss_acc / (interactions * M))
+    return rounds_log, acc_log, loss_log
+
+
+# --------------------------------------------------------------------------
+# parity assertions
+# --------------------------------------------------------------------------
+
+
+def test_fed_chs_grad_mode_parity(small_task):
+    cfg = FedCHSConfig(rounds=5, local_steps=6, eval_every=2, seed=3)
+    _assert_trajectories_match(ref_fed_chs(small_task, cfg), run_fed_chs(small_task, cfg))
+
+
+def test_fed_chs_local_epochs_parity(small_task):
+    cfg = FedCHSConfig(rounds=4, local_steps=6, local_epochs=3, eval_every=2, seed=1)
+    _assert_trajectories_match(ref_fed_chs(small_task, cfg), run_fed_chs(small_task, cfg))
+
+
+def test_fed_chs_qsgd_parity(small_task):
+    cfg = FedCHSConfig(rounds=3, local_steps=4, local_epochs=2, qsgd_levels=16,
+                       eval_every=1, seed=0)
+    _assert_trajectories_match(ref_fed_chs(small_task, cfg), run_fed_chs(small_task, cfg))
+
+
+def test_fedavg_parity(small_task):
+    cfg = FedAvgConfig(rounds=3, local_steps=5, qsgd_levels=8, eval_every=1, seed=2)
+    _assert_trajectories_match(ref_fedavg(small_task, cfg), run_fedavg(small_task, cfg))
+
+
+def test_fedavg_dense_parity(small_task):
+    cfg = FedAvgConfig(rounds=3, local_steps=5, eval_every=1, seed=0)
+    _assert_trajectories_match(ref_fedavg(small_task, cfg), run_fedavg(small_task, cfg))
+
+
+def test_wrwgd_parity(small_task):
+    cfg = WRWGDConfig(rounds=8, local_steps=5, eval_every=3, seed=4)
+    _assert_trajectories_match(ref_wrwgd(small_task, cfg), run_wrwgd(small_task, cfg))
+
+
+def test_hier_local_qsgd_parity(small_task):
+    # small_task has equal-size clusters, so the padded/masked vmapped round
+    # is sample-for-sample identical to the sequential per-cluster loop
+    cfg = HierLocalQSGDConfig(rounds=2, local_steps=4, local_epochs=2,
+                              qsgd_levels=16, eval_every=1, seed=0)
+    _assert_trajectories_match(
+        ref_hier_local_qsgd(small_task, cfg), run_hier_local_qsgd(small_task, cfg)
+    )
+
+
+def test_hier_local_dense_parity(small_task):
+    cfg = HierLocalQSGDConfig(rounds=2, local_steps=4, local_epochs=2,
+                              qsgd_levels=None, eval_every=1, seed=5)
+    _assert_trajectories_match(
+        ref_hier_local_qsgd(small_task, cfg), run_hier_local_qsgd(small_task, cfg)
+    )
+
+
+def test_hier_parity_with_ragged_clusters():
+    """Ragged cluster sizes exercise the padding/masking path. Dense channel:
+    padded slots must contribute exactly nothing."""
+    from repro.core.simulation import FLTask
+    from repro.data import dirichlet_partition, make_dataset
+    from repro.models.classifier import make_classifier
+
+    ds = make_dataset("mnist", train_size=1200, test_size=300, seed=1)
+    clients = dirichlet_partition(ds.train_y, 7, 0.6, seed=1)
+    clusters = [[0, 1, 2], [3, 4], [5, 6]]  # ragged: 3/2/2
+    model = make_classifier("mlp", "mnist", ds.spec.image_shape, 10)
+    task = FLTask(model, ds, clients, clusters, batch_size=16, seed=1)
+
+    cfg = HierLocalQSGDConfig(rounds=2, local_steps=4, local_epochs=2,
+                              qsgd_levels=None, eval_every=1, seed=0)
+    _assert_trajectories_match(
+        ref_hier_local_qsgd(task, cfg), run_hier_local_qsgd(task, cfg)
+    )

@@ -1,6 +1,7 @@
 """Dirichlet non-IID partitioner: correctness + hypothesis properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.partition import (
