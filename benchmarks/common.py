@@ -58,25 +58,31 @@ ALGORITHMS = ("fed_chs", "fedavg", "wrwgd", "hier_local_qsgd")
 
 
 def run_algorithm(name: str, task: FLTask, scale: BenchScale, *, qsgd: int | None = None,
-                  seed: int = 0):
+                  seed: int = 0, track_events: bool = False):
+    """`track_events=False` (default) skips the per-message CommEvent stream —
+    only the netsim time-to-accuracy suite replays events, and at --full
+    scale the stream would be millions of tuples per run."""
     t0 = time.time()
     if name == "fed_chs":
         res = run_fed_chs(task, FedCHSConfig(
             rounds=scale.rounds, local_steps=scale.local_steps,
-            eval_every=scale.eval_every, qsgd_levels=qsgd, seed=seed))
+            eval_every=scale.eval_every, qsgd_levels=qsgd, seed=seed,
+            track_events=track_events))
     elif name == "fedavg":
         res = run_fedavg(task, FedAvgConfig(
             rounds=max(scale.rounds // 4, 4), local_steps=scale.local_steps,
-            eval_every=max(scale.eval_every // 4, 1), qsgd_levels=qsgd, seed=seed))
+            eval_every=max(scale.eval_every // 4, 1), qsgd_levels=qsgd, seed=seed,
+            track_events=track_events))
     elif name == "wrwgd":
         res = run_wrwgd(task, WRWGDConfig(
             rounds=scale.rounds * 2, local_steps=scale.local_steps,
-            eval_every=scale.eval_every * 2, seed=seed))
+            eval_every=scale.eval_every * 2, seed=seed, track_events=track_events))
     elif name == "hier_local_qsgd":
         res = run_hier_local_qsgd(task, HierLocalQSGDConfig(
             rounds=max(scale.rounds // 6, 2), local_steps=scale.local_steps,
             local_epochs=5, eval_every=max(scale.eval_every // 6, 1),
-            qsgd_levels=qsgd if qsgd is not None else 16, seed=seed))
+            qsgd_levels=qsgd if qsgd is not None else 16, seed=seed,
+            track_events=track_events))
     else:
         raise ValueError(name)
     return res, time.time() - t0

@@ -55,7 +55,8 @@ def run(quick: bool = True):
 
         def emit(name, tag, res, wall):
             edge, ps, total = _bits_split(res, gamma)
-            fmt = lambda v: f"{v:9.1f}" if v is not None else f"{'-':>9s}"
+            def fmt(v):
+                return f"{v:9.1f}" if v is not None else f"{'-':>9s}"
             print(f"{dataset:9s} {name:22s} {tag:>10s} {fmt(edge)} "
                   f"{fmt(ps)[:8]:>8s} {fmt(total)} {res.final_acc():9.4f}")
             rows.append((f"fig2/{dataset}-{name}-{tag}",
@@ -66,19 +67,21 @@ def run(quick: bool = True):
             t0 = time.time()
             res = run_fed_chs(task, FedCHSConfig(
                 rounds=scale.rounds, local_steps=scale.local_steps,
-                local_epochs=E, eval_every=1, qsgd_levels=qsgd, seed=0))
+                local_epochs=E, eval_every=1, qsgd_levels=qsgd, seed=0,
+                track_events=False))
             emit(f"fed_chs(E={E})", "qsgd16" if qsgd else "dense",
                  res, time.time() - t0)
         for qsgd in (None, 16):
             t0 = time.time()
             res = run_fedavg(task, FedAvgConfig(
                 rounds=max(scale.rounds // 4, 4), local_steps=scale.local_steps,
-                eval_every=1, qsgd_levels=qsgd, seed=0))
+                eval_every=1, qsgd_levels=qsgd, seed=0, track_events=False))
             emit("fedavg", "qsgd16" if qsgd else "dense", res, time.time() - t0)
         t0 = time.time()
         res = run_hier_local_qsgd(task, HierLocalQSGDConfig(
             rounds=max(scale.rounds // 6, 2), local_steps=scale.local_steps,
-            local_epochs=5, eval_every=1, qsgd_levels=16, seed=0))
+            local_epochs=5, eval_every=1, qsgd_levels=16, seed=0,
+            track_events=False))
         emit("hier_local_qsgd", "qsgd16", res, time.time() - t0)
     return rows
 

@@ -3,7 +3,6 @@ and M (number of ESs)."""
 from __future__ import annotations
 
 from benchmarks.common import BenchScale, build_task, run_algorithm
-from repro.core import FedCHSConfig, run_fed_chs
 
 
 def run(quick: bool = True):

@@ -10,7 +10,6 @@ run use:
       --rounds 300 --batch 8
 """
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -5,8 +5,13 @@
 # the TPU-native sharded variant.
 from repro.core.engine import RoundEngine, split_chain
 from repro.core.fed_chs import FedCHSConfig, run_fed_chs
-from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
-from repro.core.scheduler import FedCHSScheduler, RandomWalkScheduler, RingScheduler
+from repro.core.ledger import CommEvent, CommLedger, dense_message_bits, qsgd_message_bits
+from repro.core.scheduler import (
+    FedCHSScheduler,
+    LatencyAwareScheduler,
+    RandomWalkScheduler,
+    RingScheduler,
+)
 from repro.core.simulation import FLTask, RunResult, evaluate
 from repro.core.topology import Topology, make_topology
 
@@ -15,10 +20,12 @@ __all__ = [
     "run_fed_chs",
     "RoundEngine",
     "split_chain",
+    "CommEvent",
     "CommLedger",
     "dense_message_bits",
     "qsgd_message_bits",
     "FedCHSScheduler",
+    "LatencyAwareScheduler",
     "RandomWalkScheduler",
     "RingScheduler",
     "FLTask",

@@ -30,6 +30,7 @@ class FedAvgConfig:
     bits_per_param: int = 32
     qsgd_levels: int | None = None
     channel: Channel | None = None  # explicit uplink channel
+    track_events: bool = True          # False: bits only, no CommEvent stream
     seed: int = 0
     schedule: Schedule | None = None
 
@@ -42,7 +43,7 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
 
     params = task.init_params()
     d = task.num_params()
-    ledger = CommLedger()
+    ledger = CommLedger(track_events=config.track_events)
     channel = (
         config.channel
         if config.channel is not None
@@ -67,9 +68,16 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
             key, subs = split_chain(key, 1)
         params, losses = engine.cluster_round(params, xs, ys, gammas, lrs, subs)
 
-        ledger.record("ps_to_client", down_bits, n)
-        ledger.record("client_to_ps", up_bits, n)
-        ledger.snapshot(t)
+        if ledger.track_events:
+            for i in range(n):
+                ledger.record("ps_to_client", down_bits, round=t, phase=0,
+                              sender="ps", receiver=f"client:{i}")
+                ledger.record("client_to_ps", up_bits, round=t, phase=0,
+                              sender=f"client:{i}", receiver="ps")
+        else:
+            ledger.record("ps_to_client", down_bits, n)
+            ledger.record("client_to_ps", up_bits, n)
+        engine.end_round(ledger, t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)

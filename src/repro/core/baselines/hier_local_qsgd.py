@@ -37,6 +37,7 @@ class HierLocalQSGDConfig:
     qsgd_levels: int | None = 16   # uplink quantization (client->ES and ES->PS)
     channel: Channel | None = None     # explicit client->ES channel
     es_channel: Channel | None = None  # explicit ES->PS channel (defaults to channel)
+    track_events: bool = True          # False: bits only, no CommEvent stream
     seed: int = 0
     schedule: Schedule | None = None
 
@@ -52,7 +53,7 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
 
     params = task.init_params()
     d = task.num_params()
-    ledger = CommLedger()
+    ledger = CommLedger(track_events=config.track_events)
     channel = (
         config.channel
         if config.channel is not None
@@ -86,11 +87,26 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
             params, xs, ys, gammas, mask, es_weights, lrs_grouped, subs, es_subs
         )
 
-        ledger.record("es_to_client", down_bits, interactions * N)
-        ledger.record("client_to_es", up_bits, interactions * N)
-        ledger.record("es_to_ps", es_up_bits, M)
-        ledger.record("ps_to_es", down_bits, M)
-        ledger.snapshot(t)
+        if ledger.track_events:
+            for j in range(interactions):
+                for m in range(M):
+                    es = f"es:{m}"
+                    for i in task.cluster_members[m]:
+                        ledger.record("es_to_client", down_bits, round=t, phase=j,
+                                      sender=es, receiver=f"client:{i}")
+                        ledger.record("client_to_es", up_bits, round=t, phase=j,
+                                      sender=f"client:{i}", receiver=es)
+            for m in range(M):
+                ledger.record("es_to_ps", es_up_bits, round=t, phase=interactions,
+                              sender=f"es:{m}", receiver="ps")
+                ledger.record("ps_to_es", down_bits, round=t, phase=interactions + 1,
+                              sender="ps", receiver=f"es:{m}")
+        else:
+            ledger.record("es_to_client", down_bits, interactions * N)
+            ledger.record("client_to_es", up_bits, interactions * N)
+            ledger.record("es_to_ps", es_up_bits, M)
+            ledger.record("ps_to_es", down_bits, M)
+        engine.end_round(ledger, t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)

@@ -30,6 +30,7 @@ class WRWGDConfig:
     topology: str = "random_sparse"   # client-level graph, degree <= 3 (paper B.1)
     topology_seed: int = 0
     weighting: str = "data_size"      # or "uniform"
+    track_events: bool = True          # False: bits only, no CommEvent stream
     eval_every: int = 10
     bits_per_param: int = 32
     seed: int = 0
@@ -48,7 +49,7 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
 
     params = task.init_params()
     d = task.num_params()
-    ledger = CommLedger()
+    ledger = CommLedger(track_events=config.track_events)
     channel = DenseChannel(config.bits_per_param)
     engine = RoundEngine(task.model, channel)
     hop_bits = channel.message_bits(d)
@@ -66,9 +67,11 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
             w = w / w.sum()
         else:
             w = np.full(len(nbrs), 1.0 / len(nbrs))
+        prev = current
         current = int(rng.choice(nbrs, p=w))
-        ledger.record("client_to_client", hop_bits, 1)
-        ledger.snapshot(t)
+        ledger.record("client_to_client", hop_bits, round=t, phase=0,
+                      sender=f"client:{prev}", receiver=f"client:{current}")
+        engine.end_round(ledger, t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)

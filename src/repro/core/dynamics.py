@@ -18,6 +18,15 @@ The two motivating systems, made concrete:
 Both return plain `Topology` objects per round, so the 2-step scheduler
 needs nothing but `set_topology` between rounds — the rule itself is
 topology-free, exactly the paper's claim.
+
+For the network-time simulator (`repro.netsim`), connectivity alone is too
+coarse: an IoV link that faded this round but was re-added by the repair
+step is *flaky*, not free — the RSU relays through vehicles at a fraction
+of the base bandwidth.  `iov_gilbert` therefore exposes the pre-repair drop
+set as a `dropped(t)` attribute on the returned callable; `NetworkModel`
+maps "dropped or invisible this round" to degraded bandwidth rather than a
+missing edge (the paper's §3.2 overhead model counts the bits either way —
+only the *time* differs).
 """
 from __future__ import annotations
 
@@ -59,6 +68,13 @@ def iov_gilbert(num_nodes: int, *, p_drop: float = 0.3, seed: int = 0) -> Dynami
     base = [(m, m + 1) for m in range(num_nodes - 1)]
     base += [(m, m + 2) for m in range(num_nodes - 2)]
 
+    def dropped_at(t: int) -> frozenset[tuple[int, int]]:
+        """The links Gilbert fading took down this round, *before* repair —
+        replayable standalone because the drop draws precede the repair
+        draws in the shared per-round rng."""
+        rng = np.random.default_rng((seed + 1) * 1_000_003 + t)
+        return frozenset(e for e in base if rng.random() < p_drop)
+
     def at(t: int) -> Topology:
         rng = np.random.default_rng((seed + 1) * 1_000_003 + t)
         up = [e for e in base if rng.random() >= p_drop]
@@ -82,6 +98,7 @@ def iov_gilbert(num_nodes: int, *, p_drop: float = 0.3, seed: int = 0) -> Dynami
             adj = build(up)
         return _freeze(adj)
 
+    at.dropped = dropped_at  # degraded-link metadata for repro.netsim
     return at
 
 

@@ -23,6 +23,14 @@ The simulation stack has three layers:
       Top-K) and its `message_bits` accounting.  Compiled into the scan
       body, so adding a channel never touches a driver or the engine.
 
+A fourth, passive layer rides on the drivers' ledger entries:
+`repro.netsim` replays the recorded per-message `CommEvent` stream through
+link/compute models to price a run in wall-clock seconds — the paper's
+§3.2 overhead model counts only bits, which is exactly what the event
+metadata extends without changing (aggregate accounting is bit-identical).
+`end_round` below is the uniform per-round bookkeeping hook every driver
+calls once per round.
+
 Round modes
 -----------
 * `grad_round`  — Eq. (5) literal: every in-cluster iteration uploads a
@@ -53,6 +61,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.channels import Channel, DenseChannel
+from repro.core.ledger import CommLedger
 from repro.models.classifier import Classifier
 from repro.utils import tree_add, tree_sub
 
@@ -189,7 +198,7 @@ def _multi_round_fn(model: Classifier, channel: Channel, es_channel: Channel):
     def round_fn(params, xs, ys, gammas, mask, es_weights, lrs, subs, es_subs):
         M = xs.shape[1]
         cparams0 = jax.tree.map(
-            lambda l: jnp.broadcast_to(l[None], (M,) + l.shape), params
+            lambda leaf: jnp.broadcast_to(leaf[None], (M,) + leaf.shape), params
         )
 
         def interaction(cp, inp):
@@ -256,3 +265,12 @@ class RoundEngine:
             es_subs = dummy_subs(xs.shape[1])
         fn = _multi_round_fn(self.model, self.channel, self.es_channel or self.channel)
         return fn(params, xs, ys, gammas, mask, es_weights, lrs, subs, es_subs)
+
+    def end_round(self, ledger: CommLedger, round_idx: int) -> None:
+        """Uniform end-of-round bookkeeping: snapshot the ledger.
+
+        Every driver calls this exactly once per round (instead of each
+        driver deciding its own snapshot cadence), so `bits_until` always
+        sees a complete per-round history regardless of algorithm.
+        """
+        ledger.snapshot(round_idx)

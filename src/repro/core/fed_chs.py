@@ -15,11 +15,16 @@ Round t:
 
 Communication is metered bit-exactly via CommLedger; uplinks traverse a
 pluggable `Channel` (dense / Pallas-backed QSGD / Top-K) which owns both the
-in-graph lossy transform and the per-message bit accounting.
+in-graph lossy transform and the per-message bit accounting.  Every message
+is also recorded as a structured `CommEvent` (round, interaction phase,
+sender, receiver) so `repro.netsim` can replay the run through link models
+and answer the wall-clock question §3.2's bit counting cannot: whether the
+serial ES->ES chain beats the baselines' parallel-but-PS-bound uploads.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +33,7 @@ import numpy as np
 from repro.comm.channels import Channel, DenseChannel, make_channel
 from repro.core.engine import RoundEngine, split_chain
 from repro.core.ledger import CommLedger
-from repro.core.scheduler import FedCHSScheduler
+from repro.core.scheduler import FedCHSScheduler, LatencyAwareScheduler
 from repro.core.simulation import FLTask, RunResult, evaluate
 from repro.core.topology import make_topology
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
@@ -49,6 +54,11 @@ class FedCHSConfig:
     qsgd_levels: int | None = None         # uplink compression (None = dense)
     channel: Channel | None = None         # explicit uplink channel; overrides
                                            # qsgd_levels/bits_per_param
+    link_delay: Callable[[int, int], float] | None = None
+                                           # ES-pair delay (seconds); switches the
+                                           # scheduler to LatencyAwareScheduler
+    track_events: bool = True              # False: bits only, no CommEvent stream
+                                           # (saves memory at --full scale)
     seed: int = 0
     schedule: Schedule | None = None       # default: paper eta_k = 1/(K sqrt(k+1))
 
@@ -77,11 +87,16 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         if config.initial_cluster is None
         else config.initial_cluster
     )
-    scheduler = FedCHSScheduler(topo, task.cluster_sizes, initial=m0)
+    if config.link_delay is not None:
+        scheduler = LatencyAwareScheduler(
+            topo, task.cluster_sizes, config.link_delay, initial=m0
+        )
+    else:
+        scheduler = FedCHSScheduler(topo, task.cluster_sizes, initial=m0)
 
     params = task.init_params()
     d = task.num_params()
-    ledger = CommLedger()
+    ledger = CommLedger(track_events=config.track_events)
     channel = (
         config.channel
         if config.channel is not None
@@ -113,9 +128,20 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
                 key, subs = split_chain(key, interactions)
             params, losses = engine.cluster_round(params, xs, ys, gammas, lrs_grouped, subs)
 
-        # comm accounting for this round
-        ledger.record("es_to_client", down_bits, interactions * len(members))
-        ledger.record("client_to_es", up_bits, interactions * len(members))
+        # comm accounting: one broadcast + one upload per client per
+        # interaction, metered per message so netsim sees the phase barriers
+        # (with events off, the aggregate-identical single records suffice)
+        es, prev_m = f"es:{m}", m
+        if ledger.track_events:
+            for j in range(interactions):
+                for i in members:
+                    ledger.record("es_to_client", down_bits, round=t, phase=j,
+                                  sender=es, receiver=f"client:{i}")
+                    ledger.record("client_to_es", up_bits, round=t, phase=j,
+                                  sender=f"client:{i}", receiver=es)
+        else:
+            ledger.record("es_to_client", down_bits, interactions * len(members))
+            ledger.record("client_to_es", up_bits, interactions * len(members))
 
         # next passing cluster (2-step rule) + one ES->ES model hop.
         # Under a dynamic network the ES sees *this round's* visibility graph
@@ -123,8 +149,9 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         if dyn is not None:
             scheduler.set_topology(dyn(t))
         m = scheduler.advance()
-        ledger.record("es_to_es", down_bits, 1)
-        ledger.snapshot(t)
+        ledger.record("es_to_es", down_bits, round=t, phase=interactions,
+                      sender=f"es:{prev_m}", receiver=f"es:{m}")
+        engine.end_round(ledger, t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)

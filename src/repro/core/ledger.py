@@ -1,4 +1,4 @@
-"""Bit-exact communication accounting.
+"""Bit-exact communication accounting + the structured message-event stream.
 
 The paper's §3.2 "Communication Overhead" paragraph and Fig. 2 count information
 bits for three hop types:
@@ -9,16 +9,33 @@ bits for three hop types:
 
 Each model/gradient vector of d floats costs Q bits (Q = 32 d uncompressed; QSGD
 compression changes Q per message and the ledger records the compressed size).
+
+§3.2 counts *bits*; it deliberately says nothing about *time*.  To let the
+repo also answer "is Fed-CHS's serial ES->ES pass actually faster than the
+baselines' parallel uploads on a real network?" (the HiFlash-style
+time-to-accuracy question), `record` optionally attaches per-message metadata
+— (round, phase, sender, receiver) — producing a structured `CommEvent`
+stream that `repro.netsim` replays through link models into wall-clock
+timestamps.  The metadata is accounting-neutral: aggregate `bits`/`messages`
+are bit-identical whether or not metadata is supplied.
+
+Node naming convention (shared with `repro.netsim`): ``"client:<i>"``,
+``"es:<m>"``, ``"ps"``.  `phase` orders traffic within a round — for
+in-cluster traffic it is the interaction index (each interaction is
+broadcast -> local compute -> upload), and inter-tier hops (ES->ES, ES->PS,
+PS->ES) use phases after the last interaction.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
+from typing import NamedTuple
 
 from repro.comm.bits import dense_message_bits, qsgd_message_bits, topk_message_bits
 
 __all__ = [
     "HOPS",
+    "CommEvent",
     "CommLedger",
     "dense_message_bits",
     "qsgd_message_bits",
@@ -37,17 +54,49 @@ HOPS = (
 )
 
 
+class CommEvent(NamedTuple):
+    """One metered message: who sent what to whom, when in the protocol."""
+
+    round: int
+    phase: int
+    hop: str
+    sender: str
+    receiver: str
+    n_bits: int
+
+
 @dataclasses.dataclass
 class CommLedger:
     bits: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
     messages: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
     history: list = dataclasses.field(default_factory=list)  # (round, total_bits) snapshots
+    events: list = dataclasses.field(default_factory=list)   # CommEvent stream
+    track_events: bool = True  # False drops metadata (saves memory at --full scale)
 
-    def record(self, hop: str, n_bits: int, count: int = 1) -> None:
+    def record(
+        self,
+        hop: str,
+        n_bits: int,
+        count: int = 1,
+        *,
+        round: int | None = None,
+        phase: int = 0,
+        sender: str | None = None,
+        receiver: str | None = None,
+    ) -> None:
+        """Meter `count` messages of `n_bits` over `hop`.
+
+        With (round, sender, receiver) metadata, also appends `count`
+        structured `CommEvent`s for the network simulator; aggregates are
+        identical either way.
+        """
         assert hop in HOPS, f"unknown hop {hop}"
         assert n_bits >= 0 and count >= 0
         self.bits[hop] += n_bits * count
         self.messages[hop] += count
+        if self.track_events and round is not None:
+            ev = CommEvent(round, phase, hop, sender or "?", receiver or "?", n_bits)
+            self.events.extend([ev] * count)
 
     def snapshot(self, round_idx: int) -> None:
         self.history.append((round_idx, self.total_bits()))
@@ -60,6 +109,15 @@ class CommLedger:
 
     def breakdown(self) -> dict[str, int]:
         return {h: self.bits[h] for h in HOPS if self.bits[h]}
+
+    def round_events(self) -> dict[int, list[CommEvent]]:
+        """Events grouped by round, each group sorted by (phase, hop, sender)."""
+        grouped: dict[int, list[CommEvent]] = defaultdict(list)
+        for ev in self.events:
+            grouped[ev.round].append(ev)
+        for evs in grouped.values():
+            evs.sort(key=lambda e: (e.phase, e.hop, e.sender, e.receiver))
+        return dict(grouped)
 
     def bits_until(self, predicate_round: int) -> int:
         """Total bits recorded at the first snapshot with round >= predicate_round."""

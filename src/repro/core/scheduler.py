@@ -7,11 +7,16 @@ The chosen node's visit count is incremented (Algorithm 1 line 17).
 
 We also ship alternative schedulers to reproduce the baselines' walks:
 `RandomWalkScheduler` (uniform over neighbors — WRWGD's walk) and
-`RingScheduler` (fixed order — ring-topology SFL).
+`RingScheduler` (fixed order — ring-topology SFL), plus a link-aware
+variant the paper's topology-free rule invites: `LatencyAwareScheduler`
+breaks the least-traversed tie by *smallest ES->ES link delay* (from a
+`repro.netsim` link model) instead of largest dataset — the natural rule
+when the sequential model pass itself is the wall-clock bottleneck.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import numpy as np
 
@@ -52,6 +57,11 @@ class FedCHSScheduler:
         candidates = [m for m, c in zip(nbrs, counts) if c == least]
         if len(candidates) == 1:
             return candidates[0]
+        return self._tie_break(st.current, candidates)
+
+    def _tie_break(self, current: int, candidates: list[int]) -> int:
+        """Step 2: the paper picks the largest cluster dataset."""
+        del current
         sizes = self.cluster_sizes[candidates]
         return candidates[int(np.argmax(sizes))]
 
@@ -73,6 +83,36 @@ class FedCHSScheduler:
             order.append(self.advance())
         self.state = saved
         return order
+
+
+class LatencyAwareScheduler(FedCHSScheduler):
+    """2-step rule, tie broken by link delay instead of dataset size.
+
+    Step 1 is unchanged (least traversed — the fairness half of the paper's
+    rule).  Step 2 picks the candidate with the smallest ES->ES link delay
+    from the current node; remaining exact-delay ties fall back to the
+    paper's largest-dataset rule.  `link_delay(a, b) -> seconds` is any
+    deterministic pair cost, e.g. `NetworkModel.backhaul_delay` bound to the
+    model-message size (see repro/netsim/links.py).
+    """
+
+    def __init__(
+        self,
+        topology,
+        cluster_sizes: list[int],
+        link_delay: Callable[[int, int], float],
+        initial: int = 0,
+    ):
+        super().__init__(topology, cluster_sizes, initial=initial)
+        self.link_delay = link_delay
+
+    def _tie_break(self, current: int, candidates: list[int]) -> int:
+        delays = np.array([self.link_delay(current, m) for m in candidates])
+        best = delays.min()
+        fastest = [m for m, d in zip(candidates, delays) if d == best]
+        if len(fastest) == 1:
+            return fastest[0]
+        return super()._tie_break(current, fastest)
 
 
 class RandomWalkScheduler:

@@ -43,7 +43,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=1, keepdims=True)
     p = jnp.exp(s - m)
-    l = jnp.sum(p, axis=1, keepdims=True)
+    l = jnp.sum(p, axis=1, keepdims=True)  # noqa: E741 — flash-attn's row-sum name
     o_ref[...] = ((p @ v) / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 

@@ -19,7 +19,6 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.configs.registry import ARCH_IDS, get_config, long_context_config
 from repro.launch.mesh import make_production_mesh

@@ -58,7 +58,7 @@ def _lower(args) -> None:
     mem = compiled.memory_analysis()
     print(f"{spec.name} on {'2x16x16' if args.multi_pod else '16x16'} mesh: "
           f"compiled in {time.time() - t0:.1f}s")
-    print(f"  bytes/device: "
+    print("  bytes/device: "
           f"{(mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes) / 2**30:.2f} GiB")
 
 

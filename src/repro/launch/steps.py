@@ -22,7 +22,6 @@ Three step kinds per architecture:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -75,7 +74,7 @@ def abstract_params(cfg: ArchConfig, *, chains: int = 0) -> PyTree:
     p = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
     if chains:
         p = jax.tree.map(
-            lambda l: jax.ShapeDtypeStruct((chains, *l.shape), l.dtype), p
+            lambda leaf: jax.ShapeDtypeStruct((chains, *leaf.shape), leaf.dtype), p
         )
     return p
 

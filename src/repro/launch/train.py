@@ -74,7 +74,7 @@ def _lower(args) -> None:
     cost = compiled.cost_analysis()
     print(f"{spec.name} on {'2x16x16' if args.multi_pod else '16x16'} mesh: "
           f"compiled in {time.time() - t0:.1f}s")
-    print(f"  bytes/device (argument+output+temp): "
+    print("  bytes/device (argument+output+temp): "
           f"{(mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes) / 2**30:.2f} GiB")
     if cost:
         flops = cost.get("flops", 0.0)

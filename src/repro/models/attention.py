@@ -11,7 +11,6 @@ Shapes: x (B, T, D); q (B, T, H, hd); kv (B, S, Hkv, hd); caches (B, S, Hkv, hd)
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

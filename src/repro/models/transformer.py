@@ -24,7 +24,6 @@ Public entry points (all functional):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -1,0 +1,207 @@
+"""Per-algorithm timing adapters: `CommEvent` streams -> job DAGs -> timelines.
+
+A driver run already recorded *what* was sent (hop, bits, sender, receiver,
+round, interaction phase) in its `CommLedger`; the adapter's job is to add
+the *ordering semantics* the protocol implies and the *compute* the messages
+bracket:
+
+  * every in-cluster interaction is  broadcast -> E local steps -> upload,
+    with an aggregation barrier before the next interaction;
+  * Fed-CHS appends one ES->ES transfer per round that the entire next round
+    depends on (the serial chain);
+  * FedAvg's round is one interaction of E=K against the PS over the WAN,
+    all clients in parallel;
+  * Hier-Local-QSGD runs every cluster's interaction chain in parallel, then
+    a two-level barrier: PS waits for all ES uploads, ESs wait for the PS
+    broadcast;
+  * WRWGD alternates compute and a client->client hop — a pure chain.
+
+E is recovered from the stream itself (K total steps spread over the
+observed number of interaction phases), so the adapter needs only what a
+deployment would know statically: K, the batch size, and the model size.
+
+The same recorded run can be re-timed under any number of `NetworkModel`s —
+the straggler/bandwidth sweeps in benchmarks/fig_time_to_acc.py re-use one
+training run per algorithm and only re-run this (cheap, host-side) replay.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.netsim.events import Job, Timeline, simulate
+from repro.netsim.links import NetworkModel, sgd_step_flops
+
+__all__ = ["build_jobs", "timeline_for", "simulate_run", "time_to_accuracy"]
+
+_WIRELESS_UP = ("client_to_es", "client_to_ps")
+_WIRELESS_DOWN = ("es_to_client", "ps_to_client")
+
+
+class _Builder:
+    def __init__(self, net: NetworkModel):
+        self.net = net
+        self.jobs: list[Job] = []
+
+    def transfer(self, ev, deps, label="", fan_in=1) -> int:
+        dur = self.net.transfer_time(ev.hop, ev.sender, ev.receiver, ev.n_bits,
+                                     ev.round, ev.phase, fan_in)
+        return self._add("transfer", dur, f"{ev.sender}->{ev.receiver}", deps,
+                         ev.round, label or ev.hop)
+
+    def compute(self, node, flops, round_idx, deps) -> int:
+        dur = self.net.compute_time(node, flops, round_idx)
+        return self._add("compute", dur, node, deps, round_idx, "local_sgd")
+
+    def barrier(self, deps, round_idx) -> int:
+        return self._add("barrier", 0.0, None, deps, round_idx, "barrier")
+
+    def _add(self, kind, duration, resource, deps, round_idx, label) -> int:
+        jid = len(self.jobs)
+        self.jobs.append(Job(jid, kind, duration, resource, tuple(deps), round_idx, label))
+        return jid
+
+
+def _phases(events):
+    by_phase = defaultdict(list)
+    for ev in events:
+        by_phase[ev.phase].append(ev)
+    return [by_phase[p] for p in sorted(by_phase)]
+
+
+def _interaction(b: _Builder, phase_events, step_flops, entry_deps) -> list[int]:
+    """One broadcast -> compute -> upload interaction for one server's
+    clients; returns the upload job ids (the aggregation barrier inputs)."""
+    down_events = [e for e in phase_events if e.hop in _WIRELESS_DOWN]
+    up_events = [e for e in phase_events if e.hop in _WIRELESS_UP]
+    downs = {e.receiver: e for e in down_events}
+    ups = {e.sender: e for e in up_events}
+    # one broadcast + one upload per client per interaction — duplicate
+    # (sender, receiver) events (record(count>1) with metadata) would be
+    # silently collapsed here, diverging time from bits
+    assert len(downs) == len(down_events) and len(ups) == len(up_events), \
+        "duplicate per-client messages in one interaction phase"
+    assert downs.keys() == ups.keys(), "unpaired broadcast/upload in interaction"
+    up_jobs = []
+    for client, down in sorted(downs.items()):
+        d = b.transfer(down, entry_deps)
+        c = b.compute(client, step_flops, down.round, [d])
+        # the phase's uploads converge on one aggregator; under
+        # shared_ingress they split its bandwidth
+        up_jobs.append(b.transfer(ups[client], [c], fan_in=len(ups)))
+    return up_jobs
+
+
+def _in_cluster_phases(events):
+    """Split a round's events into wireless interaction phases vs the rest."""
+    wireless, rest = [], []
+    for ev in events:
+        (wireless if ev.hop in _WIRELESS_UP + _WIRELESS_DOWN else rest).append(ev)
+    return _phases(wireless), rest
+
+
+def _steps_per_interaction(local_steps: int, n_phases: int) -> int:
+    assert n_phases > 0 and local_steps % n_phases == 0, \
+        f"K={local_steps} does not split over {n_phases} observed interactions"
+    return local_steps // n_phases
+
+
+def build_jobs(result, net: NetworkModel, *, local_steps: int, batch_size: int,
+               num_params: int) -> list[Job]:
+    """Compile a run's event stream into the algorithm's job DAG."""
+    builders = {
+        "fed_chs": _build_sequential,
+        "wrwgd": _build_walk,
+        "fedavg": _build_star,
+        "hier_local_qsgd": _build_hier,
+    }
+    events = result.ledger.round_events()
+    assert events, "run has no structured events (ledger.track_events off?)"
+    flops1 = sgd_step_flops(num_params, batch_size)
+    return builders[result.name](_Builder(net), events, local_steps, flops1)
+
+
+def _build_sequential(b, events, local_steps, flops1):
+    """Fed-CHS: interaction barriers inside the active cluster, then the
+    round's single ES->ES model pass gates everything that follows."""
+    prev: list[int] = []
+    for t in sorted(events):
+        phases, rest = _in_cluster_phases(events[t])
+        step_flops = _steps_per_interaction(local_steps, len(phases)) * flops1
+        for phase_events in phases:
+            ups = _interaction(b, phase_events, step_flops, prev)
+            prev = [b.barrier(ups, t)]
+        (hop,) = [e for e in rest if e.hop == "es_to_es"]
+        prev = [b.transfer(hop, prev)]
+    return b.jobs
+
+
+def _build_star(b, events, local_steps, flops1):
+    """FedAvg: one E=K interaction against the PS, all clients parallel."""
+    prev: list[int] = []
+    for t in sorted(events):
+        phases, rest = _in_cluster_phases(events[t])
+        assert not rest, "FedAvg rounds are client<->PS only"
+        step_flops = _steps_per_interaction(local_steps, len(phases)) * flops1
+        for phase_events in phases:
+            ups = _interaction(b, phase_events, step_flops, prev)
+            prev = [b.barrier(ups, t)]
+    return b.jobs
+
+
+def _build_hier(b, events, local_steps, flops1):
+    """Hier-Local-QSGD: per-cluster interaction chains in parallel, then the
+    two-level ES->PS / PS->ES aggregation barrier."""
+    prev: list[int] = []
+    for t in sorted(events):
+        phases, rest = _in_cluster_phases(events[t])
+        step_flops = _steps_per_interaction(local_steps, len(phases)) * flops1
+        # split each interaction phase by the aggregating ES
+        cluster_prev: dict[str, list[int]] = defaultdict(lambda: list(prev))
+        for phase_events in phases:
+            per_es = defaultdict(list)
+            for ev in phase_events:
+                per_es[ev.sender if ev.hop == "es_to_client" else ev.receiver].append(ev)
+            for es, evs in sorted(per_es.items()):
+                ups = _interaction(b, evs, step_flops, cluster_prev[es])
+                cluster_prev[es] = [b.barrier(ups, t)]
+        es_up_events = sorted((e for e in rest if e.hop == "es_to_ps"),
+                              key=lambda e: e.sender)
+        es_ups = [b.transfer(ev, cluster_prev[ev.sender], fan_in=len(es_up_events))
+                  for ev in es_up_events]
+        ps_barrier = b.barrier(es_ups, t)
+        downs = [b.transfer(ev, [ps_barrier])
+                 for ev in sorted((e for e in rest if e.hop == "ps_to_es"),
+                                  key=lambda e: e.receiver)]
+        prev = [b.barrier(downs, t)]
+    return b.jobs
+
+
+def _build_walk(b, events, local_steps, flops1):
+    """WRWGD: K local steps at the visited client, then one model hop."""
+    prev: list[int] = []
+    for t in sorted(events):
+        (hop,) = events[t]
+        c = b.compute(hop.sender, local_steps * flops1, t, prev)
+        prev = [b.transfer(hop, [c])]
+    return b.jobs
+
+
+def timeline_for(result, net: NetworkModel, *, local_steps: int, batch_size: int,
+                 num_params: int) -> Timeline:
+    """Wall-clock timeline of a recorded run under `net`."""
+    return simulate(build_jobs(result, net, local_steps=local_steps,
+                               batch_size=batch_size, num_params=num_params))
+
+
+def simulate_run(task, result, net: NetworkModel, *, local_steps: int) -> Timeline:
+    """`timeline_for` with batch size / model size pulled from the task."""
+    return timeline_for(result, net, local_steps=local_steps,
+                        batch_size=task.batch_size, num_params=task.num_params())
+
+
+def time_to_accuracy(result, timeline: Timeline, gamma: float) -> float | None:
+    """Seconds of simulated wall-clock until test accuracy first reaches
+    `gamma` (None if the run never got there) — the timing analogue of
+    `RunResult.bits_to_accuracy`."""
+    r = result.rounds_to_accuracy(gamma)
+    return None if r is None else timeline.time_until(r)

@@ -21,7 +21,6 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link IC
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from collections import defaultdict
 

@@ -2,7 +2,6 @@
 
 Each optimised implementation is checked against a naive reference.
 """
-import dataclasses
 import math
 
 import jax

@@ -1,6 +1,5 @@
 """roofline.attribution on a hand-written post-optimization HLO module:
 trip scaling through while bodies, the 2x all-reduce factor, skip-list."""
-import numpy as np
 
 from repro.roofline.attribution import collective_breakdown, top_output_bytes
 

@@ -1,6 +1,5 @@
 """Baseline algorithms (FedAvg / WRWGD / Hier-Local-QSGD) run + learn +
 meter the hop types the paper's Fig. 2 compares."""
-import pytest
 
 from repro.core.baselines import (
     FedAvgConfig,

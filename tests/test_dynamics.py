@@ -2,33 +2,109 @@
 and the §1 claim that the 2-step rule is robust to them."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 
 from repro.core.dynamics import iov_gilbert, leo_constellation, make_dynamic
 from repro.core.scheduler import FedCHSScheduler
+from repro.core.topology import make_topology
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip; the deterministic ones still run
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @given(n=st.integers(5, 16), t=st.integers(0, 100))
+    @settings(max_examples=25, deadline=None)
+    def test_leo_graphs_valid_connected_and_rotating(n, t):
+        dyn = leo_constellation(n, window=2, period=1)
+        g = dyn(t)
+        g.validate()
+        assert g.is_connected()
+        # the band rotates: after n periods it returns to the start
+        assert dyn(t).adjacency == dyn(t + n).adjacency
+
+    @given(n=st.integers(3, 16), t=st.integers(0, 100), p=st.sampled_from([0.1, 0.3, 0.6]))
+    @settings(max_examples=25, deadline=None)
+    def test_iov_graphs_valid_connected_and_replayable(n, t, p):
+        dyn = iov_gilbert(n, p_drop=p, seed=3)
+        g = dyn(t)
+        g.validate()
+        assert g.is_connected()
+        assert dyn(t).adjacency == iov_gilbert(n, p_drop=p, seed=3)(t).adjacency
+        assert iov_gilbert(n, p_drop=0.9, seed=3)(t).is_connected()  # repair works
 
 
-@given(n=st.integers(5, 16), t=st.integers(0, 100))
-@settings(max_examples=25, deadline=None)
-def test_leo_graphs_valid_connected_and_rotating(n, t):
-    dyn = leo_constellation(n, window=2, period=1)
-    g = dyn(t)
-    g.validate()
-    assert g.is_connected()
-    # the band rotates: after n periods it returns to the start
-    assert dyn(t).adjacency == dyn(t + n).adjacency
+def test_iov_stays_connected_after_repair_many_seeds_and_rounds():
+    """The repair step must hold across seeds, sizes, rounds, and drop rates
+    — a disconnected round would silently stall the sequential pass."""
+    for seed in range(6):
+        for n, p in [(4, 0.5), (9, 0.7), (13, 0.9)]:
+            dyn = iov_gilbert(n, p_drop=p, seed=seed)
+            for t in range(25):
+                g = dyn(t)
+                g.validate()
+                assert g.is_connected(), (seed, n, p, t)
 
 
-@given(n=st.integers(3, 16), t=st.integers(0, 100), p=st.sampled_from([0.1, 0.3, 0.6]))
-@settings(max_examples=25, deadline=None)
-def test_iov_graphs_valid_connected_and_replayable(n, t, p):
-    dyn = iov_gilbert(n, p_drop=p, seed=3)
-    g = dyn(t)
-    g.validate()
-    assert g.is_connected()
-    assert dyn(t).adjacency == iov_gilbert(n, p_drop=p, seed=3)(t).adjacency  # replayable
-    assert iov_gilbert(n, p_drop=0.9, seed=3)(t).is_connected()  # repair works
+def test_iov_dropped_set_is_replayable_and_consistent():
+    dyn = iov_gilbert(8, p_drop=0.5, seed=4)
+    for t in range(20):
+        dropped = dyn.dropped(t)
+        assert dropped == iov_gilbert(8, p_drop=0.5, seed=4).dropped(t)
+        # drops are a subset of the base line + skip links
+        base = {(m, m + 1) for m in range(7)} | {(m, m + 2) for m in range(6)}
+        assert dropped <= base
+        # links that never faded are always present in the repaired graph
+        for a, b in base - dropped:
+            assert b in dyn(t).neighbors(a)
+
+
+def test_leo_rotation_invariants():
+    """The visibility graph is a circulant: every node has the same degree,
+    the graph is invariant under label rotation, and it returns to the
+    initial band after num_nodes periods."""
+    for n, window, period in [(6, 2, 1), (9, 2, 3), (11, 3, 2)]:
+        dyn = leo_constellation(n, window=window, period=period)
+        for t in range(2 * n):
+            g = dyn(t)
+            # vertex-transitive: every node sees the same number of links
+            # (2*window in general; fewer when a band distance hits n/2 or
+            # wraps to 0 and is skipped — never below the connecting ring)
+            degs = {g.degree(m) for m in range(n)}
+            assert len(degs) == 1 and 2 <= degs.pop() <= 2 * window
+            for m in range(n):  # rotation symmetry of the banded ring
+                rotated = tuple(sorted((v + 1) % n for v in g.neighbors(m)))
+                assert rotated == g.neighbors((m + 1) % n)
+        assert dyn(0).adjacency == dyn(n * period).adjacency
+        # the band actually moves between periods
+        assert dyn(0).adjacency != dyn(period).adjacency
+
+
+def test_set_topology_determinism_across_swaps():
+    """Two schedulers fed the same swap sequence walk identical paths, and
+    swapping a graph out and back leaves the scheduler state untouched."""
+    n = 8
+    dyn = make_dynamic("iov", n, seed=5)
+    sizes = list(range(10, 10 + n))
+    a = FedCHSScheduler(dyn(0), sizes, initial=2)
+    b = FedCHSScheduler(dyn(0), sizes, initial=2)
+    walk_a, walk_b = [], []
+    for t in range(60):
+        a.set_topology(dyn(t))
+        b.set_topology(dyn(t))
+        walk_a.append(a.advance())
+        walk_b.append(b.advance())
+    assert walk_a == walk_b
+    assert np.array_equal(a.state.visit_counts, b.state.visit_counts)
+
+    # swap away and back: peek is a pure function of (state, topology)
+    before = a.peek()
+    a.set_topology(make_topology("ring", n))
+    a.set_topology(dyn(59))
+    assert a.peek() == before
 
 
 @pytest.mark.parametrize("kind", ["leo", "iov"])
@@ -52,8 +128,9 @@ def test_fed_chs_converges_on_dynamic_topology(small_task):
     from repro.core import FedCHSConfig, run_fed_chs
 
     res = run_fed_chs(small_task, FedCHSConfig(
-        rounds=16, local_steps=5, eval_every=8, dynamic="leo", seed=0))
-    assert res.final_acc() > 0.7, res.test_acc
+        rounds=16, local_steps=10, eval_every=8, dynamic="leo", seed=0))
+    # measured 0.998 at this config; 0.9 leaves margin for backend drift
+    assert res.final_acc() > 0.9, res.test_acc
     # ledger: still exactly one ES->ES hop per round, no PS traffic
     assert res.ledger.messages["es_to_es"] == 16
     assert res.ledger.bits["es_to_ps"] == 0 and res.ledger.bits["client_to_ps"] == 0

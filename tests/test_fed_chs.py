@@ -1,6 +1,5 @@
 """Integration tests for the Fed-CHS protocol (Algorithm 1)."""
 import numpy as np
-import pytest
 
 from repro.core import FedCHSConfig, run_fed_chs
 from repro.core.ledger import dense_message_bits, qsgd_message_bits
@@ -27,20 +26,18 @@ def test_communication_accounting_matches_paper_formula(small_task):
     assert res.ledger.bits["client_to_ps"] == 0
 
 
-@pytest.mark.xfail(
-    reason="aspirational accuracy bar never met: QSGD s=16 at E=1 reaches ~0.48 "
-    "in 12 rounds (0.44 at the pre-engine seed) vs the 0.6 threshold; the bit "
-    "reduction half of the claim does hold",
-    strict=False,
-)
 def test_qsgd_compression_reduces_bits_and_still_learns(small_task):
-    dense = run_fed_chs(small_task, FedCHSConfig(rounds=12, local_steps=6, eval_every=100))
+    """12 rounds x 6 steps was too little SGD for the old 0.6 bar (measured
+    0.48); at 20 rounds x 10 steps QSGD s=16 reaches 0.997, so 0.9 guards
+    the full claim with margin instead of xfailing an under-trained run."""
+    T, K = 20, 10
+    dense = run_fed_chs(small_task, FedCHSConfig(rounds=T, local_steps=K, eval_every=100))
     comp = run_fed_chs(
         small_task,
-        FedCHSConfig(rounds=12, local_steps=6, qsgd_levels=16, eval_every=11),
+        FedCHSConfig(rounds=T, local_steps=K, qsgd_levels=16, eval_every=T - 1),
     )
     assert comp.ledger.bits["client_to_es"] < 0.25 * dense.ledger.bits["client_to_es"]
-    assert comp.final_acc() > 0.6
+    assert comp.final_acc() > 0.9
 
 
 def test_local_epochs_reduce_interactions(small_task):

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.ops import qsgd_dequantize, qsgd_quantize, qsgd_roundtrip
-from repro.kernels.qsgd import ROWS_PER_TILE, qsgd_dequantize_blocks, qsgd_quantize_blocks
+from repro.kernels.qsgd import qsgd_dequantize_blocks, qsgd_quantize_blocks
 from repro.kernels.ref import qsgd_dequantize_blocks_ref, qsgd_quantize_blocks_ref
 
 

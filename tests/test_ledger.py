@@ -1,0 +1,84 @@
+"""CommLedger: aggregate accounting, snapshots, and the CommEvent stream."""
+from repro.core import CommLedger, FedCHSConfig, run_fed_chs
+from repro.core.baselines import WRWGDConfig, run_wrwgd
+from repro.core.ledger import dense_message_bits
+
+
+def test_bits_until_empty_history_falls_back_to_total():
+    led = CommLedger()
+    led.record("client_to_es", 100, 3)
+    assert led.history == []
+    assert led.bits_until(0) == 300
+    assert led.bits_until(10**9) == 300
+
+
+def test_bits_until_exact_round_hit_and_gaps():
+    led = CommLedger()
+    led.record("client_to_es", 10)
+    led.snapshot(0)
+    led.record("client_to_es", 10)
+    led.snapshot(2)  # rounds may be sparse
+    led.record("client_to_es", 10)
+    assert led.bits_until(0) == 10   # exact hit
+    assert led.bits_until(1) == 20   # first snapshot with round >= 1 is round 2
+    assert led.bits_until(2) == 20
+    assert led.bits_until(3) == 30   # past the last snapshot -> running total
+
+
+def test_metadata_does_not_change_aggregates():
+    plain, tagged = CommLedger(), CommLedger()
+    for i in range(4):
+        plain.record("client_to_es", 77)
+        tagged.record("client_to_es", 77, round=0, phase=i,
+                      sender=f"client:{i}", receiver="es:0")
+    assert plain.bits == tagged.bits
+    assert plain.messages == tagged.messages
+    assert plain.events == [] and len(tagged.events) == 4
+
+
+def test_track_events_off_drops_metadata_but_not_bits():
+    led = CommLedger(track_events=False)
+    led.record("es_to_es", 50, round=3, sender="es:0", receiver="es:1")
+    assert led.bits["es_to_es"] == 50
+    assert led.events == []
+
+
+def test_count_expansion_produces_one_event_per_message():
+    led = CommLedger()
+    led.record("ps_to_es", 9, 3, round=1, phase=2, sender="ps", receiver="es:0")
+    assert led.messages["ps_to_es"] == 3
+    assert len(led.events) == 3
+    assert all(e.n_bits == 9 and e.round == 1 for e in led.events)
+
+
+def test_round_events_groups_and_orders():
+    led = CommLedger()
+    led.record("client_to_es", 1, round=1, phase=1, sender="client:2", receiver="es:0")
+    led.record("client_to_es", 1, round=0, phase=0, sender="client:9", receiver="es:0")
+    led.record("es_to_client", 1, round=1, phase=0, sender="es:0", receiver="client:2")
+    grouped = led.round_events()
+    assert sorted(grouped) == [0, 1]
+    assert [e.phase for e in grouped[1]] == [0, 1]
+
+
+def test_every_driver_snapshots_every_round(small_task):
+    """engine.end_round gives a uniform per-round history: one snapshot per
+    round, rounds contiguous from 0."""
+    res = run_fed_chs(small_task, FedCHSConfig(rounds=5, local_steps=2, eval_every=10))
+    assert [r for r, _ in res.ledger.history] == list(range(5))
+    res = run_wrwgd(small_task, WRWGDConfig(rounds=4, local_steps=2, eval_every=10))
+    assert [r for r, _ in res.ledger.history] == list(range(4))
+
+
+def test_fed_chs_event_stream_matches_aggregates(small_task):
+    T, K = 3, 4
+    res = run_fed_chs(small_task, FedCHSConfig(rounds=T, local_steps=K, eval_every=10))
+    led = res.ledger
+    assert sum(e.n_bits for e in led.events) == led.total_bits()
+    assert len([e for e in led.events if e.hop == "es_to_es"]) == T
+    q = dense_message_bits(small_task.num_params())
+    assert all(e.n_bits == q for e in led.events if e.hop == "es_to_es")
+    # every uplink has a matching broadcast in the same (round, phase)
+    ups = {(e.round, e.phase, e.sender) for e in led.events if e.hop == "client_to_es"}
+    downs = {(e.round, e.phase, e.receiver) for e in led.events if e.hop == "es_to_client"}
+    assert ups == downs

@@ -13,12 +13,10 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import smoke_config
 from repro.launch.mesh import make_debug_mesh
 from repro.models import ffn as F
-from repro.models.common import activation
 from repro.models.moe_shardmap import moe_routed_shardmap, shardmap_supported
 
 B, T = 2, 8

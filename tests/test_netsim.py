@@ -1,0 +1,293 @@
+"""repro.netsim — the event-driven network/time simulator.
+
+Pins the acceptance contract: deterministic timelines given (seed, config);
+Fed-CHS's per-round wall-clock is the *serial* chain (every round pays its
+ES->ES hop on the critical path), FedAvg's is the *max over parallel client
+uploads* plus the PS round trip; and the bits-winner and time-winner of a
+comparison can differ once link speeds enter the picture — the claim class
+§3.2's bit counting cannot express.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CommLedger, FedCHSConfig, LatencyAwareScheduler, run_fed_chs
+from repro.core.baselines import (
+    FedAvgConfig,
+    HierLocalQSGDConfig,
+    run_fedavg,
+    run_hier_local_qsgd,
+)
+from repro.core.ledger import dense_message_bits
+from repro.core.simulation import RunResult
+from repro.core.topology import make_topology
+from repro.netsim import (
+    Job,
+    edge_cloud_network,
+    sgd_step_flops,
+    simulate,
+    simulate_run,
+    time_to_accuracy,
+    timeline_for,
+)
+
+# -- the raw simulator -------------------------------------------------------
+
+
+def test_simulator_resolves_deps_and_resource_contention():
+    jobs = [
+        Job(0, "compute", 2.0, "a"),
+        Job(1, "compute", 3.0, "a"),            # same resource: serializes
+        Job(2, "transfer", 1.0, "a->b", (0, 1)),
+        Job(3, "compute", 5.0, "b"),            # independent, parallel
+    ]
+    tl = simulate(jobs)
+    assert tl.job_times[0] == (0.0, 2.0)
+    assert tl.job_times[1] == (2.0, 5.0)
+    assert tl.job_times[2] == (5.0, 6.0)
+    assert tl.job_times[3] == (0.0, 5.0)
+    assert tl.makespan == 6.0
+
+
+def test_simulator_is_deterministic():
+    rng = np.random.default_rng(0)
+    jobs = []
+    for i in range(200):
+        n_deps = int(rng.integers(0, 3)) if i else 0
+        deps = tuple(int(d) for d in rng.integers(0, i, size=n_deps))
+        jobs.append(Job(i, "compute", float(rng.random()), f"r{int(rng.integers(6))}", deps))
+    a, b = simulate(jobs), simulate(jobs)
+    assert a.job_times == b.job_times and a.makespan == b.makespan
+
+
+def test_timeline_time_until():
+    tl = simulate([Job(0, "compute", 1.0, "a", (), 0), Job(1, "compute", 1.0, "a", (0,), 2)])
+    assert tl.time_until(0) == 1.0
+    assert tl.time_until(1) == 2.0   # first recorded round >= 1 is round 2
+    assert tl.time_until(99) == tl.makespan
+
+
+# -- link/compute models -----------------------------------------------------
+
+
+def test_network_model_determinism_and_straggler_effects():
+    net = edge_cloud_network(seed=7, heterogeneity=0.4, straggler_frac=0.5,
+                             straggler_slowdown=8.0, jitter=0.2)
+    net2 = edge_cloud_network(seed=7, heterogeneity=0.4, straggler_frac=0.5,
+                              straggler_slowdown=8.0, jitter=0.2)
+    for node in [f"client:{i}" for i in range(20)]:
+        assert net.node_speed(node) == net2.node_speed(node)
+        assert net.is_straggler(node) == net2.is_straggler(node)
+    assert any(net.is_straggler(f"client:{i}") for i in range(20))
+    strag = next(f"client:{i}" for i in range(20) if net.is_straggler(f"client:{i}"))
+    fast = next(f"client:{i}" for i in range(20) if not net.is_straggler(f"client:{i}"))
+    # a straggler's radio is slower too
+    t_s = net.transfer_time("client_to_es", strag, "es:0", 1e6, 0)
+    t_f = net.transfer_time("client_to_es", fast, "es:0", 1e6, 0)
+    assert t_s > t_f
+    assert net.transfer_time("es_to_es", "es:0", "es:1", 1e6, 3) == \
+           net2.transfer_time("es_to_es", "es:0", "es:1", 1e6, 3)
+
+
+def test_dynamic_topology_degrades_flaky_backhaul():
+    from repro.core.dynamics import iov_gilbert
+
+    dyn = iov_gilbert(6, p_drop=0.6, seed=2)
+    net = edge_cloud_network(seed=0, dynamics=dyn)
+    base = net.backhaul.base_time(1e6)
+    # find a round where a base-graph link was dropped by fading
+    t = next(t for t in range(50) if dyn.dropped(t))
+    a, b = sorted(next(iter(dyn.dropped(t))))
+    degraded = net.transfer_time("es_to_es", f"es:{a}", f"es:{b}", 1e6, t)
+    assert degraded > base  # flaky link costs time, not bits
+    # an intact link that round is at nominal speed
+    intact = next(e for e in [(m, m + 1) for m in range(5)]
+                  if e not in dyn.dropped(t) and e[1] in dyn(t).neighbors(e[0]))
+    assert net.transfer_time("es_to_es", f"es:{intact[0]}", f"es:{intact[1]}", 1e6, t) \
+           == pytest.approx(base)
+
+
+# -- pinned protocol timing (the acceptance contract) ------------------------
+
+
+def _flat_net():
+    """No jitter, no heterogeneity, no stragglers: analytically predictable."""
+    return edge_cloud_network(seed=0)
+
+
+def test_fed_chs_round_time_is_the_serial_chain(small_task):
+    K, T = 4, 3
+    res = run_fed_chs(small_task, FedCHSConfig(rounds=T, local_steps=K, eval_every=10, seed=0))
+    net = _flat_net()
+    tl = simulate_run(small_task, res, net, local_steps=K)
+
+    d = small_task.num_params()
+    q = dense_message_bits(d)
+    t_down = net.wireless.base_time(q)
+    t_up = net.wireless.base_time(q)
+    t_comp = sgd_step_flops(d, small_task.batch_size) / net.compute.flops_per_second
+    t_hop = net.backhaul.base_time(q)
+    # E=1 dense => K interactions, each broadcast -> 1 step -> upload, then
+    # ONE ES->ES pass whose latency the next round serially waits for
+    per_round = K * (t_down + t_comp + t_up) + t_hop
+    for t in range(T):
+        assert tl.round_duration(t) == pytest.approx(per_round, rel=1e-9)
+    assert tl.makespan == pytest.approx(T * per_round, rel=1e-9)
+
+
+def test_fedavg_round_time_is_max_over_parallel_clients(small_task):
+    K, T = 4, 2
+    res = run_fedavg(small_task, FedAvgConfig(rounds=T, local_steps=K, eval_every=10, seed=0))
+    net = edge_cloud_network(seed=1, heterogeneity=0.5)  # unequal client speeds
+    tl = simulate_run(small_task, res, net, local_steps=K)
+
+    d = small_task.num_params()
+    q = dense_message_bits(d)
+    flops = K * sgd_step_flops(d, small_task.batch_size)
+    per_client = [
+        net.transfer_time("ps_to_client", "ps", f"client:{i}", q)
+        + net.compute_time(f"client:{i}", flops)
+        + net.transfer_time("client_to_ps", f"client:{i}", "ps", q)
+        for i in range(small_task.num_clients)
+    ]
+    per_round = max(per_client)  # parallel clients: slowest gates the round
+    for t in range(T):
+        assert tl.round_duration(t) == pytest.approx(per_round, rel=1e-9)
+
+
+def test_hier_round_time_honors_two_level_barriers(small_task):
+    K, E = 4, 2
+    res = run_hier_local_qsgd(small_task, HierLocalQSGDConfig(
+        rounds=1, local_steps=K, local_epochs=E, eval_every=10,
+        qsgd_levels=None, seed=0))
+    net = _flat_net()
+    tl = simulate_run(small_task, res, net, local_steps=K)
+
+    d = small_task.num_params()
+    q = dense_message_bits(d)
+    t_edge = net.wireless.base_time(q) * 2 + \
+        E * sgd_step_flops(d, small_task.batch_size) / net.compute.flops_per_second
+    t_wan = net.wan.base_time(q)
+    # all clusters in parallel (uniform nodes -> identical chains), then the
+    # PS barrier: every ES upload must land before any broadcast leaves
+    per_round = (K // E) * t_edge + 2 * t_wan
+    assert tl.round_duration(0) == pytest.approx(per_round, rel=1e-9)
+
+
+def test_shared_ingress_scales_star_round_with_fan_in(small_task):
+    """Default: dedicated links, star round = max over parallel clients
+    (n-independent). shared_ingress: the PS's bandwidth splits across the
+    fan-in, so the same round slows down ~n-fold at scale."""
+    K = 2
+    res = run_fedavg(small_task, FedAvgConfig(rounds=1, local_steps=K, eval_every=10))
+    n = small_task.num_clients
+    dedicated = _flat_net()
+    shared = edge_cloud_network(seed=0)
+    shared.shared_ingress = True
+    t_ded = simulate_run(small_task, res, dedicated, local_steps=K).makespan
+    t_shared = simulate_run(small_task, res, shared, local_steps=K).makespan
+    assert t_shared > t_ded
+    d = small_task.num_params()
+    q = dense_message_bits(d)
+    # only the uplink leg is contended: it alone stretches by the fan-in
+    extra = (n - 1) * (q / shared.wan.bandwidth_bps)
+    assert t_shared == pytest.approx(t_ded + extra, rel=1e-9)
+
+
+def test_timeline_identical_across_reruns(small_task):
+    cfg = FedCHSConfig(rounds=4, local_steps=4, eval_every=2, seed=5)
+    net = edge_cloud_network(seed=3, heterogeneity=0.3, straggler_frac=0.25, jitter=0.15)
+    runs = [run_fed_chs(small_task, cfg) for _ in range(2)]
+    assert runs[0].ledger.events == runs[1].ledger.events
+    tls = [simulate_run(small_task, r, net, local_steps=4) for r in runs]
+    assert tls[0].job_times == tls[1].job_times
+    assert tls[0].round_end == tls[1].round_end
+
+
+# -- bits-winner vs time-winner ---------------------------------------------
+
+
+def _fabricated_pair(d=1000):
+    """Two synthetic runs with hand-built ledgers: a Fed-CHS-style serial
+    pass (bits-frugal) and a FedAvg-style parallel star that reaches the
+    target in a quarter of the rounds by training 4x the clients per round."""
+    q = dense_message_bits(d)
+    chs = CommLedger()
+    T_chs = 9  # reaches gamma at round 8
+    for t in range(T_chs):
+        for i in (0, 1):
+            chs.record("es_to_client", q, round=t, phase=0, sender="es:0",
+                       receiver=f"client:{i}")
+            chs.record("client_to_es", q, round=t, phase=0, sender=f"client:{i}",
+                       receiver="es:0")
+        chs.record("es_to_es", q, round=t, phase=1, sender="es:0", receiver="es:1")
+        chs.snapshot(t)
+    acc = [0.5] * (T_chs - 1) + [0.9]
+    fed_chs = RunResult("fed_chs", list(range(T_chs)), acc, [0.0] * T_chs, chs, None)
+
+    avg = CommLedger()
+    T_avg = 3  # reaches gamma at round 2
+    for t in range(T_avg):
+        for i in range(8):
+            avg.record("ps_to_client", q, round=t, phase=0, sender="ps",
+                       receiver=f"client:{i}")
+            avg.record("client_to_ps", q, round=t, phase=0, sender=f"client:{i}",
+                       receiver="ps")
+        avg.snapshot(t)
+    acc = [0.5] * (T_avg - 1) + [0.9]
+    fedavg = RunResult("fedavg", list(range(T_avg)), acc, [0.0] * T_avg, avg, None)
+    return d, fed_chs, fedavg
+
+
+def test_bits_winner_and_time_winner_can_differ():
+    d, fed_chs, fedavg = _fabricated_pair()
+    gamma = 0.9
+    bits = {r.name: r.bits_to_accuracy(gamma) for r in (fed_chs, fedavg)}
+    assert bits["fed_chs"] < bits["fedavg"]  # Fed-CHS is the bits-winner
+
+    def t2a(res, net):
+        tl = timeline_for(res, net, local_steps=1, batch_size=32, num_params=d)
+        return time_to_accuracy(res, tl, gamma)
+
+    # compute-bound net (fat links): FedAvg's 4x per-round parallelism wins
+    compute_bound = edge_cloud_network(seed=0, wireless_mbps=1e5, backhaul_mbps=1e5,
+                                       wan_mbps=1e5, wan_latency_ms=0.0,
+                                       flops_per_second=1e6)
+    assert t2a(fedavg, compute_bound) < t2a(fed_chs, compute_bound)
+
+    # WAN-starved net (the paper's deployment): the PS hop dominates and the
+    # serial edge-only pass wins wall-clock too
+    wan_starved = edge_cloud_network(seed=0, wireless_mbps=1000.0, backhaul_mbps=1000.0,
+                                     wan_mbps=0.05, flops_per_second=1e12)
+    assert t2a(fed_chs, wan_starved) < t2a(fedavg, wan_starved)
+
+
+# -- latency-aware scheduling ------------------------------------------------
+
+
+def test_latency_aware_scheduler_breaks_ties_by_link_delay():
+    topo = make_topology("full", 4)
+    delays = {(0, 1): 5.0, (0, 2): 1.0, (0, 3): 3.0,
+              (1, 2): 2.0, (1, 3): 9.0, (2, 3): 4.0}
+
+    def delay(a, b):
+        return delays[(min(a, b), max(a, b))]
+
+    sched = LatencyAwareScheduler(topo, [10, 20, 30, 40], delay, initial=0)
+    # all neighbors unvisited: tie on counts, 0->2 is the cheapest link
+    assert sched.advance() == 2
+    # from 2, unvisited are {1, 3}: delay(2,1)=2 < delay(2,3)=4
+    assert sched.advance() == 1
+    assert sched.advance() == 3  # only unvisited left
+
+
+def test_latency_aware_scheduler_via_fed_chs_config(small_task):
+    net = edge_cloud_network(seed=0, backhaul_spread=1.0)
+    q = dense_message_bits(small_task.num_params())
+    cfg = FedCHSConfig(rounds=6, local_steps=2, eval_every=10, seed=0,
+                       link_delay=net.link_delay_fn(q))
+    a = run_fed_chs(small_task, cfg)
+    b = run_fed_chs(small_task, cfg)
+    assert a.ledger.events == b.ledger.events  # deterministic path choice
+    # still exactly one ES->ES pass per round, zero PS traffic
+    assert a.ledger.messages["es_to_es"] == 6
+    assert a.ledger.bits["es_to_ps"] == 0

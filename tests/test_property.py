@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.scheduler import FedCHSScheduler
 from repro.core.topology import make_topology, random_sparse
 from repro.kernels.ops import qsgd_roundtrip
-from repro.utils import tree_weighted_sum, tree_sq_norm
+from repro.utils import tree_weighted_sum
 
 
 @given(seed=st.integers(0, 1000), n=st.integers(3, 16))

@@ -7,13 +7,12 @@ pure rule functions.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import smoke_config
 from repro.launch.mesh import make_debug_mesh
-from repro.launch.steps import SHAPES, build_lowering, lower_spec
+from repro.launch.steps import build_lowering, lower_spec
 from repro.models import transformer as tf
 from repro.sharding.specs import batch_pspec, cache_pspecs, param_pspecs
 

@@ -1,5 +1,4 @@
 """Unit tests: ES topologies + the paper's 2-step next-cluster rule."""
-import numpy as np
 import pytest
 
 from repro.core.scheduler import FedCHSScheduler, RandomWalkScheduler, RingScheduler
