@@ -31,7 +31,8 @@ import numpy as np
 from benchmarks.common import BenchScale, build_task
 from repro.core import FedCHSConfig, run_fed_chs
 from repro.core.baselines import HierLocalQSGDConfig, run_hier_local_qsgd
-from repro.core.simulation import FLTask, _multi_client_local_sgd_fn
+from repro.core.oracles import multi_client_local_sgd
+from repro.core.simulation import FLTask
 from repro.kernels.ops import DEFAULT_BLOCK, _pad_to_blocks
 from repro.kernels.qsgd import ROWS_PER_TILE, qsgd_dequantize_blocks, qsgd_quantize_blocks
 from repro.optim.schedules import paper_sqrt_schedule
@@ -73,7 +74,7 @@ def seed_style_hier(task: FLTask, config: HierLocalQSGDConfig) -> None:
     lrs = np.asarray([sched_fn(k) for k in range(K)], dtype=np.float32)
 
     params = task.init_params()
-    multi_local = _multi_client_local_sgd_fn(task.model)
+    multi_local = multi_client_local_sgd(task.model)
     key = jax.random.PRNGKey(config.seed + 1)
     M = task.num_clusters
     cluster_gammas = [jnp.asarray(task.cluster_weights(m)) for m in range(M)]
@@ -87,9 +88,9 @@ def seed_style_hier(task: FLTask, config: HierLocalQSGDConfig) -> None:
         for j in range(interactions):
             lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
             for m in range(M):
-                xs, ys = task.sample_cluster_batches(m, E)
-                xs = jnp.swapaxes(xs, 0, 1)
-                ys = jnp.swapaxes(ys, 0, 1)
+                b = task.sample_cluster_batches(m, E)
+                xs = jnp.swapaxes(b["x"], 0, 1)
+                ys = jnp.swapaxes(b["y"], 0, 1)
                 new_p, losses = multi_local(cluster_params[m], xs, ys, lr_slice)
                 deltas = jax.tree.map(
                     lambda np_, op: np_ - op[None], new_p, cluster_params[m]
@@ -124,16 +125,16 @@ def seed_style_fed_chs(task: FLTask, config: FedCHSConfig) -> None:
     lrs = np.array([sched_fn(k) for k in range(K)], dtype=np.float32)
 
     params = task.init_params()
-    multi_local = _multi_client_local_sgd_fn(task.model)
+    multi_local = multi_client_local_sgd(task.model)
     key = jax.random.PRNGKey(config.seed + 1)
     m = 0
     for t in range(config.rounds):
         gammas = jnp.asarray(task.cluster_weights(m))
         for j in range(interactions):
             lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
-            xs, ys = task.sample_cluster_batches(m, E)
-            xs = jnp.swapaxes(xs, 0, 1)
-            ys = jnp.swapaxes(ys, 0, 1)
+            b = task.sample_cluster_batches(m, E)
+            xs = jnp.swapaxes(b["x"], 0, 1)
+            ys = jnp.swapaxes(b["y"], 0, 1)
             new_p, losses = multi_local(params, xs, ys, lr_slice)
             deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
             if config.qsgd_levels is not None:

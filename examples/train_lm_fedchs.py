@@ -1,39 +1,64 @@
-"""End-to-end driver: train a transformer LM with the Fed-CHS protocol.
+"""Federated transformer-LM pretraining with Fed-CHS — on the unified stack.
 
-Two Fed-CHS chains (clusters) train on disjoint non-IID token streams; after
-every round the models pass sequentially between clusters (Algorithm 1 —
-here with C=2 the ring the 2-step rule produces). Loss is reported per chain.
+This used to be a side-path that called the raw transformer train step and
+bypassed the round engine, the compression channels, the bit ledger, and the
+network simulator.  It is now an `LMFedModel` + `TokenSource` FedTask driven
+by the same `run_fed_chs` as the paper's MLP/LeNet experiments, which buys
+the LM workload everything the classifier path already had:
 
-Defaults are CPU-sized (~20M params, 150 rounds, ~10 min). For the ~100M-param
-run use:
+  * QSGD/Top-K compressed uplinks (pick with --qsgd / --topk);
+  * bit-exact per-message `CommLedger` accounting + `CommEvent` streams;
+  * `repro.netsim` replay: simulated wall-clock time-to-perplexity under a
+    configurable edge network;
+  * client-held local optimizers (--adamw keeps AdamW moments on-device —
+    uplink bits are identical to plain SGD).
+
+Each client's token stream is non-IID (topic-skewed Markov chains over a
+shared transition table), and every batch draw is keyed by
+``(seed, client, draw_index)`` — the stream position is explicit, so a
+resumed run replays the exact schedule of batches instead of resampling
+from scratch (the old `batch_for(round_idx)` ignored its argument).
+
+Defaults are CPU-sized (a few minutes).  Scale up with e.g.:
   PYTHONPATH=src python examples/train_lm_fedchs.py --d-model 768 --layers 12 \
-      --rounds 300 --batch 8
+      --vocab 32768 --seq 256 --batch 8 --rounds 300
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.comm.channels import DenseChannel, QSGDChannel, TopKChannel
 from repro.configs.base import ArchConfig
-from repro.data.tokens import MarkovTokens
-from repro.launch.steps import make_train_round
-from repro.models import transformer as tf
-from repro.optim.schedules import paper_sqrt_schedule
+from repro.core import FedCHSConfig, run_fed_chs
+from repro.core.simulation import FLTask
+from repro.data.sources import TokenSource
+from repro.models.fed import LMFedModel
+from repro.netsim.adapters import simulate_run, time_to_accuracy
+from repro.netsim.links import NetworkModel
+from repro.optim.local import AdamWOpt
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--d-model", type=int, default=384)
-    ap.add_argument("--layers", type=int, default=6)
-    ap.add_argument("--vocab", type=int, default=8192)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=8, help="per-chain batch")
-    ap.add_argument("--rounds", type=int, default=150)
-    ap.add_argument("--chains", type=int, default=2)
-    ap.add_argument("--lr", type=float, default=3e-2)
-    ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4, help="per-client batch")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--clusters", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--local-steps", type=int, default=4, help="K in-cluster steps/round")
+    ap.add_argument("--local-epochs", type=int, default=2, help="E steps per upload")
+    ap.add_argument("--qsgd", type=int, default=16,
+                    help="QSGD levels for the client->ES uplink (0 = dense)")
+    ap.add_argument("--topk", type=float, default=0.0,
+                    help="Top-K uplink fraction (overrides --qsgd when > 0)")
+    ap.add_argument("--adamw", action="store_true",
+                    help="client-held AdamW instead of plain SGD")
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--target-ppl", type=float, default=40.0,
+                    help="perplexity threshold for the time-to-loss replay")
     args = ap.parse_args()
 
     cfg = ArchConfig(
@@ -41,40 +66,50 @@ def main():
         num_heads=max(args.d_model // 64, 1), num_kv_heads=max(args.d_model // 128, 1),
         d_ff=4 * args.d_model, vocab_size=args.vocab, dtype="float32",
     )
-    n_params = cfg.param_count()
-    print(f"model: {args.layers}L d={args.d_model} -> {n_params/1e6:.1f}M params")
+    model = LMFedModel(cfg)
+    source = TokenSource(args.vocab, args.clients, args.batch, args.seq,
+                         topics=args.clusters * 2, seed=0)
+    members = [[i for i in range(args.clients) if i % args.clusters == m]
+               for m in range(args.clusters)]
+    task = FLTask.from_source(model, source, members, seed=0)
+    print(f"model: {args.layers}L d={args.d_model} -> {task.num_params()/1e6:.1f}M params, "
+          f"{args.clients} clients / {args.clusters} ES clusters")
 
-    key = jax.random.PRNGKey(0)
-    params = tf.init_params(cfg, key)
-    C = args.chains
-    stacked = jax.tree.map(lambda x: jnp.stack([x] * C), params)
-
-    # per-cluster non-IID corpora: different Markov topic mixtures
-    gens = [MarkovTokens(args.vocab, topics=4, seed=100 + c) for c in range(C)]
-    rngs = [np.random.default_rng(c) for c in range(C)]
-
-    def batch_for(round_idx):
-        toks = np.stack(
-            [g.sample(r, args.batch, args.seq + 1) for g, r in zip(gens, rngs)]
-        )
-        return {
-            "tokens": jnp.asarray(toks[:, :, :-1]),
-            "labels": jnp.asarray(toks[:, :, 1:]),
-        }
-
-    round_fn = jax.jit(make_train_round(cfg, variant="fedchs", remat=False),
-                       donate_argnums=(0,))
-    sched = paper_sqrt_schedule(K=20, half=False)
+    if args.topk > 0:
+        channel = TopKChannel(fraction=args.topk)
+    elif args.qsgd > 0:
+        channel = QSGDChannel(args.qsgd)
+    else:
+        channel = DenseChannel()
+    config = FedCHSConfig(
+        rounds=args.rounds, local_steps=args.local_steps, local_epochs=args.local_epochs,
+        eval_every=args.eval_every, channel=channel, seed=0,
+        local_opt=AdamWOpt(weight_decay=0.0) if args.adamw else None,
+        schedule=lambda k: args.lr,
+    )
 
     t0 = time.time()
-    for t in range(args.rounds):
-        lr = jnp.float32(args.lr * sched(0) * 20)  # scale the paper schedule
-        stacked, loss = round_fn(stacked, batch_for(t), lr)
-        if t % args.eval_every == 0 or t == args.rounds - 1:
-            tok_s = args.batch * args.seq * C * (t + 1) / (time.time() - t0)
-            print(f"round {t:4d}  loss {float(loss):.4f}  ({tok_s:,.0f} tok/s)", flush=True)
-    print(f"done in {time.time()-t0:.0f}s — chains converged on each other's data "
-          "through sequential passing alone (no PS).")
+    res = run_fed_chs(task, config)
+    wall = time.time() - t0
+    for r, ppl, loss in zip(res.rounds, res.test_acc, res.train_loss):
+        print(f"round {r:4d}  train loss {loss:.4f}  held-out ppl {ppl:8.2f}")
+    print(f"done in {wall:.0f}s — uniform vocab ppl would be {args.vocab}")
+
+    mb = res.ledger.total_megabytes()
+    print(f"\ncommunication: {mb:,.1f} MB total "
+          f"({channel.__class__.__name__} uplink)")
+    for hop, bits in res.ledger.breakdown().items():
+        print(f"  {hop:15s} {bits / 8 / 1e6:10.1f} MB")
+
+    timeline = simulate_run(task, res, NetworkModel(), local_steps=args.local_steps)
+    tta = time_to_accuracy(res, timeline, args.target_ppl)
+    print(f"\nnetsim replay (default edge network): one pass of this run takes "
+          f"{timeline.makespan:,.1f}s of simulated wall-clock")
+    if tta is None:
+        print(f"never reached ppl <= {args.target_ppl}; best {res.best_acc():.2f} "
+              "(raise --rounds or --lr)")
+    else:
+        print(f"time to ppl <= {args.target_ppl}: {tta:,.1f}s simulated")
 
 
 if __name__ == "__main__":

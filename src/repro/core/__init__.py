@@ -6,6 +6,7 @@
 from repro.core.engine import RoundEngine, split_chain
 from repro.core.fed_chs import FedCHSConfig, run_fed_chs
 from repro.core.ledger import CommEvent, CommLedger, dense_message_bits, qsgd_message_bits
+from repro.core.oracles import cluster_sgd, local_sgd, multi_client_local_sgd
 from repro.core.scheduler import (
     FedCHSScheduler,
     LatencyAwareScheduler,
@@ -31,6 +32,9 @@ __all__ = [
     "FLTask",
     "RunResult",
     "evaluate",
+    "local_sgd",
+    "multi_client_local_sgd",
+    "cluster_sgd",
     "Topology",
     "make_topology",
 ]

@@ -2,11 +2,13 @@
 (the paper's Fig. 2 "FedAvg compressed by QSGD" arm), driven by the shared
 round engine.
 
-Per round: every client runs K local SGD steps from the PS model, uploads the
-channel-compressed model delta to the PS (multi-hop in a real deployment; the
-ledger records the client<->PS hop type so Fig. 2's structural comparison is
-visible), and the PS takes the D_n/D_A-weighted average.  A FedAvg round is
-one engine interaction with E=K: the whole round is a single fused jit call.
+Per round: every client runs K local optimizer steps from the PS model,
+uploads the channel-compressed model delta to the PS (multi-hop in a real
+deployment; the ledger records the client<->PS hop type so Fig. 2's
+structural comparison is visible), and the PS takes the D_n/D_A-weighted
+average.  A FedAvg round is one engine interaction with E=K: the whole round
+is a single fused jit call.  Client-held `LocalOpt` state persists across
+rounds without ever traversing the channel.
 """
 from __future__ import annotations
 
@@ -18,7 +20,8 @@ import jax.numpy as jnp
 from repro.comm.channels import Channel, DenseChannel, make_channel
 from repro.core.engine import RoundEngine, split_chain
 from repro.core.ledger import CommLedger
-from repro.core.simulation import FLTask, RunResult, evaluate
+from repro.core.simulation import FLTask, RunResult
+from repro.optim.local import LocalOpt
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 
 
@@ -30,6 +33,7 @@ class FedAvgConfig:
     bits_per_param: int = 32
     qsgd_levels: int | None = None
     channel: Channel | None = None  # explicit uplink channel
+    local_opt: LocalOpt | None = None  # client-held optimizer (None = plain SGD)
     track_events: bool = True          # False: bits only, no CommEvent stream
     seed: int = 0
     schedule: Schedule | None = None
@@ -49,7 +53,7 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
         if config.channel is not None
         else make_channel(config.qsgd_levels, config.bits_per_param)
     )
-    engine = RoundEngine(task.model, channel)
+    engine = RoundEngine(task.model, channel, local_opt=config.local_opt)
     gammas = jnp.asarray(task.global_weights())
     key = jax.random.PRNGKey(config.seed + 1)
 
@@ -58,15 +62,17 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
 
     rounds_log, acc_log, loss_log = [], [], []
     n = task.num_clients
+    opt_state = engine.init_opt_state(params, n)  # client-held, cross-round
     for t in range(config.rounds):
         # all clients stage K batches; one interaction of E=K local steps
-        bx, by = zip(*(task.sample_client_batches(i, K) for i in range(n)))
-        xs = jnp.stack(bx)[None]  # (1, n, K, B, ...)
-        ys = jnp.stack(by)[None]
+        per_client = [task.sample_client_batches(i, K) for i in range(n)]
+        batch = jax.tree.map(lambda *leaves: jnp.stack(leaves)[None], *per_client)
         subs = None
         if channel.stochastic:
             key, subs = split_chain(key, 1)
-        params, losses = engine.cluster_round(params, xs, ys, gammas, lrs, subs)
+        params, opt_state, losses = engine.cluster_round(
+            params, batch, gammas, lrs, subs, opt_state
+        )
 
         if ledger.track_events:
             for i in range(n):
@@ -81,7 +87,8 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)
-            acc_log.append(evaluate(task.model, params, task.dataset))
+            acc_log.append(task.evaluate(params))
             loss_log.append(float(jnp.mean(losses)))
 
-    return RunResult("fedavg", rounds_log, acc_log, loss_log, ledger, params)
+    return RunResult("fedavg", rounds_log, acc_log, loss_log, ledger, params,
+                     metric_mode=task.metric_mode)

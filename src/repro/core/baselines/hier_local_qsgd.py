@@ -11,6 +11,11 @@ Per global round:
     delta to the PS (per-cluster PRNG keys, split per leaf inside the
     channel), which takes the D_{A,m}/D_A-weighted average and broadcasts —
     the star-shaped, communication-heavy step Fed-CHS removes.
+
+The driver is generic over the task's `FedModel` / `DataSource` / `LocalOpt`:
+batches are opaque pytrees, and client-held optimizer state lives in one
+(M, n_max)-stacked pytree that persists across global rounds without ever
+traversing a channel.
 """
 from __future__ import annotations
 
@@ -23,7 +28,8 @@ import numpy as np
 from repro.comm.channels import Channel, DenseChannel, make_channel
 from repro.core.engine import RoundEngine, split_chain
 from repro.core.ledger import CommLedger
-from repro.core.simulation import FLTask, RunResult, evaluate
+from repro.core.simulation import FLTask, RunResult
+from repro.optim.local import LocalOpt
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 
 
@@ -37,6 +43,7 @@ class HierLocalQSGDConfig:
     qsgd_levels: int | None = 16   # uplink quantization (client->ES and ES->PS)
     channel: Channel | None = None     # explicit client->ES channel
     es_channel: Channel | None = None  # explicit ES->PS channel (defaults to channel)
+    local_opt: LocalOpt | None = None  # client-held optimizer (None = plain SGD)
     track_events: bool = True          # False: bits only, no CommEvent stream
     seed: int = 0
     schedule: Schedule | None = None
@@ -60,7 +67,7 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
         else make_channel(config.qsgd_levels, config.bits_per_param)
     )
     es_channel = config.es_channel if config.es_channel is not None else channel
-    engine = RoundEngine(task.model, channel, es_channel)
+    engine = RoundEngine(task.model, channel, es_channel, local_opt=config.local_opt)
     key = jax.random.PRNGKey(config.seed + 1)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
@@ -74,17 +81,19 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
         np.array(task.cluster_sizes, dtype=np.float32) / sum(task.cluster_sizes)
     )
 
+    n_max = mask.shape[1]
+    opt_state = engine.init_opt_state(params, M, n_max)  # client-held, cross-round
     rounds_log, acc_log, loss_log = [], [], []
     for t in range(config.rounds):
-        xs, ys = task.sample_all_cluster_batches(K, E)  # (J, M, n_max, E, B, ...)
+        batch = task.sample_all_cluster_batches(K, E)  # leaves (J, M, n_max, E, B, ...)
         subs = es_subs = None
         if channel.stochastic:
             key, flat = split_chain(key, interactions * M)
             subs = flat.reshape(interactions, M, 2)
         if es_channel.stochastic:
             key, es_subs = split_chain(key, M)
-        params, losses = engine.multi_cluster_round(
-            params, xs, ys, gammas, mask, es_weights, lrs_grouped, subs, es_subs
+        params, opt_state, losses = engine.multi_cluster_round(
+            params, batch, gammas, mask, es_weights, lrs_grouped, subs, es_subs, opt_state
         )
 
         if ledger.track_events:
@@ -110,7 +119,8 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)
-            acc_log.append(evaluate(task.model, params, task.dataset))
+            acc_log.append(task.evaluate(params))
             loss_log.append(float(jnp.mean(losses)))
 
-    return RunResult("hier_local_qsgd", rounds_log, acc_log, loss_log, ledger, params)
+    return RunResult("hier_local_qsgd", rounds_log, acc_log, loss_log, ledger, params,
+                     metric_mode=task.metric_mode)

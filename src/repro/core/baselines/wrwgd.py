@@ -6,19 +6,21 @@ model to a neighbor chosen with probability proportional to a per-client
 importance weight (the original uses local Lipschitz estimates; we use
 dataset-size weighting, the standard "weighted" variant, with uniform as an
 option). One client->client model hop per round, metered via the dense
-channel.
+channel.  The driver is model-agnostic: the batch is an opaque pytree staged
+by the task's `DataSource`.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.channels import DenseChannel
 from repro.core.engine import RoundEngine
 from repro.core.ledger import CommLedger
-from repro.core.simulation import FLTask, RunResult, evaluate
+from repro.core.simulation import FLTask, RunResult
 from repro.core.topology import make_topology
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 
@@ -57,9 +59,10 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
 
     rounds_log, acc_log, loss_log = [], [], []
     for t in range(config.rounds):
-        xs, ys = task.sample_client_batches(current, K)
-        # a walk step is a 1-client cluster running Eq.(5)-style local SGD
-        params, losses = engine.grad_round(params, xs[:, None], ys[:, None], gamma_one, lrs)
+        batch = jax.tree.map(
+            lambda a: a[:, None], task.sample_client_batches(current, K)
+        )  # (K, 1, B, ...): a walk step is a 1-client cluster running Eq.(5)
+        params, losses = engine.grad_round(params, batch, gamma_one, lrs)
 
         nbrs = list(topo.neighbors(current))
         if config.weighting == "data_size":
@@ -75,7 +78,8 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)
-            acc_log.append(evaluate(task.model, params, task.dataset))
+            acc_log.append(task.evaluate(params))
             loss_log.append(float(jnp.mean(losses)))
 
-    return RunResult("wrwgd", rounds_log, acc_log, loss_log, ledger, params)
+    return RunResult("wrwgd", rounds_log, acc_log, loss_log, ledger, params,
+                     metric_mode=task.metric_mode)

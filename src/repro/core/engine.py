@@ -1,27 +1,36 @@
 """Unified jitted cluster-round engine shared by all four FL algorithms.
 
-Layering
---------
-The simulation stack has three layers:
+Layering — the FedTask stack
+----------------------------
+The simulation stack is generic over one task abstraction: a `FedModel`
+(params init + batch-pytree loss + eval metric), a `DataSource` (per-client
+batch staging + held-out eval data), and a `LocalOpt` (client-held local
+optimizer state).  An MLP classifier and a 100M-param transformer LM run
+through the *same* layers:
 
   driver   (fed_chs.py, baselines/*.py)
       Owns the *protocol*: which cluster trains when, scheduler hops,
       ledger entries, evaluation cadence.  Pure host-side Python, one
-      engine call per round, no per-interaction device syncs.
+      engine call per round, no per-interaction device syncs.  Drivers
+      never look inside a batch — batches are opaque pytrees staged by the
+      task's `DataSource`.
 
   engine   (this module)
       Owns the *round*: the E-local-steps x K/E-interactions inner loop —
-      local SGD, delta computation, channel compression, gamma-weighted
-      aggregation — fused into a single jit-compiled `lax.scan` (with a
-      `vmap` over clusters for 3-tier HFL).  Batches for the whole round
-      are staged up front (`FLTask.sample_round_batches`), so the only
-      host<->device traffic per round is one params handle and one stacked
-      loss array.
+      local optimizer steps (`core/oracles.py`), delta computation, channel
+      compression, gamma-weighted aggregation — fused into a single
+      jit-compiled `lax.scan` (with a `vmap` over clusters for 3-tier HFL).
+      Batches for the whole round are staged up front
+      (`FLTask.sample_round_batches`), so the only host<->device traffic
+      per round is one params handle, the client-held optimizer states, and
+      one stacked loss array.
 
   channel  (repro/comm/channels.py)
       Owns the *message*: the in-graph lossy transform (dense / QSGD /
       Top-K) and its `message_bits` accounting.  Compiled into the scan
       body, so adding a channel never touches a driver or the engine.
+      Uplinks carry model deltas only — `LocalOpt` state (momentum, Adam
+      moments) stays on the client and never traverses a channel.
 
 A fourth, passive layer rides on the drivers' ledger entries:
 `repro.netsim` replays the recorded per-message `CommEvent` stream through
@@ -34,10 +43,12 @@ calls once per round.
 Round modes
 -----------
 * `grad_round`  — Eq. (5) literal: every in-cluster iteration uploads a
-  gradient and the ES applies the gamma-weighted step (E=1, dense).
-* `cluster_round` — delta mode: clients run E local steps, upload
+  gradient and the ES applies the gamma-weighted step (E=1, dense, plain
+  SGD by definition).
+* `cluster_round` — delta mode: clients run E local optimizer steps, upload
   channel-compressed model deltas, ES aggregates; scan over K/E
-  interactions.
+  interactions.  Per-client optimizer state enters and leaves the round as
+  a stacked pytree (leading client axis) the driver holds between rounds.
 * `multi_cluster_round` — the Hier-Local-QSGD round: the delta-mode
   interaction vmapped over all M clusters at once (ragged cluster sizes
   handled by padding + masking: padded client slots carry zero gamma
@@ -49,7 +60,9 @@ Determinism
 `split_chain(key, n)` reproduces n sequential `key, sub = split(key)`
 draws as one fused scan, bit-identical to the eager chains the pre-engine
 drivers used — so fixed-seed trajectories are preserved across the
-refactor (see tests/test_engine_parity.py).
+refactor (see tests/test_engine_parity.py).  The default `PlainSGD` path
+carries an empty opt-state pytree through the same scans the pre-FedTask
+engine ran, so classifier trajectories are unchanged.
 """
 from __future__ import annotations
 
@@ -62,10 +75,13 @@ import jax.numpy as jnp
 
 from repro.comm.channels import Channel, DenseChannel
 from repro.core.ledger import CommLedger
-from repro.models.classifier import Classifier
+from repro.core.oracles import grad_phase, local_opt_steps
+from repro.models.fed import FedModel, as_fed_model
+from repro.optim.local import LocalOpt, PlainSGD
 from repro.utils import tree_add, tree_sub
 
 PyTree = Any
+Batch = Any  # pytree of arrays sharing the documented leading axes
 
 
 def _jit_round(fn):
@@ -107,8 +123,8 @@ def dummy_subs(*lead: int) -> jnp.ndarray:
 
 
 # --------------------------------------------------------------------------
-# compiled round functions, cached per (model, channel) — shapes are handled
-# by jit's own shape-keyed cache
+# compiled round functions, cached per (model, channel, opt) — shapes are
+# handled by jit's own shape-keyed cache
 # --------------------------------------------------------------------------
 
 
@@ -125,108 +141,86 @@ def compress_uplinks(channel: Channel, deltas: PyTree, sub: jax.Array) -> PyTree
     return channel.compress(deltas, sub)
 
 
-def _local_sgd(model: Classifier):
-    """E local SGD steps for one client: xs (E, B, ...), ys (E, B), lrs (E,)."""
-    grad_fn = jax.value_and_grad(model.loss)
-
-    def run_one(params, xs, ys, lrs):
-        def step(p, inp):
-            x, y, lr = inp
-            loss, g = grad_fn(p, x, y)
-            return jax.tree.map(lambda w, gi: w - lr * gi, p, g), loss
-
-        params, losses = jax.lax.scan(step, params, (xs, ys, lrs))
-        return params, jnp.mean(losses)
-
-    return run_one
+@functools.cache
+def _grad_round_fn(model: FedModel):
+    """Eq. (5) literal (see `oracles.grad_phase`): batch leaves (K, n, B, ...),
+    gammas (n,), lrs (K,). Returns (params, per-step gamma-weighted losses)."""
+    return _jit_round(grad_phase(model))
 
 
 @functools.cache
-def _grad_round_fn(model: Classifier):
-    """Eq. (5) literal: scan over K steps of
-    w <- w - eta_k * sum_n gamma_n grad_n(w, xi_{n,k}).
-    xs: (K, n, B, ...), ys: (K, n, B), gammas: (n,), lrs: (K,).
-    Returns (params, per-step gamma-weighted losses (K,))."""
-    grad_fn = jax.vmap(jax.value_and_grad(model.loss), in_axes=(None, 0, 0))
-
-    def round_fn(params, xs, ys, gammas, lrs):
-        def step(p, inp):
-            x_k, y_k, lr_k = inp
-            losses, grads = grad_fn(p, x_k, y_k)
-            agg = jax.tree.map(lambda g: jnp.einsum("n,n...->...", gammas, g), grads)
-            p = jax.tree.map(lambda w, g: w - lr_k * g, p, agg)
-            return p, jnp.dot(gammas, losses)
-
-        return jax.lax.scan(step, params, (xs, ys, lrs))
-
-    return _jit_round(round_fn)
-
-
-@functools.cache
-def _delta_round_fn(model: Classifier, channel: Channel):
+def _delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
     """Delta mode: scan over J = K/E interactions; each interaction runs E
-    local steps per client (vmapped), pushes channel-compressed deltas, and
-    applies the gamma-weighted aggregate.
-    xs: (J, n, E, B, ...), ys: (J, n, E, B), lrs: (J, E), subs: (J, 2).
-    Returns (params, per-interaction mean losses (J,))."""
-    multi_local = jax.vmap(_local_sgd(model), in_axes=(None, 0, 0, None))
+    local optimizer steps per client (vmapped), pushes channel-compressed
+    deltas, and applies the gamma-weighted aggregate.
+    batch leaves: (J, n, E, B, ...), opt_state leaves: (n, ...), lrs: (J, E),
+    subs: (J, 2).
+    Returns (params, opt_state, per-interaction mean losses (J,))."""
+    multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
-    def round_fn(params, xs, ys, gammas, lrs, subs):
-        def interaction(p, inp):
-            x, y, lr, sub = inp
-            new_p, losses = multi_local(p, x, y, lr)
-            deltas = jax.tree.map(lambda a, b: a - b[None], new_p, p)
+    def round_fn(params, opt_state, batch, gammas, lrs, subs):
+        def interaction(carry, inp):
+            p, s = carry
+            b, lr, sub = inp
+            new_p, new_s, losses = multi_local(p, s, b, lr)
+            deltas = jax.tree.map(lambda a, base: a - base[None], new_p, p)
             deltas = compress_uplinks(channel, deltas, sub)
             agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
-            return tree_add(p, agg), jnp.mean(losses)
+            return (tree_add(p, agg), new_s), jnp.mean(losses)
 
-        return jax.lax.scan(interaction, params, (xs, ys, lrs, subs))
+        (params, opt_state), losses = jax.lax.scan(
+            interaction, (params, opt_state), (batch, lrs, subs)
+        )
+        return params, opt_state, losses
 
     return _jit_round(round_fn)
 
 
 @functools.cache
-def _multi_round_fn(model: Classifier, channel: Channel, es_channel: Channel):
+def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
     """One 3-tier HFL global round, vmapped over all M clusters at once.
-    xs: (J, M, n_max, E, B, ...), ys: (J, M, n_max, E, B), gammas/mask:
-    (M, n_max), es_weights: (M,), lrs: (J, E), subs: (J, M, 2),
+    batch leaves: (J, M, n_max, E, B, ...), opt_state leaves: (M, n_max, ...),
+    gammas/mask: (M, n_max), es_weights: (M,), lrs: (J, E), subs: (J, M, 2),
     es_subs: (M, 2).  Padded client slots (mask == 0) carry zero gamma
     weight and their deltas are zeroed before compression.
-    Returns (params, per-(interaction, cluster) losses (J, M))."""
-    multi_local = jax.vmap(_local_sgd(model), in_axes=(None, 0, 0, None))
+    Returns (params, opt_state, per-(interaction, cluster) losses (J, M))."""
+    multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
-    def round_fn(params, xs, ys, gammas, mask, es_weights, lrs, subs, es_subs):
-        M = xs.shape[1]
+    def round_fn(params, opt_state, batch, gammas, mask, es_weights, lrs, subs, es_subs):
+        M = mask.shape[0]
         cparams0 = jax.tree.map(
             lambda leaf: jnp.broadcast_to(leaf[None], (M,) + leaf.shape), params
         )
 
-        def interaction(cp, inp):
-            x, y, lr, sub = inp
+        def interaction(carry, inp):
+            cp, s = carry
+            b, lr, sub = inp
 
-            def one_cluster(p_m, x_m, y_m, g_m, msk_m, sub_m):
-                new_p, losses = multi_local(p_m, x_m, y_m, lr)
+            def one_cluster(p_m, s_m, b_m, g_m, msk_m, sub_m):
+                new_p, new_s, losses = multi_local(p_m, s_m, b_m, lr)
                 deltas = jax.tree.map(
-                    lambda a, b: (a - b[None]) * msk_m.reshape((-1,) + (1,) * (a.ndim - 1)),
+                    lambda a, base: (a - base[None]) * msk_m.reshape((-1,) + (1,) * (a.ndim - 1)),
                     new_p,
                     p_m,
                 )
                 deltas = compress_uplinks(channel, deltas, sub_m)
                 agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", g_m, dl), deltas)
                 loss = jnp.sum(losses * msk_m) / jnp.sum(msk_m)
-                return tree_add(p_m, agg), loss
+                return tree_add(p_m, agg), new_s, loss
 
-            cp, losses = jax.vmap(one_cluster)(cp, x, y, gammas, mask, sub)
-            return cp, losses
+            cp, s, losses = jax.vmap(one_cluster)(cp, s, b, gammas, mask, sub)
+            return (cp, s), losses
 
-        cparams, losses = jax.lax.scan(interaction, cparams0, (xs, ys, lrs, subs))
+        (cparams, opt_state), losses = jax.lax.scan(
+            interaction, (cparams0, opt_state), (batch, lrs, subs)
+        )
 
         # ES -> PS: compressed cluster deltas, PS weighted-aggregates + broadcasts
         es_deltas = jax.vmap(
             lambda p_m, sub_m: es_channel.compress(tree_sub(p_m, params), sub_m)
         )(cparams, es_subs)
         agg = jax.tree.map(lambda x_: jnp.einsum("m,m...->...", es_weights, x_), es_deltas)
-        return tree_add(params, agg), losses
+        return tree_add(params, agg), opt_state, losses
 
     return _jit_round(round_fn)
 
@@ -240,31 +234,62 @@ def _multi_round_fn(model: Classifier, channel: Channel, es_channel: Channel):
 class RoundEngine:
     """Per-run facade over the cached compiled round functions.
 
-    `channel` compresses client -> ES uplinks; `es_channel` (3-tier HFL
-    only) compresses ES -> PS uplinks and defaults to `channel`.
+    `model` may be a raw `Classifier` (wrapped to a `FedModel` on
+    construction) or any `FedModel`.  `channel` compresses client -> ES
+    uplinks; `es_channel` (3-tier HFL only) compresses ES -> PS uplinks and
+    defaults to `channel`.  `local_opt` is the client-held local optimizer;
+    the default `PlainSGD` is the seed-parity Eq. (5) step.
     """
 
-    model: Classifier
+    model: FedModel
     channel: Channel = DenseChannel()
     es_channel: Channel | None = None
+    local_opt: LocalOpt | None = None  # None -> PlainSGD()
 
-    def grad_round(self, params, xs, ys, gammas, lrs):
-        return _grad_round_fn(self.model)(params, xs, ys, gammas, lrs)
+    def __post_init__(self):
+        object.__setattr__(self, "model", as_fed_model(self.model))
+        if self.local_opt is None:
+            object.__setattr__(self, "local_opt", PlainSGD())
 
-    def cluster_round(self, params, xs, ys, gammas, lrs, subs=None):
+    def init_opt_state(self, params: PyTree, *lead: int) -> PyTree:
+        """Fresh stacked per-client optimizer state with leading axes `lead`
+        (e.g. `(n,)` for one cluster, `(M, n_max)` for 3-tier HFL).  Empty
+        pytree (zero cost) for the default stateless SGD."""
+        state = self.local_opt.init(params)
+        for n in reversed(lead):
+            state = jax.tree.map(
+                lambda leaf, n=n: jnp.broadcast_to(leaf[None], (n,) + leaf.shape), state
+            )
+        return state
+
+    def grad_round(self, params, batch, gammas, lrs):
+        return _grad_round_fn(self.model)(params, batch, gammas, lrs)
+
+    def cluster_round(self, params, batch, gammas, lrs, subs=None, opt_state=None):
+        J = jax.tree.leaves(batch)[0].shape[0]
+        n = jax.tree.leaves(batch)[0].shape[1]
         if subs is None:
-            subs = dummy_subs(xs.shape[0])
-        return _delta_round_fn(self.model, self.channel)(params, xs, ys, gammas, lrs, subs)
+            subs = dummy_subs(J)
+        if opt_state is None:
+            opt_state = self.init_opt_state(params, n)
+        fn = _delta_round_fn(self.model, self.channel, self.local_opt)
+        return fn(params, opt_state, batch, gammas, lrs, subs)
 
     def multi_cluster_round(
-        self, params, xs, ys, gammas, mask, es_weights, lrs, subs=None, es_subs=None
+        self, params, batch, gammas, mask, es_weights, lrs,
+        subs=None, es_subs=None, opt_state=None,
     ):
+        J, M = jax.tree.leaves(batch)[0].shape[:2]
         if subs is None:
-            subs = dummy_subs(xs.shape[0], xs.shape[1])
+            subs = dummy_subs(J, M)
         if es_subs is None:
-            es_subs = dummy_subs(xs.shape[1])
-        fn = _multi_round_fn(self.model, self.channel, self.es_channel or self.channel)
-        return fn(params, xs, ys, gammas, mask, es_weights, lrs, subs, es_subs)
+            es_subs = dummy_subs(M)
+        if opt_state is None:
+            opt_state = self.init_opt_state(params, M, mask.shape[1])
+        fn = _multi_round_fn(
+            self.model, self.channel, self.es_channel or self.channel, self.local_opt
+        )
+        return fn(params, opt_state, batch, gammas, mask, es_weights, lrs, subs, es_subs)
 
     def end_round(self, ledger: CommLedger, round_idx: int) -> None:
         """Uniform end-of-round bookkeeping: snapshot the ledger.

@@ -3,23 +3,28 @@ over the jitted round engine (`repro.core.engine`).
 
 Round t:
   1. ES m(t) broadcasts w^t to its cluster's clients.
-  2. K/E interactions: clients run E local SGD steps from the broadcast model
-     (E=1 reproduces Eq. (5) literally: the uploaded "delta" is eta_k * grad),
-     upload their update, and the ES takes the gamma-weighted aggregate.
-     The whole inner loop — local SGD, deltas, channel compression,
-     aggregation — is one fused `lax.scan` on device; batches are staged a
-     round at a time, and the only per-round host traffic is the params
-     handle plus one stacked loss array.
+  2. K/E interactions: clients run E local optimizer steps from the broadcast
+     model (E=1 + plain SGD reproduces Eq. (5) literally: the uploaded
+     "delta" is eta_k * grad), upload their update, and the ES takes the
+     gamma-weighted aggregate.  The whole inner loop — local steps, deltas,
+     channel compression, aggregation — is one fused `lax.scan` on device;
+     batches are staged a round at a time, and the only per-round host
+     traffic is the params handle, the cluster's client-held optimizer
+     states, plus one stacked loss array.
   3. m(t) selects m(t+1) by the 2-step least-traversed / largest-dataset rule
      and pushes w^{t+1} over a single ES->ES hop. No PS anywhere.
 
+The driver is generic over the task's `FedModel` / `DataSource` / `LocalOpt`:
+an Appendix-A MLP and a transformer LM take exactly this code path.
 Communication is metered bit-exactly via CommLedger; uplinks traverse a
 pluggable `Channel` (dense / Pallas-backed QSGD / Top-K) which owns both the
-in-graph lossy transform and the per-message bit accounting.  Every message
-is also recorded as a structured `CommEvent` (round, interaction phase,
-sender, receiver) so `repro.netsim` can replay the run through link models
-and answer the wall-clock question §3.2's bit counting cannot: whether the
-serial ES->ES chain beats the baselines' parallel-but-PS-bound uploads.
+in-graph lossy transform and the per-message bit accounting.  Client-held
+optimizer state (e.g. AdamW moments) never traverses a channel.  Every
+message is also recorded as a structured `CommEvent` (round, interaction
+phase, sender, receiver) so `repro.netsim` can replay the run through link
+models and answer the wall-clock question §3.2's bit counting cannot:
+whether the serial ES->ES chain beats the baselines' parallel-but-PS-bound
+uploads.
 """
 from __future__ import annotations
 
@@ -34,8 +39,9 @@ from repro.comm.channels import Channel, DenseChannel, make_channel
 from repro.core.engine import RoundEngine, split_chain
 from repro.core.ledger import CommLedger
 from repro.core.scheduler import FedCHSScheduler, LatencyAwareScheduler
-from repro.core.simulation import FLTask, RunResult, evaluate
+from repro.core.simulation import FLTask, RunResult
 from repro.core.topology import make_topology
+from repro.optim.local import LocalOpt, PlainSGD
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 
 
@@ -54,6 +60,8 @@ class FedCHSConfig:
     qsgd_levels: int | None = None         # uplink compression (None = dense)
     channel: Channel | None = None         # explicit uplink channel; overrides
                                            # qsgd_levels/bits_per_param
+    local_opt: LocalOpt | None = None      # client-held optimizer; None = the
+                                           # seed-parity plain-SGD Eq. (5) step
     link_delay: Callable[[int, int], float] | None = None
                                            # ES-pair delay (seconds); switches the
                                            # scheduler to LatencyAwareScheduler
@@ -102,15 +110,21 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         if config.channel is not None
         else make_channel(config.qsgd_levels, config.bits_per_param)
     )
-    engine = RoundEngine(task.model, channel)
+    engine = RoundEngine(task.model, channel, local_opt=config.local_opt)
     key = jax.random.PRNGKey(config.seed + 1)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)  # model broadcast
     up_bits = channel.message_bits(d)
 
-    # literal Eq. (5): E=1 dense interactions are gradient uplinks fused into
-    # the per-step gamma-weighted SGD scan
-    grad_mode = E == 1 and isinstance(channel, DenseChannel)
+    # literal Eq. (5): E=1 dense plain-SGD interactions are gradient uplinks
+    # fused into the per-step gamma-weighted SGD scan (explicit PlainSGD is
+    # the same mathematical step, so it takes the same path as the default)
+    grad_mode = (
+        E == 1
+        and isinstance(channel, DenseChannel)
+        and (config.local_opt is None or isinstance(config.local_opt, PlainSGD))
+    )
+    opt_states: dict[int, object] = {}  # cluster -> stacked client-held opt state
 
     rounds_log, acc_log, loss_log = [], [], []
     m = scheduler.state.current
@@ -119,14 +133,18 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         gammas = jnp.asarray(task.cluster_weights(m))
 
         if grad_mode:
-            xs, ys = task.sample_cluster_batches(m, K)
-            params, losses = engine.grad_round(params, xs, ys, gammas, lrs_flat)
+            batch = task.sample_cluster_batches(m, K)
+            params, losses = engine.grad_round(params, batch, gammas, lrs_flat)
         else:
-            xs, ys = task.sample_round_batches(m, K, E)
+            batch = task.sample_round_batches(m, K, E)
             subs = None
             if channel.stochastic:
                 key, subs = split_chain(key, interactions)
-            params, losses = engine.cluster_round(params, xs, ys, gammas, lrs_grouped, subs)
+            if m not in opt_states:
+                opt_states[m] = engine.init_opt_state(params, len(members))
+            params, opt_states[m], losses = engine.cluster_round(
+                params, batch, gammas, lrs_grouped, subs, opt_states[m]
+            )
 
         # comm accounting: one broadcast + one upload per client per
         # interaction, metered per message so netsim sees the phase barriers
@@ -155,7 +173,8 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
 
         if t % config.eval_every == 0 or t == config.rounds - 1:
             rounds_log.append(t)
-            acc_log.append(evaluate(task.model, params, task.dataset))
+            acc_log.append(task.evaluate(params))
             loss_log.append(float(jnp.mean(losses)))
 
-    return RunResult("fed_chs", rounds_log, acc_log, loss_log, ledger, params)
+    return RunResult("fed_chs", rounds_log, acc_log, loss_log, ledger, params,
+                     metric_mode=task.metric_mode)

@@ -1,13 +1,23 @@
-"""Shared FL-simulation machinery: task bundling, jitted local SGD, evaluation.
+"""Shared FL-simulation machinery: FedTask bundling, round staging, evaluation.
 
 Every algorithm (Fed-CHS and the three baselines) consumes an `FLTask` and
-produces a `RunResult`; the jitted inner loops are shared so accuracy
-comparisons are apples-to-apples.
+produces a `RunResult`.  The task is generic over the workload: its model is
+any `FedModel` (a raw Appendix-A `Classifier` is wrapped automatically), its
+batches come from any `DataSource` (array classification shards or per-client
+token streams), and its metric is whatever the model's `eval_metric` computes
+— accuracy for classifiers, perplexity for LMs.  The jitted inner loops live
+in `core/oracles.py` / `core/engine.py` and are shared, so quality
+comparisons are apples-to-apples across algorithms AND workloads.
+
+Staging helpers return *batch pytrees* (never bare (xs, ys) pairs) whose
+leaves carry the engine's documented leading axes, e.g. ``(J, n, E, B, ...)``
+for one delta-mode round.  The classifier path stages through the same
+`ClientLoader` rng chain as before the FedTask refactor, so fixed-seed
+trajectories are bit-identical (tests/test_engine_parity.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -15,51 +25,80 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ledger import CommLedger
-from repro.data.loader import ClientLoader, batch_iterator
 from repro.data.partition import ClientData
+from repro.data.sources import ArraySource, DataSource
 from repro.data.synthetic import Dataset
 from repro.models.classifier import Classifier
+from repro.models.fed import FedModel, as_fed_model
 from repro.utils import tree_num_params
 
 PyTree = Any
+Batch = Any
+
+
+def _stack_batches(batches: list[Batch]) -> Batch:
+    """Stack a list of equal-structure batch pytrees along a new leading axis."""
+    return jax.tree.map(lambda *leaves: np.stack(leaves), *batches)
 
 
 @dataclasses.dataclass
 class FLTask:
-    """Everything an FL algorithm needs to run one experiment."""
+    """Everything an FL algorithm needs to run one experiment.
 
-    model: Classifier
-    dataset: Dataset
-    clients: list[ClientData]
+    Classifier construction is unchanged: ``FLTask(clf, dataset, clients,
+    cluster_members, batch_size)`` builds an `ArraySource` internally.  Any
+    other workload passes `source=` (and leaves dataset/clients as None) or
+    uses `FLTask.from_source`.
+    """
+
+    model: FedModel | Classifier
+    dataset: Dataset | None
+    clients: list[ClientData] | None
     cluster_members: list[list[int]]  # cluster m -> client ids
     batch_size: int
     seed: int = 0
+    source: DataSource | None = None
 
     def __post_init__(self):
-        self.loaders = [
-            ClientLoader(self.dataset, c, self.batch_size, seed=self.seed) for c in self.clients
-        ]
-        self._loader_seed = self.seed
-        self.client_sizes = np.array([c.size for c in self.clients], dtype=np.float64)
+        self.fed_model: FedModel = as_fed_model(self.model)
+        if self.source is None:
+            assert self.dataset is not None and self.clients is not None, \
+                "FLTask needs either (dataset, clients) or an explicit source"
+            self.source = ArraySource(
+                self.dataset, self.clients, self.batch_size, seed=self.seed
+            )
+        self.client_sizes = np.asarray(self.source.client_sizes, dtype=np.float64)
         self.cluster_sizes = [
             int(sum(self.client_sizes[i] for i in members)) for members in self.cluster_members
         ]
 
+    @classmethod
+    def from_source(cls, model: FedModel, source: DataSource,
+                    cluster_members: list[list[int]], *, seed: int = 0) -> FLTask:
+        """Build a task directly over a `DataSource` (no array dataset)."""
+        return cls(model, None, None, cluster_members, source.batch_size,
+                   seed=seed, source=source)
+
     def reset_loaders(self, seed: int) -> None:
         """Reseed the per-client samplers — every algorithm run calls this so
         same-seed runs are deterministic and runs don't share rng state."""
-        self.loaders = [
-            ClientLoader(self.dataset, c, self.batch_size, seed=seed) for c in self.clients
-        ]
-        self._loader_seed = seed
+        self.source.reset(seed)
 
     @property
     def num_clients(self) -> int:
-        return len(self.clients)
+        return self.source.num_clients
 
     @property
     def num_clusters(self) -> int:
         return len(self.cluster_members)
+
+    @property
+    def metric_name(self) -> str:
+        return self.fed_model.metric_name
+
+    @property
+    def metric_mode(self) -> str:
+        return self.fed_model.metric_mode
 
     def cluster_weights(self, m: int) -> np.ndarray:
         """gamma_n^m = D_n / D_{A,m} for clients in cluster m."""
@@ -70,64 +109,64 @@ class FLTask:
         """gamma_n = D_n / D_A over all clients (FedAvg weighting)."""
         return (self.client_sizes / self.client_sizes.sum()).astype(np.float32)
 
-    def sample_cluster_batches(self, m: int, steps: int):
+    # ---- batch staging (returns jnp batch pytrees) ------------------------
+
+    def sample_cluster_batches(self, m: int, steps: int) -> Batch:
         """Stacked batches for every client of cluster m:
-        xs: (steps, n_clients_m, B, ...), ys: (steps, n_clients_m, B)."""
+        leaves (steps, n_clients_m, B, ...)."""
         members = self.cluster_members[m]
-        xs, ys = [], []
-        for _ in range(steps):
-            bx, by = zip(*(self.loaders[i].next_batch() for i in members))
-            xs.append(np.stack(bx))
-            ys.append(np.stack(by))
-        return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+        steps_np = _stack_batches([
+            _stack_batches([self.source.next_batch(i) for i in members])
+            for _ in range(steps)
+        ])
+        return jax.tree.map(jnp.asarray, steps_np)
 
-    def sample_client_batches(self, client: int, steps: int):
-        bx, by = zip(*(self.loaders[client].next_batch() for _ in range(steps)))
-        return jnp.asarray(np.stack(bx)), jnp.asarray(np.stack(by))
+    def sample_client_batches(self, client: int, steps: int) -> Batch:
+        """One client's next `steps` batches: leaves (steps, B, ...)."""
+        batch = _stack_batches([self.source.next_batch(client) for _ in range(steps)])
+        return jax.tree.map(jnp.asarray, batch)
 
-    def _stage_round_np(self, m: int, total_steps: int, epochs: int):
+    def _stage_round_np(self, m: int, total_steps: int, epochs: int) -> Batch:
         """Host-side staging of one round of cluster-m batches as numpy:
-        (J, n, E, B, ...). Per-client draw order is identical to epochs-sized
-        incremental sampling, so trajectories don't depend on prefetch depth."""
+        leaves (J, n, E, B, ...). Per-client draw order is identical to
+        epochs-sized incremental sampling, so trajectories don't depend on
+        prefetch depth."""
         assert total_steps % epochs == 0
         members = self.cluster_members[m]
-        xs, ys = [], []
-        for _ in range(total_steps):
-            bx, by = zip(*(self.loaders[i].next_batch() for i in members))
-            xs.append(np.stack(bx))
-            ys.append(np.stack(by))
-        x = np.stack(xs)  # (K, n, B, ...)
-        y = np.stack(ys)
+        flat = _stack_batches([
+            _stack_batches([self.source.next_batch(i) for i in members])
+            for _ in range(total_steps)
+        ])  # leaves (K, n, B, ...)
         J = total_steps // epochs
-        x = x.reshape(J, epochs, *x.shape[1:]).swapaxes(1, 2)
-        y = y.reshape(J, epochs, *y.shape[1:]).swapaxes(1, 2)
-        return x, y
+        return jax.tree.map(
+            lambda a: a.reshape(J, epochs, *a.shape[1:]).swapaxes(1, 2), flat
+        )
 
-    def sample_round_batches(self, m: int, total_steps: int, epochs: int):
+    def sample_round_batches(self, m: int, total_steps: int, epochs: int) -> Batch:
         """Stage one whole round of cluster-m batches, grouped by interaction,
-        for the engine's fused scan:
-        xs: (J, n, E, B, ...), ys: (J, n, E, B) with J = total_steps // epochs.
-        One host->device transfer per round."""
-        x, y = self._stage_round_np(m, total_steps, epochs)
-        return jnp.asarray(x), jnp.asarray(y)
+        for the engine's fused scan: leaves (J, n, E, B, ...) with
+        J = total_steps // epochs. One host->device transfer per round."""
+        return jax.tree.map(jnp.asarray, self._stage_round_np(m, total_steps, epochs))
 
-    def sample_all_cluster_batches(self, total_steps: int, epochs: int):
+    def sample_all_cluster_batches(self, total_steps: int, epochs: int) -> Batch:
         """Stage one 3-tier HFL round for EVERY cluster, padded to a uniform
         client width so the engine can vmap over clusters:
-        xs: (J, M, n_max, E, B, ...), ys: (J, M, n_max, E, B).
+        leaves (J, M, n_max, E, B, ...).
         Padded client slots replicate the cluster's first member (their
         updates are masked out downstream — see `padded_cluster_weights`)."""
         n_max = max(len(members) for members in self.cluster_members)
-        per_x, per_y = [], []
+        per_cluster = []
         for m in range(self.num_clusters):
-            x, y = self._stage_round_np(m, total_steps, epochs)  # (J, n_m, E, ...)
-            pad = n_max - x.shape[1]
+            b = self._stage_round_np(m, total_steps, epochs)  # (J, n_m, E, ...)
+            pad = n_max - len(self.cluster_members[m])
             if pad:
-                x = np.concatenate([x, np.repeat(x[:, :1], pad, axis=1)], axis=1)
-                y = np.concatenate([y, np.repeat(y[:, :1], pad, axis=1)], axis=1)
-            per_x.append(x)
-            per_y.append(y)
-        return jnp.asarray(np.stack(per_x, axis=1)), jnp.asarray(np.stack(per_y, axis=1))
+                b = jax.tree.map(
+                    lambda a: np.concatenate([a, np.repeat(a[:, :1], pad, axis=1)], axis=1),
+                    b,
+                )
+            per_cluster.append(b)
+        stacked = jax.tree.map(lambda *leaves: np.stack(leaves, axis=1), *per_cluster)
+        return jax.tree.map(jnp.asarray, stacked)
 
     def padded_cluster_weights(self):
         """(gammas, mask), both (M, n_max): per-cluster client weights padded
@@ -143,30 +182,42 @@ class FLTask:
         return jnp.asarray(gammas), jnp.asarray(mask)
 
     def init_params(self) -> PyTree:
-        return self.model.init(jax.random.PRNGKey(self.seed))
+        return self.fed_model.init(jax.random.PRNGKey(self.seed))
 
     def num_params(self) -> int:
         return tree_num_params(self.init_params())
+
+    def evaluate(self, params: PyTree) -> float:
+        """The task's scalar quality metric (accuracy, perplexity, ...)."""
+        return self.fed_model.eval_metric(params, self.source.eval_data())
 
 
 @dataclasses.dataclass
 class RunResult:
     name: str
     rounds: list[int]
-    test_acc: list[float]
+    test_acc: list[float]  # the task metric per eval round (see metric_mode)
     train_loss: list[float]
     ledger: CommLedger
     final_params: PyTree
+    metric_mode: str = "max"  # "max": accuracy-like; "min": perplexity-like
 
     def best_acc(self) -> float:
-        return max(self.test_acc) if self.test_acc else 0.0
+        if not self.test_acc:
+            return 0.0
+        return max(self.test_acc) if self.metric_mode == "max" else min(self.test_acc)
 
     def final_acc(self) -> float:
         return self.test_acc[-1] if self.test_acc else 0.0
 
+    def _reached(self, value: float, gamma: float) -> bool:
+        return value >= gamma if self.metric_mode == "max" else value <= gamma
+
     def rounds_to_accuracy(self, gamma: float) -> int | None:
+        """First eval round where the metric crosses `gamma` (>= for "max"
+        metrics, <= for "min" metrics such as perplexity)."""
         for r, a in zip(self.rounds, self.test_acc):
-            if a >= gamma:
+            if self._reached(a, gamma):
                 return r
         return None
 
@@ -175,84 +226,9 @@ class RunResult:
         return None if r is None else self.ledger.bits_until(r)
 
 
-# --------------------------------------------------------------------------
-# jitted building blocks, cached per (model, shapes)
-# --------------------------------------------------------------------------
-
-
-@functools.cache
-def _cluster_sgd_fn(model: Classifier):
-    """One Eq.(5) in-cluster phase: scan over K steps of
-    w <- w - eta_k * sum_n gamma_n grad_n(w, xi_{n,k}).
-    xs: (K, n, B, ...), ys: (K, n, B), gammas: (n,), lrs: (K,).
-    Returns (params, mean loss over steps/clients)."""
-
-    grad_fn = jax.vmap(jax.value_and_grad(model.loss), in_axes=(None, 0, 0))
-
-    def phase(params, xs, ys, gammas, lrs):
-        def step(p, inp):
-            x_k, y_k, lr_k = inp
-            losses, grads = grad_fn(p, x_k, y_k)  # per-client
-            agg = jax.tree.map(lambda g: jnp.einsum("n,n...->...", gammas, g), grads)
-            p = jax.tree.map(lambda w, g: w - lr_k * g, p, agg)
-            return p, jnp.dot(gammas, losses)
-
-        params, losses = jax.lax.scan(step, params, (xs, ys, lrs))
-        return params, jnp.mean(losses)
-
-    return jax.jit(phase)
-
-
-@functools.cache
-def _local_sgd_fn(model: Classifier):
-    """E plain local SGD steps for ONE client: xs (E, B, ...), ys (E, B), lrs (E,)."""
-
-    grad_fn = jax.value_and_grad(model.loss)
-
-    def run(params, xs, ys, lrs):
-        def step(p, inp):
-            x, y, lr = inp
-            loss, g = grad_fn(p, x, y)
-            return jax.tree.map(lambda w, gi: w - lr * gi, p, g), loss
-
-        params, losses = jax.lax.scan(step, params, (xs, ys, lrs))
-        return params, jnp.mean(losses)
-
-    return jax.jit(run)
-
-
-@functools.cache
-def _multi_client_local_sgd_fn(model: Classifier):
-    """vmap of _local_sgd_fn over a leading client axis (same E, B)."""
-
-    grad_fn = jax.value_and_grad(model.loss)
-
-    def run_one(params, xs, ys, lrs):
-        def step(p, inp):
-            x, y, lr = inp
-            loss, g = grad_fn(p, x, y)
-            return jax.tree.map(lambda w, gi: w - lr * gi, p, g), loss
-
-        params, losses = jax.lax.scan(step, params, (xs, ys, lrs))
-        return params, jnp.mean(losses)
-
-    return jax.jit(jax.vmap(run_one, in_axes=(None, 0, 0, None)))
-
-
-@functools.cache
-def _eval_fn(model: Classifier):
-    def correct(params, x, y):
-        return jnp.sum((jnp.argmax(model.apply(params, x), axis=-1) == y).astype(jnp.int32))
-
-    return jax.jit(correct)
-
-
-def evaluate(model: Classifier, params: PyTree, dataset: Dataset, batch: int = 512) -> float:
-    fn = _eval_fn(model)
-    n_correct, n = 0, 0
-    for x, y in batch_iterator(dataset.test_x, dataset.test_y, batch):
-        n_correct += int(fn(params, jnp.asarray(x), jnp.asarray(y)))
-        n += len(y)
-    return n_correct / max(n, 1)
-
-
+def evaluate(model: Classifier | FedModel, params: PyTree, eval_data,
+             batch: int = 512) -> float:
+    """Back-compat scalar evaluation: `model.eval_metric` over `eval_data`
+    (for classifiers: test-set accuracy over a `Dataset`, batched at 512)."""
+    del batch  # fixed inside ClassifierFedModel.eval_metric
+    return as_fed_model(model).eval_metric(params, eval_data)

@@ -1,6 +1,7 @@
 from repro.data.synthetic import make_dataset, DATASETS, Dataset
 from repro.data.partition import dirichlet_partition, assign_clusters, ClientData
 from repro.data.loader import ClientLoader, batch_iterator
+from repro.data.sources import ArraySource, DataSource, TokenSource
 from repro.data.tokens import synthetic_lm_batch
 
 __all__ = [
@@ -12,5 +13,8 @@ __all__ = [
     "ClientData",
     "ClientLoader",
     "batch_iterator",
+    "DataSource",
+    "ArraySource",
+    "TokenSource",
     "synthetic_lm_batch",
 ]

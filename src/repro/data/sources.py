@@ -1,0 +1,140 @@
+"""DataSource — per-client batch staging, generic over the batch pytree.
+
+`FLTask` stages whole rounds of per-client batches for the engine's fused
+scan; a `DataSource` is where those batches come from.  Each call to
+`next_batch(client)` yields one mini-batch *pytree* of numpy arrays (the
+classification sources yield ``{"x", "y"}``, the token source yields
+``{"tokens", "labels"}``), and `eval_data()` yields whatever the task's
+`FedModel.eval_metric` consumes — so the same drivers score accuracy for
+MLP/LeNet and perplexity for a transformer LM.
+
+Two sources ship here:
+
+  * `ArraySource` — wraps the classification stack (`Dataset` + Dirichlet
+    `ClientData` shards + `ClientLoader`).  Its per-client rng seeding and
+    draw order are exactly the pre-FedTask `FLTask` internals, so fixed-seed
+    classifier trajectories are bit-identical.
+  * `TokenSource` — per-client non-IID Markov token streams over one shared
+    transition table set; client n's batches concentrate on its dominant
+    topic (label-skew's LM analogue).  Every draw is keyed by
+    ``(seed, client, draw_index)`` — the stream position is explicit state,
+    not a hidden generator, so resuming a run mid-way replays the exact
+    batches instead of silently resampling from draw 0.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.data.loader import ClientLoader
+from repro.data.partition import ClientData
+from repro.data.synthetic import Dataset
+from repro.data.tokens import MarkovTokens
+
+Batch = Any  # pytree of numpy arrays with matching leading (B, ...) axes
+
+
+@runtime_checkable
+class DataSource(Protocol):
+    """Per-client batch supply + held-out eval data for one FL experiment."""
+
+    num_clients: int
+    batch_size: int
+    client_sizes: np.ndarray  # per-client dataset sizes (gamma weights)
+
+    def reset(self, seed: int) -> None:
+        """Rewind every client's stream (same-seed runs must be identical)."""
+        ...
+
+    def next_batch(self, client: int) -> Batch:
+        """The client's next mini-batch pytree (numpy leaves)."""
+        ...
+
+    def eval_data(self) -> Any:
+        """Held-out data in whatever form the task's FedModel evaluates."""
+        ...
+
+
+class ArraySource:
+    """Classification batches from a `Dataset` + per-client index shards."""
+
+    def __init__(self, dataset: Dataset, clients: list[ClientData], batch_size: int,
+                 *, seed: int = 0):
+        self.dataset = dataset
+        self.clients = clients
+        self.batch_size = batch_size
+        self.num_clients = len(clients)
+        self.client_sizes = np.array([c.size for c in clients], dtype=np.float64)
+        self.reset(seed)
+
+    def reset(self, seed: int) -> None:
+        self.loaders = [
+            ClientLoader(self.dataset, c, self.batch_size, seed=seed) for c in self.clients
+        ]
+
+    def next_batch(self, client: int) -> Batch:
+        x, y = self.loaders[client].next_batch()
+        return {"x": x, "y": y}
+
+    def eval_data(self) -> Dataset:
+        return self.dataset
+
+
+class TokenSource:
+    """Non-IID LM batches: per-client topic-skewed Markov token streams.
+
+    All clients share one transition-table set (`tables_seed`); client n's
+    rows carry its dominant topic ``n % topics`` with probability
+    `dominance`, the rest spread uniformly.  `eval_data()` is a fixed,
+    seed-independent stack of uniform-mixture batches (leading eval-batch
+    axis), so the perplexity metric is comparable across runs and seeds.
+    """
+
+    def __init__(self, vocab_size: int, num_clients: int, batch_size: int, seq_len: int,
+                 *, topics: int = 4, branch: int = 4, dominance: float = 0.9,
+                 tables_seed: int = 0, seed: int = 0, eval_batches: int = 4):
+        assert topics >= 1 and 0.0 <= dominance <= 1.0
+        self.vocab = vocab_size
+        self.num_clients = num_clients
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.gen = MarkovTokens(vocab_size, topics=topics, branch=branch, seed=tables_seed)
+        self.client_sizes = np.ones(num_clients, dtype=np.float64)
+        off = (1.0 - dominance) / max(topics - 1, 1) if topics > 1 else 0.0
+        self.topic_probs = np.full((num_clients, topics), off)
+        for n in range(num_clients):
+            self.topic_probs[n, n % topics] = dominance if topics > 1 else 1.0
+        self._eval = self._make_eval(tables_seed, eval_batches)
+        self.reset(seed)
+
+    def _make_eval(self, tables_seed: int, eval_batches: int) -> Batch:
+        rng = np.random.default_rng((tables_seed, 0x7EA1))
+        toks = np.stack([
+            self.gen.sample(rng, self.batch_size, self.seq_len + 1)
+            for _ in range(eval_batches)
+        ])  # (n_eval, B, T+1)
+        return {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
+
+    def reset(self, seed: int) -> None:
+        self.seed = seed
+        self.draw_counts = [0] * self.num_clients
+
+    def fast_forward(self, draw_counts: list[int]) -> None:
+        """Resume mid-run: set each client's stream position explicitly."""
+        assert len(draw_counts) == self.num_clients
+        self.draw_counts = list(draw_counts)
+
+    def next_batch(self, client: int) -> Batch:
+        idx = self.draw_counts[client]
+        self.draw_counts[client] = idx + 1
+        # pure function of (seed, client, draw index): no hidden generator
+        # state, so a resumed run re-issues the exact same batches
+        rng = np.random.default_rng((self.seed, client, idx))
+        topic = rng.choice(len(self.topic_probs[client]), size=self.batch_size,
+                           p=self.topic_probs[client])
+        toks = self.gen.sample_topics(rng, topic, self.seq_len + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def eval_data(self) -> Batch:
+        return self._eval

@@ -24,6 +24,13 @@ class MarkovTokens:
 
     def sample(self, rng: np.random.Generator, batch: int, seq_len: int) -> np.ndarray:
         topic = rng.integers(0, self.topics, size=batch)
+        return self.sample_topics(rng, topic, seq_len)
+
+    def sample_topics(self, rng: np.random.Generator, topic: np.ndarray, seq_len: int
+                      ) -> np.ndarray:
+        """Walk the chain with a *given* per-row topic assignment — the hook
+        non-IID federated sources use to skew each client's topic mixture."""
+        batch = len(topic)
         out = np.empty((batch, seq_len), dtype=np.int32)
         out[:, 0] = rng.integers(0, self.vocab, size=batch)
         choices = rng.integers(0, self.branch, size=(batch, seq_len))

@@ -1,3 +1,11 @@
 from repro.models.classifier import Classifier, make_classifier
+from repro.models.fed import ClassifierFedModel, FedModel, LMFedModel, as_fed_model
 
-__all__ = ["Classifier", "make_classifier"]
+__all__ = [
+    "Classifier",
+    "make_classifier",
+    "FedModel",
+    "ClassifierFedModel",
+    "LMFedModel",
+    "as_fed_model",
+]

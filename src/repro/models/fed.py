@@ -1,0 +1,152 @@
+"""FedModel — the one task abstraction the FL core is generic over.
+
+A `FedModel` is what the round engine, the channels, the bit ledger, and the
+netsim replay all see of a workload: how to initialise parameters, how to
+score one mini-batch (a *pytree*, not a fixed (x, y) pair), and how to turn
+held-out data into a scalar metric.  Everything protocol-side — which cluster
+trains when, what traverses which hop, how bits are counted — is identical
+whether the params pytree is a 3-layer MLP or a 100M-param transformer LM.
+
+Implementations must be hashable (frozen dataclasses): the engine caches one
+compiled round function per (model, channel, local-opt) triple.
+
+Two implementations ship here:
+
+  * `ClassifierFedModel` — adapts the paper's Appendix-A `Classifier`
+    (MLP/LeNet); batches are ``{"x": images, "y": labels}`` and the metric is
+    test-set accuracy (higher is better).  Its loss/eval computations are the
+    exact expressions the pre-FedTask stack ran, so fixed-seed classifier
+    trajectories are preserved bit-for-bit.
+  * `LMFedModel` — a decoder transformer LM built from `configs.ArchConfig` +
+    `models.transformer`; batches are ``{"tokens": ..., "labels": ...}`` and
+    the metric is held-out perplexity (lower is better).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.classifier import Classifier
+
+PyTree = Any
+Batch = Any  # pytree of arrays sharing leading axes
+
+
+@runtime_checkable
+class FedModel(Protocol):
+    """What the FL core needs from a workload. Hashable; methods traceable."""
+
+    name: str
+    metric_name: str        # e.g. "accuracy", "perplexity"
+    metric_mode: str        # "max" (accuracy-like) or "min" (loss-like)
+
+    def init(self, key: jax.Array) -> PyTree:
+        """Fresh parameter pytree."""
+        ...
+
+    def loss(self, params: PyTree, batch: Batch) -> jax.Array:
+        """Scalar training loss of one mini-batch pytree. Traceable."""
+        ...
+
+    def eval_metric(self, params: PyTree, eval_data: Any) -> float:
+        """Scalar quality metric on held-out data (host-side, may batch)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierFedModel:
+    """Appendix-A MLP/LeNet as a FedModel; batch = {"x": images, "y": labels}."""
+
+    clf: Classifier
+    metric_name: str = dataclasses.field(default="accuracy", init=False)
+    metric_mode: str = dataclasses.field(default="max", init=False)
+
+    @property
+    def name(self) -> str:
+        return self.clf.name
+
+    def init(self, key: jax.Array) -> PyTree:
+        return self.clf.init(key)
+
+    def loss(self, params: PyTree, batch: Batch) -> jax.Array:
+        return self.clf.loss(params, batch["x"], batch["y"])
+
+    def eval_metric(self, params: PyTree, eval_data) -> float:
+        """Test-set accuracy over `eval_data` (a `data.synthetic.Dataset`)."""
+        from repro.data.loader import batch_iterator
+
+        fn = _count_correct_fn(self.clf)
+        n_correct, n = 0, 0
+        for x, y in batch_iterator(eval_data.test_x, eval_data.test_y, 512):
+            n_correct += int(fn(params, jnp.asarray(x), jnp.asarray(y)))
+            n += len(y)
+        return n_correct / max(n, 1)
+
+
+@functools.cache
+def _count_correct_fn(clf: Classifier):
+    def correct(params, x, y):
+        return jnp.sum((jnp.argmax(clf.apply(params, x), axis=-1) == y).astype(jnp.int32))
+
+    return jax.jit(correct)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMFedModel:
+    """Decoder transformer LM as a FedModel.
+
+    Batch = {"tokens": (B, T) int32, "labels": (B, T) int32}; the loss is the
+    next-token cross entropy of `models.transformer.loss_fn`, and the metric
+    is perplexity on a fixed held-out batch set (lower is better) — which is
+    what lets `RunResult.rounds_to_accuracy`-style threshold queries, and
+    therefore netsim time-to-loss, work unchanged for LM pretraining.
+    """
+
+    cfg: ArchConfig
+    remat: bool = False
+    metric_name: str = dataclasses.field(default="perplexity", init=False)
+    metric_mode: str = dataclasses.field(default="min", init=False)
+
+    @property
+    def name(self) -> str:
+        return f"lm-{self.cfg.name}"
+
+    def init(self, key: jax.Array) -> PyTree:
+        from repro.models import transformer as tf
+
+        return tf.init_params(self.cfg, key)
+
+    def loss(self, params: PyTree, batch: Batch) -> jax.Array:
+        from repro.models import transformer as tf
+
+        return tf.loss_fn(self.cfg, params, batch, remat=self.remat)
+
+    def eval_metric(self, params: PyTree, eval_data) -> float:
+        """exp(mean next-token CE) over `eval_data`: a batch pytree with a
+        leading eval-batch axis on every leaf."""
+        mean_loss = _lm_eval_fn(self)(params, eval_data)
+        return float(jnp.exp(mean_loss))
+
+
+@functools.cache
+def _lm_eval_fn(model: LMFedModel):
+    def mean_loss(params, batches):
+        losses = jax.lax.map(lambda b: model.loss(params, b), batches)
+        return jnp.mean(losses)
+
+    return jax.jit(mean_loss)
+
+
+def as_fed_model(model: FedModel | Classifier) -> FedModel:
+    """Normalize: raw `Classifier`s get wrapped, FedModels pass through.
+
+    The wrapper is a frozen dataclass over the same Classifier instance, so
+    repeated wrapping of one model hits the same engine compile cache."""
+    if isinstance(model, Classifier):
+        return ClassifierFedModel(model)
+    return model

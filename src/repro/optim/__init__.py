@@ -6,6 +6,7 @@ from repro.optim.schedules import (
 )
 from repro.optim.sgd import sgd_init, sgd_step, SGDConfig
 from repro.optim.adamw import adamw_init, adamw_step, AdamWConfig
+from repro.optim.local import AdamWOpt, LocalOpt, MomentumSGD, PlainSGD
 
 __all__ = [
     "paper_sqrt_schedule",
@@ -18,4 +19,8 @@ __all__ = [
     "adamw_init",
     "adamw_step",
     "AdamWConfig",
+    "LocalOpt",
+    "PlainSGD",
+    "MomentumSGD",
+    "AdamWOpt",
 ]

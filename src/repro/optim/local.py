@@ -1,0 +1,87 @@
+"""LocalOpt — the client-held local-optimizer plug point of the round engine.
+
+Each FL client may carry private optimizer state (momentum, Adam moments)
+across its local steps, across interactions, and across rounds.  That state
+is *client-held*: it lives in the driver's per-cluster/per-client stacked
+state pytrees and never traverses a `Channel` — uplinks carry model deltas
+only, so switching SGD -> AdamW changes zero bits on the wire (pinned by
+tests/test_local_opt.py).
+
+Implementations are frozen dataclasses (hashable) so the engine can cache
+one compiled round function per (model, channel, opt) triple.  `PlainSGD`
+is the default and is *the* seed-parity path: its update is the exact
+``w - lr * g`` expression the pre-FedTask engine inlined, so default-path
+fixed-seed trajectories are unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_step
+from repro.optim.sgd import SGDConfig, sgd_init, sgd_step
+
+PyTree = Any
+
+
+@runtime_checkable
+class LocalOpt(Protocol):
+    """Per-client local optimizer: state init + one step. Traceable."""
+
+    def init(self, params: PyTree) -> PyTree:
+        """Fresh optimizer state for one client (empty pytree if stateless)."""
+        ...
+
+    def step(self, params: PyTree, state: PyTree, grads: PyTree, lr) -> tuple[PyTree, PyTree]:
+        """One local update: -> (new_params, new_state)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PlainSGD:
+    """Stateless ``w <- w - lr * g`` — the paper's Eq. (5) local step."""
+
+    def init(self, params: PyTree) -> PyTree:
+        return ()
+
+    def step(self, params, state, grads, lr):
+        return jax.tree.map(lambda w, g: w - lr * g, params, grads), state
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentumSGD:
+    """SGD with (optionally Nesterov) momentum, state = one velocity pytree."""
+
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    nesterov: bool = False
+
+    def _config(self) -> SGDConfig:
+        return SGDConfig(self.momentum, self.weight_decay, self.nesterov)
+
+    def init(self, params: PyTree) -> PyTree:
+        return sgd_init(params, self._config())
+
+    def step(self, params, state, grads, lr):
+        return sgd_step(params, grads, state, lr, self._config())
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWOpt:
+    """Client-held AdamW (first/second moments + step count stay local)."""
+
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def _config(self) -> AdamWConfig:
+        return AdamWConfig(self.b1, self.b2, self.eps, self.weight_decay)
+
+    def init(self, params: PyTree) -> PyTree:
+        return adamw_init(params)
+
+    def step(self, params, state, grads, lr):
+        return adamw_step(params, grads, state, lr, self._config())

@@ -28,13 +28,9 @@ from repro.core.baselines import (
     run_hier_local_qsgd,
     run_wrwgd,
 )
+from repro.core.oracles import cluster_sgd, local_sgd, multi_client_local_sgd
 from repro.core.scheduler import FedCHSScheduler
-from repro.core.simulation import (
-    _cluster_sgd_fn,
-    _local_sgd_fn,
-    _multi_client_local_sgd_fn,
-    evaluate,
-)
+from repro.core.simulation import evaluate
 from repro.core.topology import make_topology
 from repro.kernels.ops import qsgd_compress_tree
 from repro.optim.schedules import paper_sqrt_schedule
@@ -70,8 +66,8 @@ def ref_fed_chs(task, config):
     scheduler = FedCHSScheduler(topo, task.cluster_sizes, initial=m0)
 
     params = task.init_params()
-    cluster_phase = _cluster_sgd_fn(task.model)
-    multi_local = _multi_client_local_sgd_fn(task.model)
+    cluster_phase = cluster_sgd(task.model)
+    multi_local = multi_client_local_sgd(task.model)
     key = jax.random.PRNGKey(config.seed + 1)
 
     rounds_log, acc_log, loss_log = [], [], []
@@ -79,15 +75,15 @@ def ref_fed_chs(task, config):
     for t in range(config.rounds):
         gammas = jnp.asarray(task.cluster_weights(m))
         if E == 1 and config.qsgd_levels is None:
-            xs, ys = task.sample_cluster_batches(m, K)
-            params, loss = cluster_phase(params, xs, ys, gammas, jnp.asarray(lrs))
+            b = task.sample_cluster_batches(m, K)
+            params, loss = cluster_phase(params, b["x"], b["y"], gammas, jnp.asarray(lrs))
         else:
             loss_acc = 0.0
             for j in range(interactions):
                 lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
-                xs, ys = task.sample_cluster_batches(m, E)
-                xs = jnp.swapaxes(xs, 0, 1)
-                ys = jnp.swapaxes(ys, 0, 1)
+                b = task.sample_cluster_batches(m, E)
+                xs = jnp.swapaxes(b["x"], 0, 1)
+                ys = jnp.swapaxes(b["y"], 0, 1)
                 new_p, losses = multi_local(params, xs, ys, lr_slice)
                 deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
                 if config.qsgd_levels is not None:
@@ -113,16 +109,16 @@ def ref_fedavg(task, config):
     lrs = jnp.asarray([sched_fn(k) for k in range(K)], dtype=jnp.float32)
 
     params = task.init_params()
-    multi_local = _multi_client_local_sgd_fn(task.model)
+    multi_local = multi_client_local_sgd(task.model)
     gammas = jnp.asarray(task.global_weights())
     key = jax.random.PRNGKey(config.seed + 1)
 
     rounds_log, acc_log, loss_log = [], [], []
     n = task.num_clients
     for t in range(config.rounds):
-        bx, by = zip(*(task.sample_client_batches(i, K) for i in range(n)))
-        xs = jnp.stack(bx)
-        ys = jnp.stack(by)
+        per_client = [task.sample_client_batches(i, K) for i in range(n)]
+        xs = jnp.stack([b["x"] for b in per_client])
+        ys = jnp.stack([b["y"] for b in per_client])
         new_p, losses = multi_local(params, xs, ys, lrs)
         deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
         if config.qsgd_levels is not None:
@@ -149,12 +145,12 @@ def ref_wrwgd(task, config):
     current = int(rng.integers(task.num_clients))
 
     params = task.init_params()
-    local = _local_sgd_fn(task.model)
+    local = local_sgd(task.model)
 
     rounds_log, acc_log, loss_log = [], [], []
     for t in range(config.rounds):
-        xs, ys = task.sample_client_batches(current, K)
-        params, loss = local(params, xs, ys, lrs)
+        b = task.sample_client_batches(current, K)
+        params, loss = local(params, b["x"], b["y"], lrs)
 
         nbrs = list(topo.neighbors(current))
         if config.weighting == "data_size":
@@ -179,7 +175,7 @@ def ref_hier_local_qsgd(task, config):
     lrs = np.asarray([sched_fn(k) for k in range(K)], dtype=np.float32)
 
     params = task.init_params()
-    multi_local = _multi_client_local_sgd_fn(task.model)
+    multi_local = multi_client_local_sgd(task.model)
     key = jax.random.PRNGKey(config.seed + 1)
 
     M = task.num_clusters
@@ -195,9 +191,9 @@ def ref_hier_local_qsgd(task, config):
         for j in range(interactions):
             lr_slice = jnp.asarray(lrs[j * E : (j + 1) * E])
             for m in range(M):
-                xs, ys = task.sample_cluster_batches(m, E)
-                xs = jnp.swapaxes(xs, 0, 1)
-                ys = jnp.swapaxes(ys, 0, 1)
+                b = task.sample_cluster_batches(m, E)
+                xs = jnp.swapaxes(b["x"], 0, 1)
+                ys = jnp.swapaxes(b["y"], 0, 1)
                 new_p, losses = multi_local(cluster_params[m], xs, ys, lr_slice)
                 deltas = jax.tree.map(
                     lambda np_, op: np_ - op[None], new_p, cluster_params[m]

@@ -1,0 +1,63 @@
+"""The LocalOpt plug point: client-held optimizer state changes trajectories
+but never the wire — and the default plain-SGD path is the seed-parity path."""
+import numpy as np
+
+from repro.core import FedCHSConfig, run_fed_chs
+from repro.core.baselines import FedAvgConfig, run_fedavg
+from repro.optim.local import AdamWOpt, MomentumSGD, PlainSGD
+
+
+def _cfg(**kw):
+    # delta mode (E=2) so the local-opt plug point is actually exercised
+    return FedCHSConfig(rounds=3, local_steps=4, local_epochs=2, qsgd_levels=16,
+                        eval_every=1, seed=0, **kw)
+
+
+def test_adamw_state_stays_local_uplink_bits_unchanged(small_task):
+    """Switching SGD -> client-held AdamW changes zero bits on any hop: the
+    moments never traverse a channel."""
+    sgd = run_fed_chs(small_task, _cfg())
+    adam = run_fed_chs(small_task, _cfg(local_opt=AdamWOpt(weight_decay=0.0)))
+    assert dict(adam.ledger.bits) == dict(sgd.ledger.bits)
+    assert dict(adam.ledger.messages) == dict(sgd.ledger.messages)
+    # ... but the plug point is real: the trajectory differs
+    assert adam.train_loss != sgd.train_loss
+
+
+def test_explicit_plain_sgd_is_bit_identical_to_default(small_task):
+    """`local_opt=PlainSGD()` must reproduce the default path exactly — the
+    fixed-seed trajectory contract of tests/test_engine_parity.py extends to
+    the explicit opt plug point."""
+    default = run_fed_chs(small_task, _cfg())
+    explicit = run_fed_chs(small_task, _cfg(local_opt=PlainSGD()))
+    assert explicit.train_loss == default.train_loss
+    assert explicit.test_acc == default.test_acc
+    assert explicit.ledger.total_bits() == default.ledger.total_bits()
+
+    # E=1 dense as well: explicit PlainSGD must still take the fused
+    # grad-mode path, not silently switch to delta mode
+    g_cfg = FedCHSConfig(rounds=2, local_steps=3, eval_every=1, seed=0)
+    g_default = run_fed_chs(small_task, g_cfg)
+    g_explicit = run_fed_chs(small_task, FedCHSConfig(
+        rounds=2, local_steps=3, eval_every=1, seed=0, local_opt=PlainSGD()))
+    assert g_explicit.train_loss == g_default.train_loss
+    assert g_explicit.test_acc == g_default.test_acc
+
+
+def test_momentum_state_persists_across_rounds(small_task):
+    """A client-held velocity must carry across rounds: two 1-round runs from
+    scratch differ from one 2-round run at the second round's loss."""
+    cfg = FedAvgConfig(rounds=2, local_steps=4, eval_every=1, seed=0,
+                       local_opt=MomentumSGD(momentum=0.9))
+    two = run_fedavg(small_task, cfg)
+    plain = run_fedavg(small_task, FedAvgConfig(rounds=2, local_steps=4,
+                                                eval_every=1, seed=0))
+    assert two.train_loss != plain.train_loss
+    assert np.isfinite(two.train_loss).all()
+
+
+def test_fedavg_adamw_runs_and_learns(small_task):
+    res = run_fedavg(small_task, FedAvgConfig(rounds=6, local_steps=5, eval_every=5,
+                                              seed=0, local_opt=AdamWOpt(weight_decay=0.0)))
+    assert np.isfinite(res.train_loss).all()
+    assert res.train_loss[-1] < res.train_loss[0]
