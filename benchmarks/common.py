@@ -58,31 +58,34 @@ ALGORITHMS = ("fed_chs", "fedavg", "wrwgd", "hier_local_qsgd")
 
 
 def run_algorithm(name: str, task: FLTask, scale: BenchScale, *, qsgd: int | None = None,
-                  seed: int = 0, track_events: bool = False):
+                  seed: int = 0, track_events: bool = False, sampler=None):
     """`track_events=False` (default) skips the per-message CommEvent stream —
     only the netsim time-to-accuracy suite replays events, and at --full
-    scale the stream would be millions of tuples per run."""
+    scale the stream would be millions of tuples per run.  `sampler` is an
+    optional `repro.part` participation sampler (None = full participation,
+    the seed-parity path)."""
     t0 = time.time()
     if name == "fed_chs":
         res = run_fed_chs(task, FedCHSConfig(
             rounds=scale.rounds, local_steps=scale.local_steps,
             eval_every=scale.eval_every, qsgd_levels=qsgd, seed=seed,
-            track_events=track_events))
+            track_events=track_events, sampler=sampler))
     elif name == "fedavg":
         res = run_fedavg(task, FedAvgConfig(
             rounds=max(scale.rounds // 4, 4), local_steps=scale.local_steps,
             eval_every=max(scale.eval_every // 4, 1), qsgd_levels=qsgd, seed=seed,
-            track_events=track_events))
+            track_events=track_events, sampler=sampler))
     elif name == "wrwgd":
         res = run_wrwgd(task, WRWGDConfig(
             rounds=scale.rounds * 2, local_steps=scale.local_steps,
-            eval_every=scale.eval_every * 2, seed=seed, track_events=track_events))
+            eval_every=scale.eval_every * 2, seed=seed, track_events=track_events,
+            sampler=sampler))
     elif name == "hier_local_qsgd":
         res = run_hier_local_qsgd(task, HierLocalQSGDConfig(
             rounds=max(scale.rounds // 6, 2), local_steps=scale.local_steps,
             local_epochs=5, eval_every=max(scale.eval_every // 6, 1),
             qsgd_levels=qsgd if qsgd is not None else 16, seed=seed,
-            track_events=track_events))
+            track_events=track_events, sampler=sampler))
     else:
         raise ValueError(name)
     return res, time.time() - t0

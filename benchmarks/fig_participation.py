@@ -1,0 +1,174 @@
+"""Participation under churn: bits scale with who reports, time diverges by
+protocol shape.
+
+Every algorithm is trained twice — full participation vs an availability
+-aware sampler over a seeded Bernoulli churn trace (`repro.part`) — and the
+churn runs are then replayed through `repro.netsim` on a straggler-heavy
+edge network with a per-interaction reporting deadline:
+
+  * **bits**: the ledger's uplink total must scale *exactly* with the
+    participating-client count — per round, `|participants| x interactions
+    x bits_per_message` (printed as the closed-form check; the ratio to the
+    full run approximates the trace's up-probability).
+  * **time**: deadline dropouts save bits but waste wall-clock (the
+    aggregator waits out the deadline), and churn hits the protocols
+    differently: a Fed-CHS round whose whole cluster is dark degrades to a
+    pass-through ES->ES hop (nearly free), while the PS-bound baselines
+    still pay their barrier every round — so the churn-induced slowdown of
+    Fed-CHS and the star/hierarchical baselines *diverges*.
+
+Writes `experiments/participation.md` (deterministic simulated quantities
+only) for `scripts/make_experiments_md.py` to splice into EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import ALGORITHMS, BenchScale, build_task, run_algorithm
+from repro.core.ledger import dense_message_bits, qsgd_message_bits
+from repro.netsim import edge_cloud_network, sgd_step_flops, simulate_run, time_to_accuracy
+from repro.part import AvailabilityAware, BernoulliTrace
+
+GAMMA = 0.75
+UP_HOPS = ("client_to_es", "client_to_ps")
+MD_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "participation.md")
+
+
+def _uplink_bits(res) -> int:
+    return sum(res.ledger.bits[h] for h in UP_HOPS)
+
+
+def _pass_through_rounds(res) -> int:
+    """Rounds that carried protocol traffic but zero client uplinks (the
+    Fed-CHS dark-cluster forwarded-model case).  0 for WRWGD, whose walk
+    never has client uplinks to begin with."""
+    if not any(res.ledger.bits[h] for h in UP_HOPS):
+        return 0
+    up = {}
+    for h in UP_HOPS:
+        for t, bits in res.ledger.round_bits(h).items():
+            up[t] = up.get(t, 0) + bits
+    rounds_seen = {e.round for e in res.ledger.events}
+    return len([t for t in rounds_seen if up.get(t, 0) == 0])
+
+
+def run(quick: bool = True):
+    scale = (BenchScale(train_size=3000, test_size=800, num_clients=15,
+                        num_clusters=5, rounds=24, local_steps=10, eval_every=4)
+             if quick else BenchScale())
+    task = build_task("mnist", "mlp" if quick else "lenet", 0.6, scale)
+    d = task.num_params()
+    sampler = AvailabilityAware(BernoulliTrace(p=0.5, seed=7))
+    # deadline sits between a nominal and a straggler client chain, so only
+    # stragglers get dropped; seeded -> the dropout set is deterministic
+    net = edge_cloud_network(seed=2, heterogeneity=0.3, straggler_frac=0.25,
+                             straggler_slowdown=16.0)
+
+    rows, md = [], []
+    md.append("## §Participation\n")
+    md.append(
+        "Availability-aware sampling over a Bernoulli(p=0.5) churn trace vs "
+        "full participation, plus a netsim replay on a straggler-heavy edge "
+        f"with a per-interaction reporting deadline (Γ={GAMMA}). Uplink bits "
+        "scale exactly with the participating-client count; a dark Fed-CHS "
+        "cluster degrades to a pass-through ES->ES hop while the PS-bound "
+        "baselines pay their barrier every round.\n")
+    md.append("| algorithm | uplink MB (full) | uplink MB (churn) | ratio | "
+              "pass-through rounds | t2Γ full (s) | t2Γ churn+deadline (s) | "
+              "churn slowdown | dropped-by-deadline MB |")
+    md.append("|---|---|---|---|---|---|---|---|---|")
+
+    # per-interaction reporting deadline: 3x a nominal (non-straggler) client's
+    # broadcast -> E-steps -> upload chain — heterogeneity (±30%) stays inside
+    # it, 16x stragglers blow through it and get dropped
+    steps_per_phase = {"fed_chs": 1, "fedavg": scale.local_steps,
+                       "hier_local_qsgd": 5, "wrwgd": None}
+    access = {"fed_chs": "wireless", "fedavg": "wan",
+              "hier_local_qsgd": "wireless"}
+
+    def _deadline(name):
+        if steps_per_phase[name] is None:
+            return None  # WRWGD's walk has no aggregation phase
+        flops = steps_per_phase[name] * sgd_step_flops(d, task.batch_size)
+        return 3.0 * net.nominal_chain_s(access[name], dense_message_bits(d), flops)
+
+    slowdowns = {}
+    for name in ALGORITHMS:
+        full_res, wall_f = run_algorithm(name, task, scale, seed=0,
+                                         track_events=True)
+        churn_res, wall_c = run_algorithm(name, task, scale, seed=0,
+                                          track_events=True, sampler=sampler)
+        fb, cb = _uplink_bits(full_res), _uplink_bits(churn_res)
+        # WRWGD has no client uplinks — its one model hop per round is
+        # participation-independent, so compare total bits instead
+        ratio = cb / fb if fb else churn_res.ledger.total_bits() / full_res.ledger.total_bits()
+
+        # closed-form: per-round uplink bits == |senders| * phases * msg bits
+        msg_bits = (qsgd_message_bits(d, 16) if name == "hier_local_qsgd"
+                    else dense_message_bits(d))
+        up_hop = next((h for h in UP_HOPS if churn_res.ledger.bits[h]), None)
+        if up_hop is not None:
+            for t, bits in churn_res.ledger.round_bits(up_hop).items():
+                senders = churn_res.ledger.round_senders(t, up_hop)
+                phases = len({e.phase for e in churn_res.ledger.events
+                              if e.round == t and e.hop == up_hop})
+                assert bits == len(senders) * phases * msg_bits, \
+                    f"{name} round {t}: ledger bits off the closed form"
+
+        # netsim: same straggler network; churn replay adds the deadline
+        tl_full = simulate_run(task, full_res, net,
+                               local_steps=scale.local_steps)
+        tl_churn = simulate_run(task, churn_res, net,
+                                local_steps=scale.local_steps,
+                                deadline_s=_deadline(name))
+        t2_full = time_to_accuracy(full_res, tl_full, GAMMA)
+        t2_churn = time_to_accuracy(churn_res, tl_churn, GAMMA)
+        per_round_full = tl_full.makespan / len(tl_full.round_end)
+        per_round_churn = tl_churn.makespan / len(tl_churn.round_end)
+        slowdowns[name] = per_round_churn / per_round_full
+        pt = _pass_through_rounds(churn_res)
+
+        def fmt(v):
+            return "-" if v is None else f"{v:.2f}"
+
+        rows.append((f"participation/train-{name}", (wall_f + wall_c) * 1e6,
+                     f"uplink_ratio={ratio:.2f}"))
+        rows.append((f"participation/t2gamma-{name}",
+                     0.0 if t2_churn is None else t2_churn * 1e6,
+                     f"t2gamma_full_s={fmt(t2_full)}"))
+        md.append(f"| {name} | {fb / 8e6:.1f} | {cb / 8e6:.1f} | {ratio:.2f} | "
+                  f"{pt} | {fmt(t2_full)} | {fmt(t2_churn)} | "
+                  f"{slowdowns[name]:.2f}x | {tl_churn.dropped_bits / 8e6:.1f} |")
+        print(f"{name:16s} uplink {fb / 8e6:7.1f} -> {cb / 8e6:7.1f} MB "
+              f"(x{ratio:.2f})  pass-through rounds: {pt}  "
+              f"t2Γ {fmt(t2_full)} -> {fmt(t2_churn)} s  "
+              f"slowdown x{slowdowns[name]:.2f}  "
+              f"deadline-dropped {tl_churn.dropped_bits / 8e6:.1f} MB")
+
+    ps_names = [n for n in ("fedavg", "hier_local_qsgd") if n in slowdowns]
+    diverges = any(abs(slowdowns["fed_chs"] - slowdowns[n]) > 0.05
+                   for n in ps_names)
+    verdict = ("DIVERGES" if diverges else "no divergence at this scale")
+    print(f"churn slowdown fed_chs x{slowdowns['fed_chs']:.2f} vs PS baselines "
+          + ", ".join(f"{n} x{slowdowns[n]:.2f}" for n in ps_names)
+          + f" -> {verdict}")
+    md.append(f"\nChurn-induced per-round slowdown: Fed-CHS "
+              f"x{slowdowns['fed_chs']:.2f} vs "
+              + ", ".join(f"{n} x{slowdowns[n]:.2f}" for n in ps_names)
+              + f" — {verdict}.\n")
+    rows.append(("participation/divergence", float(diverges),
+                 f"fed_chs_slowdown={slowdowns['fed_chs']:.2f}"))
+
+    os.makedirs(os.path.dirname(MD_PATH), exist_ok=True)
+    with open(MD_PATH, "w") as f:
+        f.write("\n".join(md) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    for r in run():
+        print(",".join(map(str, r)))
+    print(f"[{time.time() - t0:.1f}s]")

@@ -10,12 +10,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (hours on CPU); default is reduced")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig2,fig3,fig4,kernels,roofline,engine,timeacc")
+                    help="comma list: table1,fig2,fig3,fig4,kernels,roofline,"
+                         "engine,timeacc,participation")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import engine_speedup, fig2_comm, fig3_hparams, fig4_partial_het
-    from benchmarks import fig_time_to_acc, kernels_micro, roofline, table1_accuracy
+    from benchmarks import fig_participation, fig_time_to_acc, kernels_micro
+    from benchmarks import roofline, table1_accuracy
 
     suites = {
         "table1": table1_accuracy.run,
@@ -26,6 +28,7 @@ def main() -> None:
         "roofline": roofline.run,
         "engine": engine_speedup.run,
         "timeacc": fig_time_to_acc.run,  # netsim smoke: wall-clock time-to-Γ
+        "participation": fig_participation.run,  # churn: bits + deadline replay
     }
     selected = args.only.split(",") if args.only else list(suites)
 

@@ -1,5 +1,8 @@
 """Regenerate EXPERIMENTS.md §Dry-run and §Roofline from experiments/dryrun/*.json,
-and splice in the hand-authored §Perf log from experiments/perf_log.md.
+splice in the hand-authored §Perf log from experiments/perf_log.md, and the
+§Participation table written by `benchmarks/fig_participation.py`
+(experiments/participation.md).  Sections whose inputs are absent are
+omitted rather than rendered empty.
 
   PYTHONPATH=src:. python scripts/make_experiments_md.py
 """
@@ -12,6 +15,7 @@ import os
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
 PERF_LOG = os.path.join(ROOT, "experiments", "perf_log.md")
+PARTICIPATION = os.path.join(ROOT, "experiments", "participation.md")
 OUT = os.path.join(ROOT, "EXPERIMENTS.md")
 
 SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
@@ -127,25 +131,30 @@ def bottleneck_notes(recs):
     return "\n".join(lines)
 
 
+def _read(path):
+    if os.path.exists(path):
+        with open(path) as f:
+            return f.read().strip()
+    return ""
+
+
 def main():
     recs = load()
-    perf = ""
-    if os.path.exists(PERF_LOG):
-        with open(PERF_LOG) as f:
-            perf = f.read()
-    content = "\n\n".join([
+    sections = [
         "# EXPERIMENTS — Fed-CHS reproduction + multi-pod dry-run + roofline",
         "(generated by scripts/make_experiments_md.py from experiments/dryrun/*.json; "
-        "§Perf from experiments/perf_log.md; paper-claims validation from "
-        "benchmarks — see bench_output.txt)",
-        dryrun_section(recs),
-        roofline_section(recs),
-        bottleneck_notes(recs),
-        perf,
-    ])
+        "§Perf from experiments/perf_log.md; §Participation from "
+        "experiments/participation.md, written by `benchmarks/run.py --only "
+        "participation`; paper-claims validation from benchmarks — see "
+        "bench_output.txt)",
+    ]
+    if recs:
+        sections += [dryrun_section(recs), roofline_section(recs),
+                     bottleneck_notes(recs)]
+    sections += [s for s in (_read(PARTICIPATION), _read(PERF_LOG)) if s]
     with open(OUT, "w") as f:
-        f.write(content + "\n")
-    print(f"wrote {OUT} ({len(recs)} records)")
+        f.write("\n\n".join(sections) + "\n")
+    print(f"wrote {OUT} ({len(recs)} dryrun records)")
 
 
 if __name__ == "__main__":

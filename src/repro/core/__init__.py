@@ -8,6 +8,7 @@ from repro.core.fed_chs import FedCHSConfig, run_fed_chs
 from repro.core.ledger import CommEvent, CommLedger, dense_message_bits, qsgd_message_bits
 from repro.core.oracles import cluster_sgd, local_sgd, multi_client_local_sgd
 from repro.core.scheduler import (
+    AvailabilityAwareScheduler,
     FedCHSScheduler,
     LatencyAwareScheduler,
     RandomWalkScheduler,
@@ -25,6 +26,7 @@ __all__ = [
     "CommLedger",
     "dense_message_bits",
     "qsgd_message_bits",
+    "AvailabilityAwareScheduler",
     "FedCHSScheduler",
     "LatencyAwareScheduler",
     "RandomWalkScheduler",

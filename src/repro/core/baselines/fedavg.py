@@ -9,6 +9,13 @@ structural comparison is visible), and the PS takes the D_n/D_A-weighted
 average.  A FedAvg round is one engine interaction with E=K: the whole round
 is a single fused jit call.  Client-held `LocalOpt` state persists across
 rounds without ever traversing the channel.
+
+Participation (repro.part): `FedAvgConfig.sampler` picks the reporting
+subset each round — dropped clients send nothing (zero uplink bits), keep
+their opt state frozen, and the D_n weights renormalize over the reporters.
+A round with zero reporters is skipped outright.  The default
+`FullParticipation`/None path is bit-identical to the pre-participation
+stack.
 """
 from __future__ import annotations
 
@@ -17,12 +24,15 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.comm.channels import Channel, DenseChannel, make_channel
 from repro.core.engine import RoundEngine, split_chain
 from repro.core.ledger import CommLedger
 from repro.core.simulation import FLTask, RunResult
 from repro.optim.local import LocalOpt
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
+from repro.part import Sampler, is_full_participation, participation_mask
 
 
 @dataclasses.dataclass
@@ -34,6 +44,8 @@ class FedAvgConfig:
     qsgd_levels: int | None = None
     channel: Channel | None = None  # explicit uplink channel
     local_opt: LocalOpt | None = None  # client-held optimizer (None = plain SGD)
+    sampler: Sampler | None = None     # per-round participation (repro.part);
+                                       # None / FullParticipation = seed-parity path
     track_events: bool = True          # False: bits only, no CommEvent stream
     seed: int = 0
     schedule: Schedule | None = None
@@ -62,27 +74,47 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
 
     rounds_log, acc_log, loss_log = [], [], []
     n = task.num_clients
+    full_part = is_full_participation(config.sampler)
+    all_clients = list(range(n))
     opt_state = engine.init_opt_state(params, n)  # client-held, cross-round
+    losses = jnp.full((1,), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
-        # all clients stage K batches; one interaction of E=K local steps
-        per_client = [task.sample_client_batches(i, K) for i in range(n)]
-        batch = jax.tree.map(lambda *leaves: jnp.stack(leaves)[None], *per_client)
-        subs = None
-        if channel.stochastic:
-            key, subs = split_chain(key, 1)
-        params, opt_state, losses = engine.cluster_round(
-            params, batch, gammas, lrs, subs, opt_state
+        participating = (
+            all_clients if full_part else config.sampler.participants(t, all_clients)
         )
+        if participating:
+            # all clients stage K batches (full width even under churn, so the
+            # data schedule is participation-independent); one E=K interaction
+            per_client = [task.sample_client_batches(i, K) for i in range(n)]
+            batch = jax.tree.map(lambda *leaves: jnp.stack(leaves)[None], *per_client)
+            subs = None
+            if channel.stochastic:
+                key, subs = split_chain(key, 1)
+            if full_part:
+                params, opt_state, losses = engine.cluster_round(
+                    params, batch, gammas, lrs, subs, opt_state
+                )
+            else:
+                # masked round: D_n weights renormalized over the participants,
+                # dropped clients contribute zero delta + frozen opt state
+                pmask = participation_mask(all_clients, participating)
+                w = task.global_weights() * pmask
+                gammas_r = jnp.asarray((w / w.sum()).astype(np.float32))
+                params, opt_state, losses = engine.cluster_round(
+                    params, batch, gammas_r, lrs, subs, opt_state, mask=pmask
+                )
 
-        if ledger.track_events:
-            for i in range(n):
-                ledger.record("ps_to_client", down_bits, round=t, phase=0,
-                              sender="ps", receiver=f"client:{i}")
-                ledger.record("client_to_ps", up_bits, round=t, phase=0,
-                              sender=f"client:{i}", receiver="ps")
-        else:
-            ledger.record("ps_to_client", down_bits, n)
-            ledger.record("client_to_ps", up_bits, n)
+            if ledger.track_events:
+                for i in participating:
+                    ledger.record("ps_to_client", down_bits, round=t, phase=0,
+                                  sender="ps", receiver=f"client:{i}")
+                    ledger.record("client_to_ps", up_bits, round=t, phase=0,
+                                  sender=f"client:{i}", receiver="ps")
+            else:
+                ledger.record("ps_to_client", down_bits, len(participating))
+                ledger.record("client_to_ps", up_bits, len(participating))
+        # else: nobody reported — the PS round is skipped outright (zero
+        # traffic, params unchanged)
         engine.end_round(ledger, t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:

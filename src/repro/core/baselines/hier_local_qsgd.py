@@ -16,6 +16,14 @@ The driver is generic over the task's `FedModel` / `DataSource` / `LocalOpt`:
 batches are opaque pytrees, and client-held optimizer state lives in one
 (M, n_max)-stacked pytree that persists across global rounds without ever
 traversing a channel.
+
+Participation (repro.part): `HierLocalQSGDConfig.sampler` picks each
+cluster's reporters per round.  Dropouts fold into the engine's existing
+padded/masked client slots (zero gamma, zero uplink bits, frozen opt
+state); a fully-dropped cluster's ES is a pass-through — zero delta, zero
+PS weight, no ES->PS upload, though it still receives the broadcast so it
+stays in sync.  The default `FullParticipation`/None path is bit-identical
+to the pre-participation stack.
 """
 from __future__ import annotations
 
@@ -31,6 +39,7 @@ from repro.core.ledger import CommLedger
 from repro.core.simulation import FLTask, RunResult
 from repro.optim.local import LocalOpt
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
+from repro.part import Sampler, is_full_participation, participation_mask
 
 
 @dataclasses.dataclass
@@ -44,6 +53,8 @@ class HierLocalQSGDConfig:
     channel: Channel | None = None     # explicit client->ES channel
     es_channel: Channel | None = None  # explicit ES->PS channel (defaults to channel)
     local_opt: LocalOpt | None = None  # client-held optimizer (None = plain SGD)
+    sampler: Sampler | None = None     # per-round participation (repro.part);
+                                       # None / FullParticipation = seed-parity path
     track_events: bool = True          # False: bits only, no CommEvent stream
     seed: int = 0
     schedule: Schedule | None = None
@@ -75,46 +86,86 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
     es_up_bits = es_channel.message_bits(d)
 
     M = task.num_clusters
-    N = task.num_clients  # sum of cluster sizes (clusters partition clients)
     gammas, mask = task.padded_cluster_weights()
     es_weights = jnp.asarray(
         np.array(task.cluster_sizes, dtype=np.float32) / sum(task.cluster_sizes)
     )
 
     n_max = mask.shape[1]
+    full_part = is_full_participation(config.sampler)
     opt_state = engine.init_opt_state(params, M, n_max)  # client-held, cross-round
     rounds_log, acc_log, loss_log = [], [], []
+    losses = jnp.full((1, 1), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
-        batch = task.sample_all_cluster_batches(K, E)  # leaves (J, M, n_max, E, B, ...)
-        subs = es_subs = None
-        if channel.stochastic:
-            key, flat = split_chain(key, interactions * M)
-            subs = flat.reshape(interactions, M, 2)
-        if es_channel.stochastic:
-            key, es_subs = split_chain(key, M)
-        params, opt_state, losses = engine.multi_cluster_round(
-            params, batch, gammas, mask, es_weights, lrs_grouped, subs, es_subs, opt_state
-        )
-
-        if ledger.track_events:
-            for j in range(interactions):
-                for m in range(M):
-                    es = f"es:{m}"
-                    for i in task.cluster_members[m]:
-                        ledger.record("es_to_client", down_bits, round=t, phase=j,
-                                      sender=es, receiver=f"client:{i}")
-                        ledger.record("client_to_es", up_bits, round=t, phase=j,
-                                      sender=f"client:{i}", receiver=es)
-            for m in range(M):
-                ledger.record("es_to_ps", es_up_bits, round=t, phase=interactions,
-                              sender=f"es:{m}", receiver="ps")
-                ledger.record("ps_to_es", down_bits, round=t, phase=interactions + 1,
-                              sender="ps", receiver=f"es:{m}")
+        if full_part:
+            parts = list(task.cluster_members)
+            gammas_t, mask_t, es_weights_t = gammas, mask, es_weights
+            any_participants = True
         else:
-            ledger.record("es_to_client", down_bits, interactions * N)
-            ledger.record("client_to_es", up_bits, interactions * N)
-            ledger.record("es_to_ps", es_up_bits, M)
-            ledger.record("ps_to_es", down_bits, M)
+            # per-cluster participant sets -> masked (M, n_max) slots; gamma
+            # rows renormalize over each cluster's reporters, ES weights over
+            # the clusters that trained at all.  A fully-dropped cluster's ES
+            # is a pass-through: zero delta, zero weight, no ES->PS upload.
+            parts = [config.sampler.participants(t, members)
+                     for members in task.cluster_members]
+            pmask = np.zeros((M, n_max), np.float32)
+            gnp = np.zeros((M, n_max), np.float32)
+            sizes = np.zeros(M, np.float32)
+            for m, members in enumerate(task.cluster_members):
+                row = participation_mask(members, parts[m])
+                pmask[m, : len(members)] = row
+                w = task.cluster_weights(m) * row
+                if w.sum() > 0:
+                    gnp[m, : len(members)] = w / w.sum()
+                sizes[m] = sum(task.client_sizes[i] for i in parts[m])
+            any_participants = sizes.sum() > 0
+            if any_participants:
+                gammas_t = jnp.asarray(gnp)
+                mask_t = jnp.asarray(pmask)
+                es_weights_t = jnp.asarray(sizes / sizes.sum())
+
+        if any_participants:
+            batch = task.sample_all_cluster_batches(K, E)  # (J, M, n_max, E, B, ...)
+            subs = es_subs = None
+            if channel.stochastic:
+                key, flat = split_chain(key, interactions * M)
+                subs = flat.reshape(interactions, M, 2)
+            if es_channel.stochastic:
+                key, es_subs = split_chain(key, M)
+            params, opt_state, losses = engine.multi_cluster_round(
+                params, batch, gammas_t, mask_t, es_weights_t, lrs_grouped,
+                subs, es_subs, opt_state
+            )
+            if not full_part:
+                # report loss over the clusters that actually trained (empty
+                # clusters read 0 from the engine's guarded average)
+                losses = losses[:, sizes > 0]
+
+            if ledger.track_events:
+                for j in range(interactions):
+                    for m in range(M):
+                        es = f"es:{m}"
+                        for i in parts[m]:
+                            ledger.record("es_to_client", down_bits, round=t, phase=j,
+                                          sender=es, receiver=f"client:{i}")
+                            ledger.record("client_to_es", up_bits, round=t, phase=j,
+                                          sender=f"client:{i}", receiver=es)
+                for m in range(M):
+                    if parts[m]:  # pass-through ESs upload nothing
+                        ledger.record("es_to_ps", es_up_bits, round=t,
+                                      phase=interactions,
+                                      sender=f"es:{m}", receiver="ps")
+                    # every ES still receives the broadcast (stays in sync)
+                    ledger.record("ps_to_es", down_bits, round=t,
+                                  phase=interactions + 1,
+                                  sender="ps", receiver=f"es:{m}")
+            else:
+                n_part = sum(len(p) for p in parts)
+                ledger.record("es_to_client", down_bits, interactions * n_part)
+                ledger.record("client_to_es", up_bits, interactions * n_part)
+                ledger.record("es_to_ps", es_up_bits, sum(1 for p in parts if p))
+                ledger.record("ps_to_es", down_bits, M)
+        # else: nobody anywhere this round — zero traffic, params unchanged
         engine.end_round(ledger, t)
 
         if t % config.eval_every == 0 or t == config.rounds - 1:

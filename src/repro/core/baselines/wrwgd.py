@@ -8,6 +8,14 @@ dataset-size weighting, the standard "weighted" variant, with uniform as an
 option). One client->client model hop per round, metered via the dense
 channel.  The driver is model-agnostic: the batch is an opaque pytree staged
 by the task's `DataSource`.
+
+Participation (repro.part): `WRWGDConfig.sampler` gates both ends of the
+walk — a visited client that is unavailable this round forwards the model
+without training (pass-through), and the next hop is drawn from the
+neighbors available *next* round (EdgeFLow-style: the walk skips dead
+edges; if every neighbor is down the draw falls back to the full neighbor
+set and the receiver passes through).  The default `FullParticipation`/None
+path is bit-identical to the pre-participation stack.
 """
 from __future__ import annotations
 
@@ -23,6 +31,7 @@ from repro.core.ledger import CommLedger
 from repro.core.simulation import FLTask, RunResult
 from repro.core.topology import make_topology
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
+from repro.part import Sampler, is_full_participation
 
 
 @dataclasses.dataclass
@@ -32,6 +41,8 @@ class WRWGDConfig:
     topology: str = "random_sparse"   # client-level graph, degree <= 3 (paper B.1)
     topology_seed: int = 0
     weighting: str = "data_size"      # or "uniform"
+    sampler: Sampler | None = None    # per-round participation (repro.part);
+                                      # None / FullParticipation = seed-parity path
     track_events: bool = True          # False: bits only, no CommEvent stream
     eval_every: int = 10
     bits_per_param: int = 32
@@ -57,14 +68,27 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
     hop_bits = channel.message_bits(d)
     gamma_one = jnp.ones((1,), jnp.float32)
 
+    full_part = is_full_participation(config.sampler)
     rounds_log, acc_log, loss_log = [], [], []
+    losses = jnp.full((1,), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
-        batch = jax.tree.map(
-            lambda a: a[:, None], task.sample_client_batches(current, K)
-        )  # (K, 1, B, ...): a walk step is a 1-client cluster running Eq.(5)
-        params, losses = engine.grad_round(params, batch, gamma_one, lrs)
+        trains = full_part or bool(config.sampler.participants(t, [current]))
+        if trains:
+            batch = jax.tree.map(
+                lambda a: a[:, None], task.sample_client_batches(current, K)
+            )  # (K, 1, B, ...): a walk step is a 1-client cluster running Eq.(5)
+            params, losses = engine.grad_round(params, batch, gamma_one, lrs)
+        # else: the visited client is down — pass-through, the model is
+        # forwarded untouched (and the round consumes no data or rng draws
+        # beyond the neighbor choice below)
 
         nbrs = list(topo.neighbors(current))
+        if not full_part:
+            # the walk skips edges that will be dead next round; when every
+            # neighbor is down the model still has to move, so fall back to
+            # the full set (the receiver then passes through)
+            live = config.sampler.participants(t + 1, nbrs)
+            nbrs = live or nbrs
         if config.weighting == "data_size":
             w = task.client_sizes[nbrs]
             w = w / w.sum()

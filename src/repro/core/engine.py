@@ -55,6 +55,18 @@ Round modes
   weight and their deltas are masked to zero before compression), plus the
   ES->PS compress/aggregate/broadcast step, all inside one jit.
 
+Participation
+-------------
+Per-round participation (repro.part) flows into the rounds as masks riding
+the same padded slots the vmapped HFL round already used: a dropped client's
+slot carries zero gamma weight, its delta is zeroed before compression, its
+loss is excluded from the average, and its `LocalOpt` state is frozen in
+place (`_freeze_masked`).  `cluster_round(mask=...)` routes to a separate
+compiled function so the default no-mask path stays byte-for-byte the
+pre-participation computation; `multi_cluster_round`'s existing mask now
+encodes padding AND dropouts, and a fully-dropped cluster degrades to a
+zero-delta pass-through (its ES forwards the broadcast model unchanged).
+
 Determinism
 -----------
 `split_chain(key, n)` reproduces n sequential `key, sub = split(key)`
@@ -176,6 +188,54 @@ def _delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
     return _jit_round(round_fn)
 
 
+def _freeze_masked(mask: jax.Array, new_state: PyTree, old_state: PyTree) -> PyTree:
+    """Keep masked-out clients' opt state frozen in place: slots with
+    mask == 0 leave the round carrying exactly the state they entered with
+    (element-wise select, so kept slots are bit-identical to the unmasked
+    update)."""
+    return jax.tree.map(
+        lambda ns, os: jnp.where(mask.reshape((-1,) + (1,) * (ns.ndim - 1)) > 0, ns, os),
+        new_state,
+        old_state,
+    )
+
+
+@functools.cache
+def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
+    """Delta mode with a per-client participation mask (n,): masked-out
+    clients contribute zero delta (their slot is zeroed before compression),
+    are excluded from the loss average, and keep their `LocalOpt` state
+    frozen in place.  `gammas` must already be renormalized over the
+    participating set (zero on masked slots).  Otherwise identical to
+    `_delta_round_fn`; the unmasked function stays untouched so the default
+    full-participation path is bit-identical to the pre-participation stack.
+    """
+    multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
+
+    def round_fn(params, opt_state, batch, gammas, mask, lrs, subs):
+        def interaction(carry, inp):
+            p, s = carry
+            b, lr, sub = inp
+            new_p, new_s, losses = multi_local(p, s, b, lr)
+            new_s = _freeze_masked(mask, new_s, s)
+            deltas = jax.tree.map(
+                lambda a, base: (a - base[None]) * mask.reshape((-1,) + (1,) * (a.ndim - 1)),
+                new_p,
+                p,
+            )
+            deltas = compress_uplinks(channel, deltas, sub)
+            agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+            loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+            return (tree_add(p, agg), new_s), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            interaction, (params, opt_state), (batch, lrs, subs)
+        )
+        return params, opt_state, losses
+
+    return _jit_round(round_fn)
+
+
 @functools.cache
 def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
     """One 3-tier HFL global round, vmapped over all M clusters at once.
@@ -198,6 +258,10 @@ def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt:
 
             def one_cluster(p_m, s_m, b_m, g_m, msk_m, sub_m):
                 new_p, new_s, losses = multi_local(p_m, s_m, b_m, lr)
+                # masked slots (padding OR dropped-out clients) keep their opt
+                # state frozen; for real participating slots the select is a
+                # bit-exact identity, so default-path parity holds
+                new_s = _freeze_masked(msk_m, new_s, s_m)
                 deltas = jax.tree.map(
                     lambda a, base: (a - base[None]) * msk_m.reshape((-1,) + (1,) * (a.ndim - 1)),
                     new_p,
@@ -205,7 +269,9 @@ def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt:
                 )
                 deltas = compress_uplinks(channel, deltas, sub_m)
                 agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", g_m, dl), deltas)
-                loss = jnp.sum(losses * msk_m) / jnp.sum(msk_m)
+                # a fully-dropped cluster has sum(mask) == 0: its loss reads 0
+                # and its params stay at the broadcast model (zero deltas)
+                loss = jnp.sum(losses * msk_m) / jnp.maximum(jnp.sum(msk_m), 1.0)
                 return tree_add(p_m, agg), new_s, loss
 
             cp, s, losses = jax.vmap(one_cluster)(cp, s, b, gammas, mask, sub)
@@ -265,15 +331,24 @@ class RoundEngine:
     def grad_round(self, params, batch, gammas, lrs):
         return _grad_round_fn(self.model)(params, batch, gammas, lrs)
 
-    def cluster_round(self, params, batch, gammas, lrs, subs=None, opt_state=None):
+    def cluster_round(self, params, batch, gammas, lrs, subs=None, opt_state=None,
+                      mask=None):
+        """One delta-mode round.  `mask` (n,) is the optional per-client
+        participation mask (repro.part): masked-out clients contribute zero
+        delta, are excluded from the loss, and keep their opt state frozen.
+        With `mask=None` the compiled function is the exact pre-participation
+        round — the bit-identical full-participation path."""
         J = jax.tree.leaves(batch)[0].shape[0]
         n = jax.tree.leaves(batch)[0].shape[1]
         if subs is None:
             subs = dummy_subs(J)
         if opt_state is None:
             opt_state = self.init_opt_state(params, n)
-        fn = _delta_round_fn(self.model, self.channel, self.local_opt)
-        return fn(params, opt_state, batch, gammas, lrs, subs)
+        if mask is None:
+            fn = _delta_round_fn(self.model, self.channel, self.local_opt)
+            return fn(params, opt_state, batch, gammas, lrs, subs)
+        fn = _masked_delta_round_fn(self.model, self.channel, self.local_opt)
+        return fn(params, opt_state, batch, gammas, jnp.asarray(mask), lrs, subs)
 
     def multi_cluster_round(
         self, params, batch, gammas, mask, es_weights, lrs,

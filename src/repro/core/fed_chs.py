@@ -25,6 +25,17 @@ phase, sender, receiver) so `repro.netsim` can replay the run through link
 models and answer the wall-clock question §3.2's bit counting cannot:
 whether the serial ES->ES chain beats the baselines' parallel-but-PS-bound
 uploads.
+
+Participation (repro.part): `FedCHSConfig.sampler` decides which of the
+active cluster's clients report each round.  Participants run the masked
+engine round (renormalized gammas, frozen opt state for everyone else); a
+cluster whose clients are ALL unavailable degrades to a pass-through hop —
+the ES forwards the model over the ES->ES pass without training, the
+HiFlash-style staleness answer to dead clusters.  With
+`availability_scheduler=True` the 2-step rule itself skips unreachable
+neighbors (`AvailabilityAwareScheduler`).  The default
+`FullParticipation`/None path is bit-identical to the pre-participation
+stack.
 """
 from __future__ import annotations
 
@@ -38,11 +49,16 @@ import numpy as np
 from repro.comm.channels import Channel, DenseChannel, make_channel
 from repro.core.engine import RoundEngine, split_chain
 from repro.core.ledger import CommLedger
-from repro.core.scheduler import FedCHSScheduler, LatencyAwareScheduler
+from repro.core.scheduler import (
+    AvailabilityAwareScheduler,
+    FedCHSScheduler,
+    LatencyAwareScheduler,
+)
 from repro.core.simulation import FLTask, RunResult
 from repro.core.topology import make_topology
 from repro.optim.local import LocalOpt, PlainSGD
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
+from repro.part import Sampler, is_full_participation, participation_mask
 
 
 @dataclasses.dataclass
@@ -65,6 +81,12 @@ class FedCHSConfig:
     link_delay: Callable[[int, int], float] | None = None
                                            # ES-pair delay (seconds); switches the
                                            # scheduler to LatencyAwareScheduler
+    sampler: Sampler | None = None         # per-round participation (repro.part);
+                                           # None / FullParticipation = the exact
+                                           # seed-parity pre-participation path
+    availability_scheduler: bool = False   # with a sampler: 2-step rule over
+                                           # reachable neighbors only
+                                           # (AvailabilityAwareScheduler)
     track_events: bool = True              # False: bits only, no CommEvent stream
                                            # (saves memory at --full scale)
     seed: int = 0
@@ -95,7 +117,17 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         if config.initial_cluster is None
         else config.initial_cluster
     )
-    if config.link_delay is not None:
+    full_part = is_full_participation(config.sampler)
+    if config.availability_scheduler:
+        assert config.sampler is not None, "availability_scheduler needs a sampler"
+
+        def reachable(m_: int, r: int) -> bool:
+            return len(config.sampler.participants(r, task.cluster_members[m_])) > 0
+
+        scheduler = AvailabilityAwareScheduler(
+            topo, task.cluster_sizes, reachable, initial=m0
+        )
+    elif config.link_delay is not None:
         scheduler = LatencyAwareScheduler(
             topo, task.cluster_sizes, config.link_delay, initial=m0
         )
@@ -118,9 +150,11 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
 
     # literal Eq. (5): E=1 dense plain-SGD interactions are gradient uplinks
     # fused into the per-step gamma-weighted SGD scan (explicit PlainSGD is
-    # the same mathematical step, so it takes the same path as the default)
+    # the same mathematical step, so it takes the same path as the default).
+    # A non-full sampler forces delta mode: dropouts need the masked round.
     grad_mode = (
-        E == 1
+        full_part
+        and E == 1
         and isinstance(channel, DenseChannel)
         and (config.local_opt is None or isinstance(config.local_opt, PlainSGD))
     )
@@ -128,14 +162,19 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
 
     rounds_log, acc_log, loss_log = [], [], []
     m = scheduler.state.current
+    losses = jnp.full((1,), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
         members = task.cluster_members[m]
-        gammas = jnp.asarray(task.cluster_weights(m))
+        participating = (
+            members if full_part else config.sampler.participants(t, members)
+        )
 
         if grad_mode:
+            gammas = jnp.asarray(task.cluster_weights(m))
             batch = task.sample_cluster_batches(m, K)
             params, losses = engine.grad_round(params, batch, gammas, lrs_flat)
-        else:
+        elif full_part:
+            gammas = jnp.asarray(task.cluster_weights(m))
             batch = task.sample_round_batches(m, K, E)
             subs = None
             if channel.stochastic:
@@ -145,21 +184,46 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
             params, opt_states[m], losses = engine.cluster_round(
                 params, batch, gammas, lrs_grouped, subs, opt_states[m]
             )
+        elif participating:
+            # masked round: gammas renormalized over the participating set;
+            # batches are staged at full cluster width so the per-client data
+            # schedule is independent of churn (dropped clients' draws are
+            # consumed but masked out — their opt state stays frozen)
+            pmask = participation_mask(members, participating)
+            w = task.cluster_weights(m) * pmask
+            gammas = jnp.asarray((w / w.sum()).astype(np.float32))
+            batch = task.sample_round_batches(m, K, E)
+            subs = None
+            if channel.stochastic:
+                key, subs = split_chain(key, interactions)
+            if m not in opt_states:
+                opt_states[m] = engine.init_opt_state(params, len(members))
+            params, opt_states[m], losses = engine.cluster_round(
+                params, batch, gammas, lrs_grouped, subs, opt_states[m],
+                mask=pmask,
+            )
+        # else: the whole cluster is unavailable — the ES becomes a pass-
+        # through hop: no training, no client traffic, the model is simply
+        # forwarded on the ES->ES pass below (losses keeps its last value)
 
-        # comm accounting: one broadcast + one upload per client per
-        # interaction, metered per message so netsim sees the phase barriers
-        # (with events off, the aggregate-identical single records suffice)
+        # comm accounting: one broadcast + one upload per *participating*
+        # client per interaction, metered per message so netsim sees the
+        # phase barriers (with events off, the aggregate-identical single
+        # records suffice).  Dropped clients cost zero uplink bits.
         es, prev_m = f"es:{m}", m
-        if ledger.track_events:
-            for j in range(interactions):
-                for i in members:
-                    ledger.record("es_to_client", down_bits, round=t, phase=j,
-                                  sender=es, receiver=f"client:{i}")
-                    ledger.record("client_to_es", up_bits, round=t, phase=j,
-                                  sender=f"client:{i}", receiver=es)
-        else:
-            ledger.record("es_to_client", down_bits, interactions * len(members))
-            ledger.record("client_to_es", up_bits, interactions * len(members))
+        if participating:
+            if ledger.track_events:
+                for j in range(interactions):
+                    for i in participating:
+                        ledger.record("es_to_client", down_bits, round=t, phase=j,
+                                      sender=es, receiver=f"client:{i}")
+                        ledger.record("client_to_es", up_bits, round=t, phase=j,
+                                      sender=f"client:{i}", receiver=es)
+            else:
+                ledger.record("es_to_client", down_bits,
+                              interactions * len(participating))
+                ledger.record("client_to_es", up_bits,
+                              interactions * len(participating))
 
         # next passing cluster (2-step rule) + one ES->ES model hop.
         # Under a dynamic network the ES sees *this round's* visibility graph

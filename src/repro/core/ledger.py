@@ -119,6 +119,23 @@ class CommLedger:
             evs.sort(key=lambda e: (e.phase, e.hop, e.sender, e.receiver))
         return dict(grouped)
 
+    def round_bits(self, hop: str | None = None) -> dict[int, int]:
+        """Per-round bit totals from the event stream (optionally one hop) —
+        the closed-form participation checks read this: under a sampler,
+        a round's uplink bits are exactly |participants| * bits_per_message.
+        Requires `track_events`."""
+        out: dict[int, int] = defaultdict(int)
+        for ev in self.events:
+            if hop is None or ev.hop == hop:
+                out[ev.round] += ev.n_bits
+        return dict(out)
+
+    def round_senders(self, round_idx: int, hop: str) -> set[str]:
+        """Distinct senders over `hop` in one round (requires `track_events`).
+        Under a participation sampler this is exactly the sampled set."""
+        return {e.sender for e in self.events
+                if e.round == round_idx and e.hop == hop}
+
     def bits_until(self, predicate_round: int) -> int:
         """Total bits recorded at the first snapshot with round >= predicate_round."""
         for r, b in self.history:

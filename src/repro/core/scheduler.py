@@ -48,10 +48,15 @@ class FedCHSScheduler:
         assert topology.num_nodes == self.topology.num_nodes
         self.topology = topology
 
+    def _candidate_pool(self, nbrs: list[int]) -> list[int]:
+        """Neighbors eligible for the 2-step rule (hook for availability-aware
+        variants). The base rule considers every neighbor."""
+        return nbrs
+
     def peek(self) -> int:
         """Apply the 2-step rule without mutating state."""
         st = self.state
-        nbrs = self.topology.neighbors(st.current)
+        nbrs = self._candidate_pool(list(self.topology.neighbors(st.current)))
         counts = st.visit_counts[list(nbrs)]
         least = counts.min()
         candidates = [m for m, c in zip(nbrs, counts) if c == least]
@@ -113,6 +118,38 @@ class LatencyAwareScheduler(FedCHSScheduler):
         if len(fastest) == 1:
             return fastest[0]
         return super()._tie_break(current, fastest)
+
+
+class AvailabilityAwareScheduler(FedCHSScheduler):
+    """2-step rule over the *reachable* neighbors only.
+
+    A cluster is reachable for a round when it will have at least one
+    participating client (`reachable(cluster, round_idx) -> bool`, typically
+    closed over a `repro.part` sampler and the task's cluster membership).
+    Step 1/Step 2 of the paper's rule then run over the reachable subset —
+    the EdgeFLow-style sequential migration that skips unavailable edges
+    entirely.  When NO neighbor is reachable the rule falls back to the full
+    neighbor set: the model still has to move, and the receiving ES simply
+    becomes a pass-through hop that round (forwarded model, no training).
+
+    Round accounting: the scheduler picks m(t+1) while round t = `state.step`
+    is finishing, so reachability is probed at ``state.step + 1``.
+    """
+
+    def __init__(
+        self,
+        topology,
+        cluster_sizes: list[int],
+        reachable: Callable[[int, int], bool],
+        initial: int = 0,
+    ):
+        super().__init__(topology, cluster_sizes, initial=initial)
+        self.reachable = reachable
+
+    def _candidate_pool(self, nbrs: list[int]) -> list[int]:
+        next_round = self.state.step + 1
+        live = [m for m in nbrs if self.reachable(m, next_round)]
+        return live or nbrs
 
 
 class RandomWalkScheduler:

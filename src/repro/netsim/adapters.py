@@ -23,6 +23,24 @@ deployment would know statically: K, the batch size, and the model size.
 The same recorded run can be re-timed under any number of `NetworkModel`s —
 the straggler/bandwidth sweeps in benchmarks/fig_time_to_acc.py re-use one
 training run per algorithm and only re-run this (cheap, host-side) replay.
+
+Deadlines (`deadline_s`, per interaction): real aggregators do not wait
+forever — a client whose broadcast -> compute -> upload chain exceeds the
+reporting deadline is DROPPED: its upload never happens (those bits are
+saved, tallied in `Timeline.dropped_bits`), but the aggregator still waits
+out the full deadline before closing the phase (wall-clock wasted; the
+client abandons its partial chain, which stays in the timeline untracked
+and resource-free).  This is a timing-layer re-interpretation of a recorded
+run — the training trajectory is unchanged, which keeps the replay cheap;
+pair it with a `repro.part` sampler at training time when the dropouts
+should also affect learning.  The drop decision evaluates chains at the
+*attempted* fan-in (conservative under `shared_ingress`); surviving uploads
+are then charged the post-drop fan-in.  Pass-through
+rounds (a `repro.part` run whose active cluster was empty) carry no
+wireless phases — the round is just its ES->ES model hop.  WRWGD's walk has
+no aggregation phase, so deadlines don't apply to it (a pass-through walk
+round is still charged its local compute: the event stream alone cannot
+distinguish it).
 """
 from __future__ import annotations
 
@@ -38,13 +56,19 @@ _WIRELESS_DOWN = ("es_to_client", "ps_to_client")
 
 
 class _Builder:
-    def __init__(self, net: NetworkModel):
+    def __init__(self, net: NetworkModel, deadline_s: float | None = None):
         self.net = net
+        self.deadline_s = deadline_s
         self.jobs: list[Job] = []
+        self.dropped: dict[int, set[str]] = defaultdict(set)
+        self.dropped_bits: int = 0
 
-    def transfer(self, ev, deps, label="", fan_in=1) -> int:
-        dur = self.net.transfer_time(ev.hop, ev.sender, ev.receiver, ev.n_bits,
-                                     ev.round, ev.phase, fan_in)
+    def transfer_duration(self, ev, fan_in=1) -> float:
+        return self.net.transfer_time(ev.hop, ev.sender, ev.receiver, ev.n_bits,
+                                      ev.round, ev.phase, fan_in)
+
+    def transfer(self, ev, deps, label="", fan_in=1, duration=None) -> int:
+        dur = self.transfer_duration(ev, fan_in) if duration is None else duration
         return self._add("transfer", dur, f"{ev.sender}->{ev.receiver}", deps,
                          ev.round, label or ev.hop)
 
@@ -55,9 +79,11 @@ class _Builder:
     def barrier(self, deps, round_idx) -> int:
         return self._add("barrier", 0.0, None, deps, round_idx, "barrier")
 
-    def _add(self, kind, duration, resource, deps, round_idx, label) -> int:
+    def _add(self, kind, duration, resource, deps, round_idx, label,
+             tracked=True) -> int:
         jid = len(self.jobs)
-        self.jobs.append(Job(jid, kind, duration, resource, tuple(deps), round_idx, label))
+        self.jobs.append(Job(jid, kind, duration, resource, tuple(deps), round_idx,
+                             label, tracked))
         return jid
 
 
@@ -81,13 +107,44 @@ def _interaction(b: _Builder, phase_events, step_flops, entry_deps) -> list[int]
     assert len(downs) == len(down_events) and len(ups) == len(up_events), \
         "duplicate per-client messages in one interaction phase"
     assert downs.keys() == ups.keys(), "unpaired broadcast/upload in interaction"
+    # pass 1 — deadline triage: a client whose chain would overrun the
+    # reporting deadline is dropped.  The decision uses the *attempted*
+    # fan-in (everyone starts uploading), which is conservative under
+    # shared_ingress.
+    dropped = set()
+    if b.deadline_s is not None:
+        for client, down in downs.items():
+            chain = (b.transfer_duration(down)
+                     + b.net.compute_time(client, step_flops, down.round)
+                     + b.transfer_duration(ups[client], fan_in=len(ups)))
+            if chain > b.deadline_s:
+                dropped.add(client)
+    # pass 2 — build jobs.  A dropped client abandons the round's work at the
+    # deadline: its partial download/compute stay in the timeline (untracked,
+    # for inspection) but hold NO resources — so the round closes at
+    # max(kept uploads, deadline), and no later phase ever queues behind
+    # abandoned work (which keeps pass 1's chains-start-at-phase-entry
+    # arithmetic exact).  Surviving uploads split the aggregator's bandwidth
+    # over the post-drop fan-in.
+    kept_fan_in = len(ups) - len(dropped)
     up_jobs = []
     for client, down in sorted(downs.items()):
+        if client in dropped:
+            d = b._add("transfer", b.transfer_duration(down), None, entry_deps,
+                       down.round, down.hop, tracked=False)
+            b._add("compute", b.net.compute_time(client, step_flops, down.round),
+                   None, [d], down.round, "local_sgd", tracked=False)
+            # the upload never happens: bits saved, deadline waited out below
+            b.dropped[down.round].add(client)
+            b.dropped_bits += ups[client].n_bits
+            continue
         d = b.transfer(down, entry_deps)
         c = b.compute(client, step_flops, down.round, [d])
-        # the phase's uploads converge on one aggregator; under
-        # shared_ingress they split its bandwidth
-        up_jobs.append(b.transfer(ups[client], [c], fan_in=len(ups)))
+        up_jobs.append(b.transfer(ups[client], [c], fan_in=kept_fan_in))
+    if dropped:
+        # the aggregator closes the phase no earlier than the full deadline
+        up_jobs.append(b._add("deadline", b.deadline_s, None, entry_deps,
+                              phase_events[0].round, "deadline"))
     return up_jobs
 
 
@@ -105,9 +162,10 @@ def _steps_per_interaction(local_steps: int, n_phases: int) -> int:
     return local_steps // n_phases
 
 
-def build_jobs(result, net: NetworkModel, *, local_steps: int, batch_size: int,
-               num_params: int) -> list[Job]:
-    """Compile a run's event stream into the algorithm's job DAG."""
+def _compile(result, net: NetworkModel, *, local_steps: int, batch_size: int,
+             num_params: int, deadline_s: float | None = None) -> _Builder:
+    """Compile a run's event stream into the algorithm's job DAG; the
+    returned builder also carries deadline-dropout bookkeeping."""
     builders = {
         "fed_chs": _build_sequential,
         "wrwgd": _build_walk,
@@ -117,19 +175,33 @@ def build_jobs(result, net: NetworkModel, *, local_steps: int, batch_size: int,
     events = result.ledger.round_events()
     assert events, "run has no structured events (ledger.track_events off?)"
     flops1 = sgd_step_flops(num_params, batch_size)
-    return builders[result.name](_Builder(net), events, local_steps, flops1)
+    if deadline_s is None:
+        deadline_s = net.deadline_s
+    b = _Builder(net, deadline_s)
+    builders[result.name](b, events, local_steps, flops1)
+    return b
+
+
+def build_jobs(result, net: NetworkModel, *, local_steps: int, batch_size: int,
+               num_params: int, deadline_s: float | None = None) -> list[Job]:
+    """Compile a run's event stream into the algorithm's job DAG."""
+    return _compile(result, net, local_steps=local_steps, batch_size=batch_size,
+                    num_params=num_params, deadline_s=deadline_s).jobs
 
 
 def _build_sequential(b, events, local_steps, flops1):
     """Fed-CHS: interaction barriers inside the active cluster, then the
-    round's single ES->ES model pass gates everything that follows."""
+    round's single ES->ES model pass gates everything that follows.  A
+    pass-through round (whole cluster unavailable: no wireless phases in the
+    stream) is just the forwarded-model hop."""
     prev: list[int] = []
     for t in sorted(events):
         phases, rest = _in_cluster_phases(events[t])
-        step_flops = _steps_per_interaction(local_steps, len(phases)) * flops1
-        for phase_events in phases:
-            ups = _interaction(b, phase_events, step_flops, prev)
-            prev = [b.barrier(ups, t)]
+        if phases:
+            step_flops = _steps_per_interaction(local_steps, len(phases)) * flops1
+            for phase_events in phases:
+                ups = _interaction(b, phase_events, step_flops, prev)
+                prev = [b.barrier(ups, t)]
         (hop,) = [e for e in rest if e.hop == "es_to_es"]
         prev = [b.transfer(hop, prev)]
     return b.jobs
@@ -187,16 +259,26 @@ def _build_walk(b, events, local_steps, flops1):
 
 
 def timeline_for(result, net: NetworkModel, *, local_steps: int, batch_size: int,
-                 num_params: int) -> Timeline:
-    """Wall-clock timeline of a recorded run under `net`."""
-    return simulate(build_jobs(result, net, local_steps=local_steps,
-                               batch_size=batch_size, num_params=num_params))
+                 num_params: int, deadline_s: float | None = None) -> Timeline:
+    """Wall-clock timeline of a recorded run under `net`.
+
+    `deadline_s` (default: `net.deadline_s`) switches on deadline dropouts;
+    the timeline then reports who was dropped when (`Timeline.dropped`) and
+    the uplink bits saved (`Timeline.dropped_bits`)."""
+    b = _compile(result, net, local_steps=local_steps, batch_size=batch_size,
+                 num_params=num_params, deadline_s=deadline_s)
+    tl = simulate(b.jobs)
+    tl.dropped = {r: frozenset(s) for r, s in b.dropped.items()}
+    tl.dropped_bits = b.dropped_bits
+    return tl
 
 
-def simulate_run(task, result, net: NetworkModel, *, local_steps: int) -> Timeline:
+def simulate_run(task, result, net: NetworkModel, *, local_steps: int,
+                 deadline_s: float | None = None) -> Timeline:
     """`timeline_for` with batch size / model size pulled from the task."""
     return timeline_for(result, net, local_steps=local_steps,
-                        batch_size=task.batch_size, num_params=task.num_params())
+                        batch_size=task.batch_size, num_params=task.num_params(),
+                        deadline_s=deadline_s)
 
 
 def time_to_accuracy(result, timeline: Timeline, gamma: float) -> float | None:

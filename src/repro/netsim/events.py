@@ -40,16 +40,21 @@ class Job:
 
     `resource` serializes execution (node name for compute, "a->b" for a
     directed link, None for zero-cost barriers); `deps` are job ids that
-    must finish first.
+    must finish first.  `tracked=False` marks work the protocol has
+    abandoned (a deadline-dropped client's partial download/compute chain):
+    it appears in the timeline for inspection but counts toward neither
+    round completion nor the makespan (the adapters also give such jobs no
+    resource, so abandoned work never queues ahead of live work).
     """
 
     job_id: int
-    kind: str                      # "compute" | "transfer" | "barrier"
+    kind: str                      # "compute" | "transfer" | "barrier" | "deadline"
     duration: float
     resource: str | None = None
     deps: tuple[int, ...] = ()
     round: int = 0
     label: str = ""
+    tracked: bool = True
 
 
 class JobTimes(dict):
@@ -58,11 +63,19 @@ class JobTimes(dict):
 
 @dataclasses.dataclass
 class Timeline:
-    """Resolved wall-clock schedule of one simulated run."""
+    """Resolved wall-clock schedule of one simulated run.
+
+    `dropped` / `dropped_bits` are filled by the adapters when a per-round
+    reporting deadline is in force (see `adapters.timeline_for`): clients
+    whose broadcast->compute->upload chain missed the deadline, and the
+    uplink bits their never-sent uploads would have cost.
+    """
 
     job_times: JobTimes
     round_end: dict[int, float]    # round -> completion time of its last job
     makespan: float
+    dropped: dict[int, frozenset] = dataclasses.field(default_factory=dict)
+    dropped_bits: int = 0
 
     def round_duration(self, round_idx: int) -> float:
         """Wall-clock between the end of the previous round and this one."""
@@ -112,7 +125,8 @@ def simulate(jobs: Sequence[Job]) -> Timeline:
         if job.resource is not None:
             resource_free[job.resource] = finish
         times[jid] = (start, finish)
-        round_end[job.round] = max(round_end.get(job.round, 0.0), finish)
+        if job.tracked:
+            round_end[job.round] = max(round_end.get(job.round, 0.0), finish)
         for child in children[jid]:
             ready_time[child] = max(ready_time[child], finish)
             missing[child] -= 1
@@ -120,5 +134,5 @@ def simulate(jobs: Sequence[Job]) -> Timeline:
                 heapq.heappush(heap, (ready_time[child], child))
 
     assert len(times) == len(jobs), "dependency cycle: not all jobs ran"
-    makespan = max((f for _, f in times.values()), default=0.0)
+    makespan = max((times[j.job_id][1] for j in jobs if j.tracked), default=0.0)
     return Timeline(times, round_end, makespan)

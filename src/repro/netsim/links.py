@@ -126,6 +126,11 @@ class NetworkModel:
     shared_ingress: bool = False       # split receiver bandwidth across fan-in
     dynamics: Callable | None = None   # DynamicTopology (round -> Topology)
     degraded_frac: float = 0.1         # bandwidth multiplier on flaky ES links
+    deadline_s: float | None = None    # per-interaction reporting deadline: a
+                                       # client whose broadcast->compute->upload
+                                       # chain exceeds it is dropped by the
+                                       # aggregator (bits saved, wall-clock
+                                       # wasted — see netsim/adapters.py)
     _node_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # -- per-node models ---------------------------------------------------
@@ -216,6 +221,16 @@ class NetworkModel:
             t *= 1.0 + link.jitter * u
         return t
 
+    def nominal_chain_s(self, link_class: str, n_bits: float, flops: float) -> float:
+        """A nominal (no-straggler, no-jitter, baseline-speed) client chain:
+        broadcast -> `flops` of local compute -> upload, both transfers of
+        `n_bits` over `link_class` ("wireless" / "wan" / "backhaul").  The
+        reference point for setting reporting deadlines — heterogeneity stays
+        within a small multiple of it, stragglers blow through it (see the
+        deadline semantics in netsim/adapters.py)."""
+        link: LinkModel = getattr(self, link_class)
+        return 2 * link.base_time(n_bits) + flops / self.compute.flops_per_second
+
     def backhaul_delay(self, a: int, b: int, n_bits: float) -> float:
         """Expected ES->ES model-pass delay — the `LatencyAwareScheduler`
         tie-break cost (no jitter, no round-specific degradation: the
@@ -242,6 +257,7 @@ def edge_cloud_network(
     backhaul_spread: float = 0.0,
     jitter: float = 0.0,
     dynamics: Callable | None = None,
+    deadline_s: float | None = None,
 ) -> NetworkModel:
     """The canonical deployment the paper sketches: clients on access
     wireless, ESs on a metro backhaul, the (baselines-only) PS across a WAN."""
@@ -256,4 +272,5 @@ def edge_cloud_network(
         straggler_slowdown=straggler_slowdown,
         backhaul_spread=backhaul_spread,
         dynamics=dynamics,
+        deadline_s=deadline_s,
     )

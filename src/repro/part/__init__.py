@@ -1,0 +1,29 @@
+# repro.part — the participation subsystem: who is up (availability traces),
+# who reports (samplers), and the helpers that turn a participant set into
+# the engine's mask slots.  Deadline-induced dropouts live in
+# repro.netsim.adapters; pass-through scheduling in repro.core.scheduler.
+from repro.part.traces import (
+    AlwaysOn,
+    AvailabilityAware,
+    AvailabilityTrace,
+    BernoulliTrace,
+    FullParticipation,
+    GilbertElliottTrace,
+    Sampler,
+    UniformK,
+    is_full_participation,
+    participation_mask,
+)
+
+__all__ = [
+    "AvailabilityTrace",
+    "AlwaysOn",
+    "BernoulliTrace",
+    "GilbertElliottTrace",
+    "Sampler",
+    "FullParticipation",
+    "AvailabilityAware",
+    "UniformK",
+    "is_full_participation",
+    "participation_mask",
+]

@@ -1,4 +1,40 @@
+import os
+
 import pytest
+
+# test files whose contents are hypothesis-guarded (module-level
+# `pytest.importorskip("hypothesis")` or try-import guards): without
+# hypothesis they skip/vanish SILENTLY, so CI passes --require-hypothesis to
+# turn that silence into a hard failure
+HYPOTHESIS_GUARDED = ("test_property.py", "test_property_moe.py",
+                      "test_partition.py")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--require-hypothesis", action="store_true", default=False,
+        help="fail (instead of silently skipping) when hypothesis is missing "
+             "or the hypothesis-guarded property tests collected nothing",
+    )
+
+
+def pytest_collection_finish(session):
+    if not session.config.getoption("--require-hypothesis"):
+        return
+    try:
+        import hypothesis  # noqa: F401
+    except ImportError:
+        raise pytest.UsageError(
+            "--require-hypothesis: hypothesis is not importable — the "
+            "property tests in tests/test_property*.py / test_partition.py "
+            "would silently skip. Install requirements-dev.txt.")
+    collected = {os.path.basename(item.nodeid.split("::")[0])
+                 for item in session.items}
+    missing = [f for f in HYPOTHESIS_GUARDED if f not in collected]
+    if missing:
+        raise pytest.UsageError(
+            f"--require-hypothesis: no tests collected from {missing} — "
+            "the property suites did not run.")
 
 
 @pytest.fixture(scope="session")

@@ -299,3 +299,133 @@ def test_hier_parity_with_ragged_clusters():
     _assert_trajectories_match(
         ref_hier_local_qsgd(task, cfg), run_hier_local_qsgd(task, cfg)
     )
+
+
+# --------------------------------------------------------------------------
+# participation parity: FullParticipation must be *bit-identical* to the
+# no-sampler path (params, losses, ledger totals) for all four drivers
+# --------------------------------------------------------------------------
+
+from repro.part import FullParticipation  # noqa: E402
+
+
+def _assert_bit_identical(a, b):
+    assert a.rounds == b.rounds
+    assert a.train_loss == b.train_loss      # float() of the same arrays
+    assert a.test_acc == b.test_acc
+    assert a.ledger.bits == b.ledger.bits
+    assert a.ledger.messages == b.ledger.messages
+    assert a.ledger.events == b.ledger.events
+    for la, lb in zip(jax.tree.leaves(a.final_params), jax.tree.leaves(b.final_params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _full_participation_cases(seed=0, qsgd=None):
+    return [
+        (run_fed_chs, FedCHSConfig, dict(rounds=3, local_steps=4, local_epochs=2,
+                                         eval_every=1, seed=seed, qsgd_levels=qsgd)),
+        (run_fedavg, FedAvgConfig, dict(rounds=2, local_steps=3, eval_every=1,
+                                        seed=seed, qsgd_levels=qsgd)),
+        (run_wrwgd, WRWGDConfig, dict(rounds=4, local_steps=3, eval_every=2,
+                                      seed=seed)),
+        (run_hier_local_qsgd, HierLocalQSGDConfig,
+         dict(rounds=2, local_steps=4, local_epochs=2, eval_every=1, seed=seed,
+              qsgd_levels=qsgd)),
+    ]
+
+
+def _assert_full_participation_parity(task, seed=0, qsgd=None):
+    for run, cfg_cls, kwargs in _full_participation_cases(seed, qsgd):
+        base = run(task, cfg_cls(**kwargs))
+        sampled = run(task, cfg_cls(**kwargs, sampler=FullParticipation()))
+        _assert_bit_identical(base, sampled)
+
+
+def test_full_participation_is_bit_identical_all_drivers(small_task):
+    _assert_full_participation_parity(small_task, seed=0, qsgd=None)
+
+
+def test_full_participation_is_bit_identical_with_qsgd(small_task):
+    _assert_full_participation_parity(small_task, seed=3, qsgd=8)
+
+
+# hypothesis-randomized versions (cluster shapes x channels x seeds); the
+# deterministic cases above always run, so the parity contract is pinned even
+# where hypothesis is absent — CI passes --require-hypothesis to guarantee
+# these actually execute there (see tests/conftest.py)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    import functools
+
+    # drawn from small fixed menus (and tasks cached per shape, sharing one
+    # model instance) so jit re-compiles stay bounded across examples
+    _SHAPES = (
+        ((0, 1, 2), (3, 4), (5, 6)),          # ragged 3/2/2
+        ((0, 1), (2, 3), (4, 5), (6,)),       # ragged with a singleton
+        ((0, 1, 2, 3), (4, 5, 6)),            # two fat clusters
+    )
+    _CHANNELS = [None, 8, 16]  # qsgd_levels (None = dense)
+
+    @functools.lru_cache(maxsize=None)
+    def _prop_task(shape):
+        from repro.core.simulation import FLTask
+        from repro.data import dirichlet_partition, make_dataset
+        from repro.models.classifier import make_classifier
+
+        ds = make_dataset("mnist", train_size=700, test_size=150, seed=1)
+        clients = dirichlet_partition(ds.train_y, 7, 0.6, seed=1)
+        model = _prop_task.model  # one model instance -> one engine cache entry
+        if model is None:
+            model = _prop_task.model = make_classifier(
+                "mlp", "mnist", ds.spec.image_shape, 10)
+        return FLTask(model, ds, clients, [list(c) for c in shape],
+                      batch_size=8, seed=1)
+
+    _prop_task.model = None
+
+    @given(shape=st.sampled_from(_SHAPES), seed=st.integers(0, 20),
+           qsgd=st.sampled_from(_CHANNELS))
+    @settings(max_examples=5, deadline=None)
+    def test_property_full_participation_parity(shape, seed, qsgd):
+        _assert_full_participation_parity(_prop_task(shape), seed=seed, qsgd=qsgd)
+
+    @given(seed=st.integers(0, 50),
+           mask_bits=st.lists(st.booleans(), min_size=5, max_size=5))
+    @settings(max_examples=10, deadline=None)
+    def test_property_mask_freezes_dropped_opt_state(small_task, seed, mask_bits):
+        """Any mask pattern leaves dropped clients' LocalOpt state unchanged."""
+        from repro.comm.channels import DenseChannel
+        from repro.core.engine import RoundEngine
+        from repro.optim.local import MomentumSGD
+
+        engine = RoundEngine(small_task.model, DenseChannel(),
+                             local_opt=MomentumSGD())
+        small_task.reset_loaders(seed)
+        members = small_task.cluster_members[0]
+        n = len(members)
+        mask = np.asarray(mask_bits[:n], np.float32)
+        params = small_task.init_params()
+        gammas = np.asarray(small_task.cluster_weights(0))
+        lrs = jnp.full((2, 2), 0.05, jnp.float32)
+        batch = small_task.sample_round_batches(0, 4, 2)
+        opt0 = engine.init_opt_state(params, n)
+        # warm round so the momentum state is nonzero
+        params, opt1, _ = engine.cluster_round(params, batch, jnp.asarray(gammas),
+                                               lrs, None, opt0)
+        w = gammas * mask
+        gammas_r = jnp.asarray(w / w.sum() if w.sum() > 0 else w)
+        batch2 = small_task.sample_round_batches(0, 4, 2)
+        _, opt2, _ = engine.cluster_round(params, batch2, gammas_r, lrs, None,
+                                          opt1, mask=mask)
+        for before, after in zip(jax.tree.leaves(opt1), jax.tree.leaves(opt2)):
+            for i in range(n):
+                if not mask[i]:
+                    np.testing.assert_array_equal(np.asarray(after[i]),
+                                                  np.asarray(before[i]))

@@ -1,7 +1,12 @@
 """CommLedger: aggregate accounting, snapshots, and the CommEvent stream."""
-from repro.core import CommLedger, FedCHSConfig, run_fed_chs
-from repro.core.baselines import WRWGDConfig, run_wrwgd
+import pytest
+
+from repro.comm.channels import DenseChannel, QSGDChannel, TopKChannel
+from repro.core import CommLedger, FedCHSConfig, FedCHSScheduler, run_fed_chs
+from repro.core.baselines import FedAvgConfig, WRWGDConfig, run_fedavg, run_wrwgd
 from repro.core.ledger import dense_message_bits
+from repro.core.topology import make_topology
+from repro.part import UniformK
 
 
 def test_bits_until_empty_history_falls_back_to_total():
@@ -68,6 +73,75 @@ def test_every_driver_snapshots_every_round(small_task):
     assert [r for r, _ in res.ledger.history] == list(range(5))
     res = run_wrwgd(small_task, WRWGDConfig(rounds=4, local_steps=2, eval_every=10))
     assert [r for r, _ in res.ledger.history] == list(range(4))
+
+
+def test_round_bits_and_senders_require_events():
+    led = CommLedger()
+    led.record("client_to_es", 10, round=0, phase=0, sender="client:1", receiver="es:0")
+    led.record("client_to_es", 10, round=0, phase=1, sender="client:1", receiver="es:0")
+    led.record("client_to_es", 10, round=1, phase=0, sender="client:2", receiver="es:0")
+    led.record("es_to_es", 99, round=1, phase=1, sender="es:0", receiver="es:1")
+    assert led.round_bits("client_to_es") == {0: 20, 1: 10}
+    assert led.round_bits() == {0: 20, 1: 109}
+    assert led.round_senders(0, "client_to_es") == {"client:1"}
+    assert led.round_senders(1, "es_to_es") == {"es:0"}
+
+
+# -- closed-form participation accounting ------------------------------------
+
+
+@pytest.mark.parametrize("channel", [DenseChannel(), QSGDChannel(8),
+                                     TopKChannel(0.25)],
+                         ids=["dense", "qsgd", "topk"])
+def test_uniform_k_uplink_bits_closed_form(small_task, channel):
+    """Under UniformK sampling the per-round uplink is exactly
+    |sampled| * interactions * bits_per_message, and the event-stream sender
+    set is exactly the sampled set — for Dense, QSGD, and Top-K channels."""
+    T, K, E = 4, 4, 2
+    interactions = K // E
+    sampler = UniformK(k=3, seed=9)
+    cfg = FedCHSConfig(rounds=T, local_steps=K, local_epochs=E, eval_every=10,
+                       seed=1, initial_cluster=0, channel=channel,
+                       sampler=sampler)
+    res = run_fed_chs(small_task, cfg)
+    d = small_task.num_params()
+    up = channel.message_bits(d)
+    down = dense_message_bits(d)
+
+    # replay the deterministic 2-step schedule to know each round's cluster
+    topo = make_topology(cfg.topology, small_task.num_clusters,
+                         seed=cfg.topology_seed)
+    order = FedCHSScheduler(topo, small_task.cluster_sizes, initial=0).schedule(T)
+
+    up_bits = res.ledger.round_bits("client_to_es")
+    down_bits = res.ledger.round_bits("es_to_client")
+    total = 0
+    for t in range(T):
+        sampled = sampler.participants(t, small_task.cluster_members[order[t]])
+        assert len(sampled) == 3
+        assert res.ledger.round_senders(t, "client_to_es") == \
+            {f"client:{i}" for i in sampled}
+        assert up_bits[t] == len(sampled) * interactions * up
+        assert down_bits[t] == len(sampled) * interactions * down
+        total += up_bits[t]
+    assert res.ledger.bits["client_to_es"] == total
+
+
+def test_uniform_k_fedavg_uplink_bits_closed_form(small_task):
+    T, K, k = 3, 2, 5
+    sampler = UniformK(k=k, seed=4)
+    res = run_fedavg(small_task, FedAvgConfig(rounds=T, local_steps=K,
+                                              eval_every=10, seed=0,
+                                              sampler=sampler))
+    d = small_task.num_params()
+    q = dense_message_bits(d)
+    clients = list(range(small_task.num_clients))
+    for t in range(T):
+        sampled = sampler.participants(t, clients)
+        assert res.ledger.round_senders(t, "client_to_ps") == \
+            {f"client:{i}" for i in sampled}
+        assert res.ledger.round_bits("client_to_ps")[t] == len(sampled) * q
+    assert res.ledger.bits["client_to_ps"] == T * k * q
 
 
 def test_fed_chs_event_stream_matches_aggregates(small_task):

@@ -203,6 +203,116 @@ def test_timeline_identical_across_reruns(small_task):
     assert tls[0].round_end == tls[1].round_end
 
 
+# -- participation: deadline dropouts + pass-through replay ------------------
+
+
+def _nominal_chain_s(net, task, steps, link_class="wan"):
+    """A non-straggler client's download -> compute -> upload chain."""
+    q = dense_message_bits(task.num_params())
+    return net.nominal_chain_s(
+        link_class, q, steps * sgd_step_flops(task.num_params(), task.batch_size))
+
+
+def test_deadline_converts_stragglers_into_dropouts(small_task):
+    """Bits saved, wall-clock wasted: stragglers miss the reporting deadline,
+    their uploads never happen, and the aggregator waits out the deadline."""
+    K, T = 2, 2
+    res = run_fedavg(small_task, FedAvgConfig(rounds=T, local_steps=K,
+                                              eval_every=10, seed=0))
+    net = edge_cloud_network(seed=1, straggler_frac=0.3, straggler_slowdown=32.0)
+    stragglers = {f"client:{i}" for i in range(small_task.num_clients)
+                  if net.is_straggler(f"client:{i}")}
+    assert stragglers and len(stragglers) < small_task.num_clients
+    deadline = 2.0 * _nominal_chain_s(net, small_task, K)
+
+    plain = simulate_run(small_task, res, net, local_steps=K)
+    tl = simulate_run(small_task, res, net, local_steps=K, deadline_s=deadline)
+    # exactly the stragglers are dropped, every round
+    assert tl.dropped == {t: frozenset(stragglers) for t in range(T)}
+    q = dense_message_bits(small_task.num_params())
+    assert tl.dropped_bits == len(stragglers) * T * q
+    # bits saved, but each round waits out EXACTLY the full deadline: the
+    # kept (nominal) chains land inside it, and the dropped stragglers'
+    # abandoned compute is untracked — it must not stretch the round
+    for t in range(T):
+        assert tl.round_duration(t) == pytest.approx(deadline)
+    # ...which beats waiting for a 32x straggler
+    assert tl.makespan == pytest.approx(T * deadline)
+    assert tl.makespan < plain.makespan
+    # the deadline can also ride on the NetworkModel itself
+    net_dl = edge_cloud_network(seed=1, straggler_frac=0.3,
+                                straggler_slowdown=32.0, deadline_s=deadline)
+    tl2 = simulate_run(small_task, res, net_dl, local_steps=K)
+    assert tl2.dropped == tl.dropped and tl2.makespan == tl.makespan
+
+
+def test_deadline_bounds_multi_phase_rounds(small_task):
+    """Abandoned straggler compute (64x nominal, overhanging every phase)
+    must never stretch a later phase: each phase with a drop closes at
+    exactly the deadline, so a dropped round costs J*deadline + the hop."""
+    K, E, T = 4, 2, 3
+    res = run_fed_chs(small_task, FedCHSConfig(rounds=T, local_steps=K,
+                                               local_epochs=E, eval_every=10,
+                                               seed=0))
+    net = edge_cloud_network(seed=1, straggler_frac=0.3, straggler_slowdown=64.0)
+    deadline = 2.0 * _nominal_chain_s(net, small_task, E, link_class="wireless")
+    tl = simulate_run(small_task, res, net, local_steps=K, deadline_s=deadline)
+    assert any(tl.dropped.values())
+    J = K // E
+    hop = net.backhaul.base_time(dense_message_bits(small_task.num_params()))
+    for t, dropped in tl.dropped.items():
+        if dropped:
+            assert tl.round_duration(t) == pytest.approx(J * deadline + hop)
+
+
+def test_deadline_dropout_replay_is_deterministic(small_task):
+    """Same (seed, config) -> same trained events, same dropped-client sets,
+    same makespan — across training reruns AND across timeline_for calls."""
+    from repro.part import AvailabilityAware, GilbertElliottTrace
+
+    def make_cfg():
+        return FedCHSConfig(
+            rounds=6, local_steps=4, local_epochs=2, eval_every=10, seed=2,
+            sampler=AvailabilityAware(
+                GilbertElliottTrace(p_fail=0.3, p_recover=0.4, seed=5)))
+
+    runs = [run_fed_chs(small_task, make_cfg()) for _ in range(2)]
+    assert runs[0].ledger.events == runs[1].ledger.events
+    net = edge_cloud_network(seed=4, heterogeneity=0.3, straggler_frac=0.3,
+                             straggler_slowdown=12.0, jitter=0.1)
+    deadline = 3.0 * _nominal_chain_s(net, small_task, 2, link_class="wireless")
+    tls = [simulate_run(small_task, r, net, local_steps=4, deadline_s=deadline)
+           for r in runs + [runs[0]]]  # second run + repeated invocation
+    for tl in tls[1:]:
+        assert tl.job_times == tls[0].job_times
+        assert tl.round_end == tls[0].round_end
+        assert tl.dropped == tls[0].dropped
+        assert tl.dropped_bits == tls[0].dropped_bits
+        assert tl.makespan == tls[0].makespan
+    assert any(tls[0].dropped.values())  # the deadline actually bites
+
+
+def test_fed_chs_pass_through_round_replays_as_a_bare_hop(small_task):
+    """A round whose whole cluster is dark carries only the ES->ES model pass
+    — its replay cost is one backhaul hop, deterministically."""
+
+    class Blackout:
+        def participants(self, round_idx, clients):
+            return [] if round_idx == 2 else list(clients)
+
+    cfg = FedCHSConfig(rounds=4, local_steps=4, local_epochs=2, eval_every=10,
+                       seed=0, sampler=Blackout())
+    runs = [run_fed_chs(small_task, cfg) for _ in range(2)]
+    assert runs[0].ledger.events == runs[1].ledger.events
+    net = _flat_net()
+    tls = [simulate_run(small_task, r, net, local_steps=4) for r in runs]
+    assert tls[0].job_times == tls[1].job_times
+    assert tls[0].makespan == tls[1].makespan
+    q = dense_message_bits(small_task.num_params())
+    assert tls[0].round_duration(2) == pytest.approx(net.backhaul.base_time(q))
+    assert tls[0].round_duration(2) < tls[0].round_duration(1) / 10
+
+
 # -- bits-winner vs time-winner ---------------------------------------------
 
 

@@ -1,0 +1,349 @@
+"""repro.part — availability traces, samplers, masked engine rounds, and the
+pass-through/availability-aware protocol behaviors.
+
+The seed-parity contract (FullParticipation == no sampler, bit-identical) is
+pinned in tests/test_engine_parity.py; the closed-form ledger contract in
+tests/test_ledger.py; deadline-dropout replay in tests/test_netsim.py.  This
+module covers the subsystem itself.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.channels import DenseChannel, QSGDChannel
+from repro.core import AvailabilityAwareScheduler, FedCHSConfig, run_fed_chs
+from repro.core.baselines import (
+    FedAvgConfig,
+    HierLocalQSGDConfig,
+    run_fedavg,
+    run_hier_local_qsgd,
+)
+from repro.core.engine import RoundEngine
+from repro.core.topology import make_topology
+from repro.optim.local import MomentumSGD
+from repro.part import (
+    AlwaysOn,
+    AvailabilityAware,
+    BernoulliTrace,
+    FullParticipation,
+    GilbertElliottTrace,
+    UniformK,
+    is_full_participation,
+    participation_mask,
+)
+
+# -- traces ------------------------------------------------------------------
+
+
+def test_bernoulli_trace_is_deterministic_and_rate_correct():
+    a = BernoulliTrace(p=0.7, seed=3)
+    b = BernoulliTrace(p=0.7, seed=3)
+    draws = [a.available(c, t) for c in range(10) for t in range(50)]
+    assert draws == [b.available(c, t) for c in range(10) for t in range(50)]
+    rate = np.mean(draws)
+    assert 0.6 < rate < 0.8
+    # a different seed gives a different trace
+    c = BernoulliTrace(p=0.7, seed=4)
+    assert draws != [c.available(cl, t) for cl in range(10) for t in range(50)]
+
+
+def test_gilbert_elliott_is_query_order_independent():
+    fwd = GilbertElliottTrace(p_fail=0.2, p_recover=0.3, seed=1)
+    bwd = GilbertElliottTrace(p_fail=0.2, p_recover=0.3, seed=1)
+    rounds = list(range(40))
+    a = [fwd.available(2, t) for t in rounds]
+    b = [bwd.available(2, t) for t in reversed(rounds)][::-1]
+    assert a == b
+
+
+def test_gilbert_elliott_produces_bursts_not_blips():
+    """Outages under GE are runs with mean length ~1/p_recover, so the number
+    of distinct outage *spells* is far below the number of down rounds."""
+    tr = GilbertElliottTrace(p_fail=0.3, p_recover=0.25, seed=0)
+    T = 400
+    states = [tr.available(0, t) for t in range(T)]
+    down = states.count(False)
+    spells = sum(1 for t in range(1, T) if not states[t] and states[t - 1])
+    assert down > 0.2 * T                      # it does go down
+    assert spells < down                       # ...in multi-round bursts
+    up_frac = states.count(True) / T
+    assert abs(up_frac - tr.steady_state_up()) < 0.15
+
+
+# -- samplers ----------------------------------------------------------------
+
+
+def test_sampler_contracts():
+    clients = [3, 1, 4, 1, 5, 9, 2, 6]
+    assert FullParticipation().participants(0, clients) == clients
+    assert is_full_participation(None) and is_full_participation(FullParticipation())
+    assert not is_full_participation(AvailabilityAware(AlwaysOn()))
+
+    aa = AvailabilityAware(AlwaysOn())
+    assert aa.participants(7, clients) == clients
+
+    uk = UniformK(k=3, seed=0)
+    picks = uk.participants(5, list(range(10)))
+    assert picks == uk.participants(5, list(range(10)))  # pure
+    assert len(picks) == 3 and len(set(picks)) == 3
+    assert set(picks) <= set(range(10))
+    assert uk.participants(6, list(range(10))) != picks or \
+           uk.participants(7, list(range(10))) != picks  # varies across rounds
+    assert uk.participants(0, [1, 2]) == [1, 2]  # fewer candidates than k
+
+    # UniformK respects its trace: never picks an unavailable client
+    tr = BernoulliTrace(p=0.5, seed=2)
+    uk_tr = UniformK(k=4, seed=0, trace=tr)
+    for t in range(20):
+        picked = uk_tr.participants(t, list(range(12)))
+        assert all(tr.available(c, t) for c in picked)
+        assert len(picked) <= 4
+
+
+def test_uniform_k_draws_independently_per_candidate_set():
+    """Distinct candidate sets queried in the same round (e.g. every cluster
+    of a hierarchical round) must not pick correlated positions."""
+    uk = UniformK(k=3, seed=0)
+    positions_differ = any(
+        [c for c in uk.participants(t, list(range(7)))]
+        != [c - 10 for c in uk.participants(t, list(range(10, 17)))]
+        for t in range(10)
+    )
+    assert positions_differ
+
+
+def test_participation_mask():
+    m = participation_mask([10, 11, 12, 13], [11, 13])
+    np.testing.assert_array_equal(m, np.array([0.0, 1.0, 0.0, 1.0], np.float32))
+
+
+# -- availability-aware scheduler --------------------------------------------
+
+
+def test_availability_scheduler_skips_dead_clusters():
+    topo = make_topology("full", 4)
+    dead = {1}  # cluster 1 is never reachable
+    sched = AvailabilityAwareScheduler(
+        topo, [10, 40, 20, 30], lambda m, r: m not in dead, initial=0)
+    order = [sched.advance() for _ in range(8)]
+    assert 1 not in order
+    assert set(order) == {0, 2, 3}
+
+
+def test_availability_scheduler_falls_back_when_all_dead():
+    topo = make_topology("ring", 3)
+    sched = AvailabilityAwareScheduler(
+        topo, [10, 20, 30], lambda m, r: False, initial=0)
+    nxt = sched.advance()  # nothing reachable: the paper's plain rule applies
+    assert nxt in (1, 2)
+
+
+def test_availability_scheduler_probes_next_round():
+    """m(t+1) is chosen with reachability evaluated at round t+1, not t."""
+    topo = make_topology("full", 3)
+    seen = []
+
+    def reachable(m, r):
+        seen.append(r)
+        return True
+
+    sched = AvailabilityAwareScheduler(topo, [1, 2, 3], reachable, initial=0)
+    sched.advance()   # during round 0 -> picks m(1)
+    assert set(seen) == {1}
+
+
+# -- masked engine rounds ----------------------------------------------------
+
+
+def _warm_engine_state(small_task, local_opt=None, channel=None):
+    engine = RoundEngine(small_task.model, channel or DenseChannel(),
+                         local_opt=local_opt)
+    small_task.reset_loaders(0)
+    members = small_task.cluster_members[0]
+    n = len(members)
+    params = small_task.init_params()
+    gammas = jnp.asarray(small_task.cluster_weights(0))
+    lrs = jnp.full((2, 2), 0.05, jnp.float32)
+    batch = small_task.sample_round_batches(0, 4, 2)
+    opt0 = engine.init_opt_state(params, n)
+    # one full round so the optimizer state is nonzero before masking
+    params, opt1, _ = engine.cluster_round(params, batch, gammas, lrs, None, opt0)
+    return engine, params, opt1, gammas, lrs, n
+
+
+def test_masked_round_freezes_dropped_opt_state(small_task):
+    engine, params, opt1, gammas, lrs, n = _warm_engine_state(
+        small_task, local_opt=MomentumSGD())
+    mask = np.zeros(n, np.float32)
+    mask[[0, 2]] = 1.0
+    w = np.asarray(gammas) * mask
+    gammas_r = jnp.asarray(w / w.sum())
+    batch = small_task.sample_round_batches(0, 4, 2)
+    _, opt2, _ = engine.cluster_round(params, batch, gammas_r, lrs, None, opt1,
+                                      mask=mask)
+    for before, after in zip(jax.tree.leaves(opt1), jax.tree.leaves(opt2)):
+        for i in range(n):
+            if mask[i]:
+                assert not np.array_equal(np.asarray(after[i]), np.asarray(before[i]))
+            else:
+                np.testing.assert_array_equal(np.asarray(after[i]),
+                                              np.asarray(before[i]))
+
+
+def test_all_zero_mask_is_a_no_op_on_params(small_task):
+    engine, params, opt1, gammas, lrs, n = _warm_engine_state(small_task)
+    batch = small_task.sample_round_batches(0, 4, 2)
+    mask = np.zeros(n, np.float32)
+    new_params, _, losses = engine.cluster_round(
+        params, batch, jnp.zeros_like(gammas), lrs, None, opt1, mask=mask)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(losses), np.zeros_like(losses))
+
+
+# -- driver-level churn behavior ---------------------------------------------
+
+
+class _Blackout:
+    """Everyone is down in `dark` rounds; full participation otherwise."""
+
+    def __init__(self, dark):
+        self.dark = set(dark)
+
+    def participants(self, round_idx, clients):
+        return [] if round_idx in self.dark else list(clients)
+
+
+def test_fed_chs_pass_through_round_forwards_model(small_task):
+    cfg = FedCHSConfig(rounds=4, local_steps=4, local_epochs=2, eval_every=1,
+                       seed=0, sampler=_Blackout({1}))
+    res = run_fed_chs(small_task, cfg)
+    evs = res.ledger.round_events()
+    assert {e.hop for e in evs[1]} == {"es_to_es"}          # forwarded, no traffic
+    assert res.ledger.round_bits("client_to_es").get(1, 0) == 0
+    assert len([e for e in evs[1] if e.hop == "es_to_es"]) == 1
+    # eval after the dark round still works (params simply unchanged by it)
+    assert len(res.test_acc) == 4
+
+
+def test_fed_chs_partial_round_drops_exactly_the_absent(small_task):
+    tr = BernoulliTrace(p=0.5, seed=11)
+    sampler = AvailabilityAware(tr)
+    cfg = FedCHSConfig(rounds=5, local_steps=4, local_epochs=2, eval_every=10,
+                       seed=1, initial_cluster=0, sampler=sampler)
+    res = run_fed_chs(small_task, cfg)
+    # round 0 is cluster 0: the uplink sender set is exactly the available set
+    members = small_task.cluster_members[0]
+    expect = {f"client:{i}" for i in sampler.participants(0, members)}
+    assert res.ledger.round_senders(0, "client_to_es") == expect
+
+
+def test_fed_chs_availability_scheduler_avoids_dark_clusters(small_task):
+    class OneClusterDark:
+        """Cluster `dark`'s clients are always down; everyone else is up."""
+
+        def __init__(self, members):
+            self.members = set(members)
+
+        def participants(self, round_idx, clients):
+            return [c for c in clients if c not in self.members]
+
+    dark = 2
+    sampler = OneClusterDark(small_task.cluster_members[dark])
+    cfg = FedCHSConfig(rounds=8, local_steps=2, local_epochs=1, eval_every=10,
+                       seed=0, initial_cluster=0, topology="full",
+                       sampler=sampler, availability_scheduler=True)
+    res = run_fed_chs(small_task, cfg)
+    senders = {e.sender for e in res.ledger.events if e.hop == "es_to_es"}
+    receivers = {e.receiver for e in res.ledger.events if e.hop == "es_to_es"}
+    assert f"es:{dark}" not in senders | receivers
+    # and no round was a pass-through: the walk only visited live clusters
+    for t in range(8):
+        assert res.ledger.round_bits("client_to_es")[t] > 0
+
+
+def test_fedavg_empty_round_is_skipped(small_task):
+    cfg = FedAvgConfig(rounds=3, local_steps=2, eval_every=1, seed=0,
+                       sampler=_Blackout({1}))
+    res = run_fedavg(small_task, cfg)
+    assert 1 not in {e.round for e in res.ledger.events}
+    n = small_task.num_clients
+    assert res.ledger.messages["client_to_ps"] == 2 * n
+    # the ledger still snapshots every round
+    assert [r for r, _ in res.ledger.history] == [0, 1, 2]
+
+
+def test_hier_dark_cluster_is_pass_through(small_task):
+    class ClusterDark:
+        def __init__(self, members):
+            self.members = set(members)
+
+        def participants(self, round_idx, clients):
+            return [c for c in clients if c not in self.members]
+
+    dark = 1
+    sampler = ClusterDark(small_task.cluster_members[dark])
+    cfg = HierLocalQSGDConfig(rounds=2, local_steps=4, local_epochs=2,
+                              qsgd_levels=None, eval_every=1, seed=0,
+                              sampler=sampler)
+    res = run_hier_local_qsgd(small_task, cfg)
+    ups = {e.sender for e in res.ledger.events if e.hop == "es_to_ps"}
+    downs = {e.receiver for e in res.ledger.events if e.hop == "ps_to_es"}
+    assert f"es:{dark}" not in ups          # nothing to upload
+    assert f"es:{dark}" in downs            # but it stays in sync
+    client_ups = {e.sender for e in res.ledger.events if e.hop == "client_to_es"}
+    assert not client_ups & {f"client:{i}" for i in small_task.cluster_members[dark]}
+
+
+def test_hier_dark_cluster_keeps_trajectory_of_reweighted_rest(small_task):
+    """A dark cluster must not drag the global average toward the broadcast
+    model: ES weights renormalize over the clusters that trained."""
+
+    class ClusterDark:
+        def __init__(self, members):
+            self.members = set(members)
+
+        def participants(self, round_idx, clients):
+            return [c for c in clients if c not in self.members]
+
+    sampler = ClusterDark(small_task.cluster_members[0])
+    cfg = HierLocalQSGDConfig(rounds=1, local_steps=2, local_epochs=2,
+                              qsgd_levels=None, eval_every=1, seed=3,
+                              sampler=sampler)
+    res = run_hier_local_qsgd(small_task, cfg)
+    base = small_task.init_params()
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(res.final_params), jax.tree.leaves(base))
+    )
+    assert moved
+
+
+def test_stochastic_channel_churn_is_reproducible(small_task):
+    tr = GilbertElliottTrace(p_fail=0.3, p_recover=0.4, seed=6)
+    cfg = FedCHSConfig(rounds=4, local_steps=4, local_epochs=2, eval_every=2,
+                       seed=2, channel=QSGDChannel(8),
+                       sampler=AvailabilityAware(tr))
+    a = run_fed_chs(small_task, cfg)
+    # fresh trace object: the cached-chain state must not leak across runs
+    cfg2 = FedCHSConfig(rounds=4, local_steps=4, local_epochs=2, eval_every=2,
+                        seed=2, channel=QSGDChannel(8),
+                        sampler=AvailabilityAware(
+                            GilbertElliottTrace(p_fail=0.3, p_recover=0.4, seed=6)))
+    b = run_fed_chs(small_task, cfg2)
+    assert a.ledger.events == b.ledger.events
+    assert a.test_acc == b.test_acc and a.train_loss == b.train_loss
+
+
+def test_channel_message_bits_unchanged_by_masking(small_task):
+    """Dropped clients save bits by sending nothing; the messages that ARE
+    sent cost exactly the channel's per-message bits."""
+    tr = BernoulliTrace(p=0.6, seed=0)
+    cfg = FedCHSConfig(rounds=3, local_steps=4, local_epochs=2, eval_every=10,
+                       seed=0, qsgd_levels=16, sampler=AvailabilityAware(tr))
+    res = run_fed_chs(small_task, cfg)
+    from repro.core.ledger import qsgd_message_bits
+
+    q = qsgd_message_bits(small_task.num_params(), 16)
+    up_events = [e for e in res.ledger.events if e.hop == "client_to_es"]
+    assert up_events and all(e.n_bits == q for e in up_events)
