@@ -35,12 +35,23 @@ class BenchScale:
     # quick mode shrinks LeNet widths (paper's 64/256-kernel LeNet is ~20 min
     # per algorithm run on this CPU); --full restores Appendix A exactly.
     lenet_width_scale: float = 0.25
+    batch_size: int = 32
 
     @classmethod
     def paper(cls) -> "BenchScale":
         return cls(train_size=50_000, test_size=10_000, num_clients=100,
                    num_clusters=10, rounds=4000, local_steps=20, eval_every=100,
                    lenet_width_scale=1.0)
+
+    @classmethod
+    def edge(cls) -> "BenchScale":
+        """Host-bound regime: tiny per-round device compute (small batches,
+        short local phases), so the simulator's own per-round host work —
+        staging, dispatch, scheduling, accounting — is a visible fraction of
+        wall-clock.  This is the regime the whole-run scan executor targets
+        (and the regime any fast accelerator is in for every model size)."""
+        return cls(train_size=2000, test_size=400, num_clients=20, num_clusters=5,
+                   rounds=200, local_steps=10, eval_every=5, batch_size=4)
 
 
 def build_task(dataset: str, model: str, lam: float, scale: BenchScale, *,
@@ -51,10 +62,39 @@ def build_task(dataset: str, model: str, lam: float, scale: BenchScale, *,
     clusters = assign_clusters(scale.num_clients, scale.num_clusters, seed=seed)
     clf = make_classifier(model, dataset, ds.spec.image_shape, ds.spec.num_classes,
                           width_scale=scale.lenet_width_scale)
-    return FLTask(clf, ds, clients, clusters, batch_size=32, seed=seed)
+    return FLTask(clf, ds, clients, clusters, batch_size=scale.batch_size, seed=seed)
 
 
 ALGORITHMS = ("fed_chs", "fedavg", "wrwgd", "hier_local_qsgd")
+
+
+def algorithm_config(name: str, scale: BenchScale, *, qsgd: int | None = None,
+                     seed: int = 0, track_events: bool = False, sampler=None):
+    """The benchmark-scale config + run function for one algorithm — shared
+    by `run_algorithm` and the multi-seed `run_sweep` path so both run the
+    exact same settings."""
+    if name == "fed_chs":
+        return run_fed_chs, FedCHSConfig(
+            rounds=scale.rounds, local_steps=scale.local_steps,
+            eval_every=scale.eval_every, qsgd_levels=qsgd, seed=seed,
+            track_events=track_events, sampler=sampler)
+    if name == "fedavg":
+        return run_fedavg, FedAvgConfig(
+            rounds=max(scale.rounds // 4, 4), local_steps=scale.local_steps,
+            eval_every=max(scale.eval_every // 4, 1), qsgd_levels=qsgd, seed=seed,
+            track_events=track_events, sampler=sampler)
+    if name == "wrwgd":
+        return run_wrwgd, WRWGDConfig(
+            rounds=scale.rounds * 2, local_steps=scale.local_steps,
+            eval_every=scale.eval_every * 2, seed=seed, track_events=track_events,
+            sampler=sampler)
+    if name == "hier_local_qsgd":
+        return run_hier_local_qsgd, HierLocalQSGDConfig(
+            rounds=max(scale.rounds // 6, 2), local_steps=scale.local_steps,
+            local_epochs=5, eval_every=max(scale.eval_every // 6, 1),
+            qsgd_levels=qsgd if qsgd is not None else 16, seed=seed,
+            track_events=track_events, sampler=sampler)
+    raise ValueError(name)
 
 
 def run_algorithm(name: str, task: FLTask, scale: BenchScale, *, qsgd: int | None = None,
@@ -65,27 +105,7 @@ def run_algorithm(name: str, task: FLTask, scale: BenchScale, *, qsgd: int | Non
     optional `repro.part` participation sampler (None = full participation,
     the seed-parity path)."""
     t0 = time.time()
-    if name == "fed_chs":
-        res = run_fed_chs(task, FedCHSConfig(
-            rounds=scale.rounds, local_steps=scale.local_steps,
-            eval_every=scale.eval_every, qsgd_levels=qsgd, seed=seed,
-            track_events=track_events, sampler=sampler))
-    elif name == "fedavg":
-        res = run_fedavg(task, FedAvgConfig(
-            rounds=max(scale.rounds // 4, 4), local_steps=scale.local_steps,
-            eval_every=max(scale.eval_every // 4, 1), qsgd_levels=qsgd, seed=seed,
-            track_events=track_events, sampler=sampler))
-    elif name == "wrwgd":
-        res = run_wrwgd(task, WRWGDConfig(
-            rounds=scale.rounds * 2, local_steps=scale.local_steps,
-            eval_every=scale.eval_every * 2, seed=seed, track_events=track_events,
-            sampler=sampler))
-    elif name == "hier_local_qsgd":
-        res = run_hier_local_qsgd(task, HierLocalQSGDConfig(
-            rounds=max(scale.rounds // 6, 2), local_steps=scale.local_steps,
-            local_epochs=5, eval_every=max(scale.eval_every // 6, 1),
-            qsgd_levels=qsgd if qsgd is not None else 16, seed=seed,
-            track_events=track_events, sampler=sampler))
-    else:
-        raise ValueError(name)
+    run, config = algorithm_config(name, scale, qsgd=qsgd, seed=seed,
+                                   track_events=track_events, sampler=sampler)
+    res = run(task, config)
     return res, time.time() - t0

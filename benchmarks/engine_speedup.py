@@ -1,8 +1,8 @@
-"""Wall-clock win of the fused jitted round engine over the seed loop
-structure (per-interaction batch staging + `float()` host syncs + Python
-per-cluster loops + interpret-mode QSGD off-TPU).
+"""Wall-clock win of the fused execution layers over the seed loop structure
+(per-interaction batch staging + `float()` host syncs + Python per-cluster
+loops + interpret-mode QSGD off-TPU).
 
-Two head-to-heads on the default synthetic task, identical math per round:
+Per-round head-to-heads on the default synthetic task, identical math:
 
   * Hier-Local-QSGD global round — seed style runs interactions x clusters
     separate jit dispatches with a host sync after each; the engine runs one
@@ -15,6 +15,20 @@ routing: off-TPU the seed executed the Pallas kernels in interpret mode (a
 grid-step loop of dynamic slices); this PR routes off-TPU QSGD through the
 bit-identical fused-XLA oracle (`kernels/ref.py`) instead, and that rerouting
 is part of the measured win.
+
+Whole-run arms (the `scanned` rows, measured at 200 rounds on the edge-scale
+synthetic task — see `BenchScale.edge`): the scanned executor
+(`scan_rounds=True`, the default) vs the looped driver (`scan_rounds=False`)
+vs the seed-style loop, plus a 4-seed vmapped `run_sweep` vs sequential
+looped runs.  All arms are steady-state (each is fully warmed before timing,
+so compile time is excluded).  Honest reading of the numbers on this 2-core
+CPU container: per-round model compute floors at a few ms even for tiny
+batches, so removing the per-round host work (dispatch, staging transfers,
+scheduler/ledger Python) buys ~1.2-1.4x on host-bound scenarios and ~1.0x on
+compute-bound ones, while the win over the seed-style loop structure
+compounds to >=2x; on a real accelerator the device time per round shrinks by
+orders of magnitude and the host share — exactly what the scan removes —
+becomes the bottleneck.
 
 Usage:
   PYTHONPATH=src:. python benchmarks/engine_speedup.py [--rounds 8] [--full]
@@ -153,6 +167,80 @@ def _timed(fn, *args) -> float:
     return time.perf_counter() - t0
 
 
+def _steady(fn, *args) -> float:
+    """Steady-state wall-clock: one full warm call (compiles every chunk
+    shape), then best-of-2 timed calls (2-core container timings are noisy)."""
+    fn(*args)
+    return min(_timed(fn, *args), _timed(fn, *args))
+
+
+def whole_run(quick: bool = True) -> list[tuple[str, float, str]]:
+    """Whole-run arms: scanned executor vs looped driver vs seed-style loop,
+    plus the vmapped multi-seed sweep.  200 rounds, edge-scale task (quick)
+    or the standard quick-scale task (--full: the compute-bound regime,
+    reported for honesty — the scan can't beat the FLOP floor)."""
+    import dataclasses
+
+    from repro.core import run_sweep
+    from repro.core.baselines import WRWGDConfig, run_wrwgd
+
+    scale = BenchScale.edge() if quick else BenchScale()
+    task = build_task("mnist", "mlp", 0.6, scale)
+    R = 200
+    rows = []
+
+    def report(name, t_scan, t_ref, ref_label):
+        speed = t_ref / t_scan
+        rows.append((name, t_scan / R * 1e6, f"{speed:.2f}x_vs_{ref_label}"))
+        print(f"{name:32s} {t_ref / R * 1e3:8.1f} ms/round -> "
+              f"{t_scan / R * 1e3:6.1f} ms/round  ({speed:.2f}x)")
+
+    # --- Fed-CHS grad mode (paper E=1 dense), scanned vs looped driver ----
+    grad_cfg = lambda **kw: FedCHSConfig(  # noqa: E731
+        rounds=R, local_steps=max(scale.local_steps // 2, 1),
+        eval_every=10_000, **kw)
+    t_scan = _steady(run_fed_chs, task, grad_cfg())
+    t_loop = _steady(run_fed_chs, task, grad_cfg(scan_rounds=False))
+    report("scanned_fed_chs_grad", t_scan, t_loop, "looped_driver")
+
+    # --- WRWGD (1 client/round: the most host-bound driver) --------------
+    walk_cfg = lambda **kw: WRWGDConfig(  # noqa: E731
+        rounds=R, local_steps=scale.local_steps, eval_every=10_000, **kw)
+    t_scan_w = _steady(run_wrwgd, task, walk_cfg())
+    t_loop_w = _steady(run_wrwgd, task, walk_cfg(scan_rounds=False))
+    report("scanned_wrwgd", t_scan_w, t_loop_w, "looped_driver")
+
+    # --- Fed-CHS E=5 + QSGD, scanned vs looped AND vs the seed-style loop
+    # (the seed arm's per-round cost is constant, so it is timed over 20
+    # rounds; the scanned/looped arms run the full 200) ---------------------
+    qsgd_cfg = lambda r, **kw: FedCHSConfig(  # noqa: E731
+        rounds=r, local_steps=scale.local_steps, local_epochs=5,
+        qsgd_levels=16, eval_every=10_000, **kw)
+    t_scan_q = _steady(run_fed_chs, task, qsgd_cfg(R))
+    t_loop_q = _steady(run_fed_chs, task, qsgd_cfg(R, scan_rounds=False))
+    seed_style_fed_chs(task, qsgd_cfg(2))
+    t_seed_q = _timed(seed_style_fed_chs, task, qsgd_cfg(20)) / 20 * R
+    report("scanned_fed_chs_e5_qsgd", t_scan_q, t_loop_q, "looped_driver")
+    report("scanned_fed_chs_e5_qsgd_seed", t_scan_q, t_seed_q, "seed_loop")
+
+    # --- vmapped 4-seed sweep vs 4 sequential looped runs (per-run time) --
+    seeds = (0, 1, 2, 3)
+    cfg = grad_cfg()
+    t_sweep = _steady(run_sweep, task, cfg, seeds)
+
+    def _sequential():
+        for s in seeds:
+            run_fed_chs(task, dataclasses.replace(cfg, seed=s, scan_rounds=False))
+
+    t_seq = _steady(_sequential)
+    speed = t_seq / t_sweep
+    rows.append(("sweep_fed_chs_4seeds", t_sweep / len(seeds) / R * 1e6,
+                 f"{speed:.2f}x_vs_sequential_looped"))
+    print(f"{'sweep_fed_chs_4seeds':32s} {t_seq / len(seeds):8.2f} s/run -> "
+          f"{t_sweep / len(seeds):6.2f} s/run  ({speed:.2f}x)")
+    return rows
+
+
 def run(quick: bool = True, rounds: int = 8) -> list[tuple[str, float, str]]:
     """benchmarks/run.py suite entry: returns (name, us_per_round, speedup) rows."""
     if rounds < 1:
@@ -163,10 +251,12 @@ def run(quick: bool = True, rounds: int = 8) -> list[tuple[str, float, str]]:
 
     results = {}
 
-    # --- Hier-Local-QSGD global rounds -----------------------------------
+    # --- Hier-Local-QSGD global rounds (scan_rounds=False: these arms
+    # measure the per-round engine vs the seed loop; the whole-run scan layer
+    # is measured separately below) ----------------------------------------
     hier_cfg = lambda rounds: HierLocalQSGDConfig(  # noqa: E731
         rounds=rounds, local_steps=scale.local_steps, local_epochs=5,
-        qsgd_levels=16, eval_every=10_000)
+        qsgd_levels=16, eval_every=10_000, scan_rounds=False)
     seed_style_hier(task, hier_cfg(1))                      # compile/warm
     t_seed = _timed(seed_style_hier, task, hier_cfg(R))
     run_hier_local_qsgd(task, hier_cfg(1))                  # compile/warm
@@ -176,7 +266,7 @@ def run(quick: bool = True, rounds: int = 8) -> list[tuple[str, float, str]]:
     # --- Fed-CHS E=5 + QSGD rounds ---------------------------------------
     chs_cfg = lambda rounds: FedCHSConfig(  # noqa: E731
         rounds=rounds, local_steps=scale.local_steps, local_epochs=5,
-        qsgd_levels=16, eval_every=10_000)
+        qsgd_levels=16, eval_every=10_000, scan_rounds=False)
     seed_style_fed_chs(task, chs_cfg(1))
     t_seed = _timed(seed_style_fed_chs, task, chs_cfg(R))
     run_fed_chs(task, chs_cfg(1))
@@ -191,10 +281,15 @@ def run(quick: bool = True, rounds: int = 8) -> list[tuple[str, float, str]]:
     worst = min(a / b for a, b in results.values())
     print(f"\nworst-case speedup: {worst:.1f}x "
           f"({'meets' if worst >= 2 else 'BELOW'} the >=2x acceptance bar)")
-    return [
+    rows = [
         (f"engine_{name}", b * 1e6, f"{a / b:.1f}x_vs_seed_loop")
         for name, (a, b) in results.items()
     ]
+
+    print(f"\nwhole-run execution — {'edge' if quick else 'quick'}-scale task, "
+          f"200 rounds, steady-state (compile excluded)")
+    rows += whole_run(quick=quick)
+    return rows
 
 
 def main() -> None:

@@ -1,8 +1,11 @@
 """Regenerate EXPERIMENTS.md §Dry-run and §Roofline from experiments/dryrun/*.json,
-splice in the hand-authored §Perf log from experiments/perf_log.md, and the
+the §Benchmarks table from BENCH_core.json (written by `benchmarks/run.py
+--json`), the hand-authored §Perf log from experiments/perf_log.md, and the
 §Participation table written by `benchmarks/fig_participation.py`
 (experiments/participation.md).  Sections whose inputs are absent are
-omitted rather than rendered empty.
+omitted rather than rendered empty, and a malformed/partial suite output
+(e.g. an interrupted benchmark run) skips that section with a warning
+instead of aborting the whole regeneration.
 
   PYTHONPATH=src:. python scripts/make_experiments_md.py
 """
@@ -11,22 +14,34 @@ from __future__ import annotations
 import glob
 import json
 import os
+import sys
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
 PERF_LOG = os.path.join(ROOT, "experiments", "perf_log.md")
 PARTICIPATION = os.path.join(ROOT, "experiments", "participation.md")
+BENCH_JSON = os.path.join(ROOT, "BENCH_core.json")
 OUT = os.path.join(ROOT, "EXPERIMENTS.md")
 
 SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
 
 
+def _warn(msg):
+    print(f"warning: {msg}", file=sys.stderr)
+
+
 def load():
     recs = []
     for fn in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
-        with open(fn) as f:
-            recs.append(json.load(f))
-    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER[r["shape"]], r["mesh"],
+        try:
+            with open(fn) as f:
+                rec = json.load(f)
+            rec["arch"], rec["shape"], rec["mesh"]  # required keys
+        except (json.JSONDecodeError, KeyError, OSError) as e:
+            _warn(f"skipping malformed dryrun record {os.path.basename(fn)}: {e!r}")
+            continue
+        recs.append(rec)
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 99), r["mesh"],
                              str(r.get("variant"))))
     return recs
 
@@ -131,6 +146,35 @@ def bottleneck_notes(recs):
     return "\n".join(lines)
 
 
+def bench_section():
+    """§Benchmarks from BENCH_core.json (benchmarks/run.py --json)."""
+    if not os.path.exists(BENCH_JSON):
+        return ""
+    with open(BENCH_JSON) as f:
+        payload = json.load(f)
+    mode = "quick" if payload.get("quick", True) else "--full"
+    lines = [
+        "## §Benchmarks",
+        "",
+        f"Machine-readable results from `benchmarks/run.py --json` ({mode} "
+        "mode, 2-core CPU container; BENCH_core.json is also uploaded as a "
+        "CI artifact by the perf-smoke job, so the perf trajectory is "
+        "tracked across PRs).  `scanned_*` rows are the whole-run "
+        "`lax.scan` executor vs the looped driver / seed-style loop at 200 "
+        "rounds, steady-state.",
+        "",
+        "| suite | row | per-call | derived |",
+        "|---|---|---|---|",
+    ]
+    for suite, data in payload.get("suites", {}).items():
+        for row in data.get("rows", []):
+            us = row.get("us_per_call", 0.0)
+            per = f"{us / 1e3:.1f} ms" if us >= 1e3 else f"{us:.1f} µs"
+            lines.append(f"| {suite} | {row.get('name', '?')} | {per} | "
+                         f"{row.get('derived', '')} |")
+    return "\n".join(lines)
+
+
 def _read(path):
     if os.path.exists(path):
         with open(path) as f:
@@ -143,15 +187,27 @@ def main():
     sections = [
         "# EXPERIMENTS — Fed-CHS reproduction + multi-pod dry-run + roofline",
         "(generated by scripts/make_experiments_md.py from experiments/dryrun/*.json; "
+        "§Benchmarks from BENCH_core.json, written by `benchmarks/run.py --json`; "
         "§Perf from experiments/perf_log.md; §Participation from "
         "experiments/participation.md, written by `benchmarks/run.py --only "
         "participation`; paper-claims validation from benchmarks — see "
         "bench_output.txt)",
     ]
+    # each section tolerates its own broken/partial input: a failed suite
+    # must not block regenerating the rest of EXPERIMENTS.md
+    builders = []
     if recs:
-        sections += [dryrun_section(recs), roofline_section(recs),
-                     bottleneck_notes(recs)]
-    sections += [s for s in (_read(PARTICIPATION), _read(PERF_LOG)) if s]
+        builders += [lambda: dryrun_section(recs), lambda: roofline_section(recs),
+                     lambda: bottleneck_notes(recs)]
+    builders += [bench_section, lambda: _read(PARTICIPATION), lambda: _read(PERF_LOG)]
+    for build in builders:
+        try:
+            section = build()
+        except Exception as e:  # noqa: BLE001 — skip, don't abort
+            _warn(f"skipping section {getattr(build, '__name__', 'lambda')}: {e!r}")
+            continue
+        if section:
+            sections.append(section)
     with open(OUT, "w") as f:
         f.write("\n\n".join(sections) + "\n")
     print(f"wrote {OUT} ({len(recs)} dryrun records)")

@@ -14,7 +14,8 @@ from repro.core.scheduler import (
     RandomWalkScheduler,
     RingScheduler,
 )
-from repro.core.simulation import FLTask, RunResult, evaluate
+from repro.core.simulation import FLTask, RunRecorder, RunResult, evaluate
+from repro.core.sweep import run_sweep
 from repro.core.topology import Topology, make_topology
 
 __all__ = [
@@ -32,7 +33,9 @@ __all__ = [
     "RandomWalkScheduler",
     "RingScheduler",
     "FLTask",
+    "RunRecorder",
     "RunResult",
+    "run_sweep",
     "evaluate",
     "local_sgd",
     "multi_client_local_sgd",

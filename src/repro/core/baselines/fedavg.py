@@ -16,6 +16,14 @@ their opt state frozen, and the D_n weights renormalize over the reporters.
 A round with zero reporters is skipped outright.  The default
 `FullParticipation`/None path is bit-identical to the pre-participation
 stack.
+
+Whole-run execution: with `scan_rounds=True` (the default) the run executes
+through `engine.run_scan` — per-round masks/gammas and PRNG subkeys are
+precomputed, batches staged `chunk_rounds` rounds at a time, and every chunk
+is one `lax.scan` over rounds; zero-reporter rounds are skipped by the scan
+itself and the ledger is reconstructed after the run
+(`CommLedger.materialize`).  Bit-identical to the looped path at fixed seed
+(tests/test_engine_parity.py).
 """
 from __future__ import annotations
 
@@ -27,12 +35,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.channels import Channel, DenseChannel, make_channel
-from repro.core.engine import RoundEngine, split_chain
+from repro.core.engine import (
+    RoundEngine,
+    ScanPlan,
+    run_scan,
+    scan_delta_body,
+    split_chain,
+)
 from repro.core.ledger import CommLedger
-from repro.core.simulation import FLTask, RunResult
+from repro.core.simulation import FLTask, RunRecorder, RunResult
+from repro.data.sources import scatter_put, stage_chunk
 from repro.optim.local import LocalOpt
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
-from repro.part import Sampler, is_full_participation, participation_mask
+from repro.part import (
+    Sampler,
+    is_full_participation,
+    participation_mask,
+    schedule_participants,
+    stack_masks,
+)
 
 
 @dataclasses.dataclass
@@ -47,11 +68,15 @@ class FedAvgConfig:
     sampler: Sampler | None = None     # per-round participation (repro.part);
                                        # None / FullParticipation = seed-parity path
     track_events: bool = True          # False: bits only, no CommEvent stream
+    scan_rounds: bool = True           # whole-run lax.scan executor
+    chunk_rounds: int = 32             # scanned mode: rounds staged per chunk
     seed: int = 0
     schedule: Schedule | None = None
 
 
 def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
+    if config.scan_rounds:
+        return _run_fedavg_scanned(task, config)
     task.reset_loaders(config.seed)
     K = config.local_steps
     sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
@@ -72,7 +97,7 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
     up_bits = channel.message_bits(d)
 
-    rounds_log, acc_log, loss_log = [], [], []
+    recorder = RunRecorder(task, config.rounds, config.eval_every)
     n = task.num_clients
     full_part = is_full_participation(config.sampler)
     all_clients = list(range(n))
@@ -116,11 +141,113 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
         # else: nobody reported — the PS round is skipped outright (zero
         # traffic, params unchanged)
         engine.end_round(ledger, t)
+        recorder.record(t, params, losses)
 
-        if t % config.eval_every == 0 or t == config.rounds - 1:
-            rounds_log.append(t)
-            acc_log.append(task.evaluate(params))
-            loss_log.append(float(jnp.mean(losses)))
+    return recorder.result("fedavg", ledger, params)
 
-    return RunResult("fedavg", rounds_log, acc_log, loss_log, ledger, params,
-                     metric_mode=task.metric_mode)
+
+# --------------------------------------------------------------------------
+# scanned whole-run path
+# --------------------------------------------------------------------------
+
+
+def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
+    """Whole-run `ScanPlan` + deferred glue (see `fed_chs._fed_chs_scan_plan`)."""
+    source.reset(config.seed)
+    K = config.local_steps
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = np.asarray([[sched_fn(k) for k in range(K)]], dtype=np.float32)  # (1, K)
+
+    params = task.init_params()
+    d = task.num_params()
+    channel = (
+        config.channel
+        if config.channel is not None
+        else make_channel(config.qsgd_levels, config.bits_per_param)
+    )
+    engine = RoundEngine(task.model, channel, local_opt=config.local_opt)
+
+    R = config.rounds
+    n = task.num_clients
+    full_part = is_full_participation(config.sampler)
+    all_clients = list(range(n))
+    parts = schedule_participants(config.sampler, R, all_clients)
+    trained = np.array([len(p) > 0 for p in parts])
+
+    mask_r = stack_masks(all_clients, parts)
+    gammas_r = np.zeros((R, n), np.float32)
+    gw = task.global_weights()
+    for t in np.flatnonzero(trained):
+        if full_part:
+            gammas_r[t] = gw
+        else:
+            w = gw * mask_r[t]
+            gammas_r[t] = (w / w.sum()).astype(np.float32)
+
+    subs_r = np.zeros((R, 1, 2), np.uint32)
+    if channel.stochastic:
+        n_tr = int(trained.sum())
+        if n_tr:
+            _, flat = split_chain(jax.random.PRNGKey(config.seed + 1), n_tr)
+            subs_r[trained] = np.asarray(flat).reshape(n_tr, 1, 2)
+
+    def stage(idxs):
+        C = len(idxs)
+        cs = list(range(C))  # every trained round stages every client
+        batch = stage_chunk(
+            source,
+            [(i, K * C,
+              scatter_put((cs, 0, i), lambda dl: dl.reshape(C, K, *dl.shape[1:])))
+             for i in range(n)],
+            lambda a: (C, 1, n, K) + a.shape[1:],
+        )
+        return {
+            "batch": batch,
+            "gammas": gammas_r[idxs],
+            "mask": mask_r[idxs],
+            "subs": subs_r[idxs],
+        }
+
+    body = scan_delta_body(engine.model, channel, engine.local_opt)
+    plan = ScanPlan(
+        body=body,
+        carry=(params, engine.init_opt_state(params, n)),
+        consts={"lrs": jnp.asarray(lrs)},
+        stage=stage,
+        trained=trained,
+        rounds=R,
+        eval_every=config.eval_every,
+        chunk_rounds=config.chunk_rounds,
+    )
+
+    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    up_bits = channel.message_bits(d)
+
+    def traffic(track_events: bool):
+        for t in range(R):
+            entries = []
+            p = parts[t]
+            if p:
+                if track_events:
+                    for i in p:
+                        entries.append(("ps_to_client", down_bits, 1, 0,
+                                        "ps", f"client:{i}"))
+                        entries.append(("client_to_ps", up_bits, 1, 0,
+                                        f"client:{i}", "ps"))
+                else:
+                    entries.append(("ps_to_client", down_bits, len(p), 0, None, None))
+                    entries.append(("client_to_ps", up_bits, len(p), 0, None, None))
+            yield t, entries
+
+    return plan, (lambda c: c[0]), traffic
+
+
+def _run_fedavg_scanned(task: FLTask, config: FedAvgConfig) -> RunResult:
+    plan, params_of, traffic = _fedavg_scan_plan(task, task.source, config)
+    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    carry = run_scan(
+        plan, lambda t, c, losses, _lt: recorder.record(t, params_of(c), losses)
+    )
+    ledger = CommLedger(track_events=config.track_events)
+    ledger.materialize(traffic(config.track_events))
+    return recorder.result("fedavg", ledger, params_of(carry))

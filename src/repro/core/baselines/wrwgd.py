@@ -16,6 +16,12 @@ neighbors available *next* round (EdgeFLow-style: the walk skips dead
 edges; if every neighbor is down the draw falls back to the full neighbor
 set and the receiver passes through).  The default `FullParticipation`/None
 path is bit-identical to the pre-participation stack.
+
+Whole-run execution: the walk itself is host-side numpy rng — deterministic
+given (seed, topology, sampler) — so with `scan_rounds=True` (default) the
+entire visit sequence is precomputed and the training rounds run as chunked
+`lax.scan`s over rounds (`engine.run_scan`); pass-through visits are skipped
+by the scan and consume no data draws, exactly like the looped driver.
 """
 from __future__ import annotations
 
@@ -26,10 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.channels import DenseChannel
-from repro.core.engine import RoundEngine
+from repro.core.engine import RoundEngine, ScanPlan, run_scan, scan_grad_body
 from repro.core.ledger import CommLedger
-from repro.core.simulation import FLTask, RunResult
+from repro.core.simulation import FLTask, RunRecorder, RunResult
 from repro.core.topology import make_topology
+from repro.data.sources import scatter_put, stage_chunk
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 from repro.part import Sampler, is_full_participation
 
@@ -44,21 +51,51 @@ class WRWGDConfig:
     sampler: Sampler | None = None    # per-round participation (repro.part);
                                       # None / FullParticipation = seed-parity path
     track_events: bool = True          # False: bits only, no CommEvent stream
+    scan_rounds: bool = True           # whole-run lax.scan executor
+    chunk_rounds: int = 32             # scanned mode: rounds staged per chunk
     eval_every: int = 10
     bits_per_param: int = 32
     seed: int = 0
     schedule: Schedule | None = None
 
 
+def _precompute_walk(task: FLTask, config: WRWGDConfig):
+    """Replay the walk's host rng draw-for-draw: returns (visits (R,),
+    trains (R,) bool, hops list of (sender, receiver)).  The looped driver
+    issues exactly these `rng.integers`/`rng.choice` calls."""
+    topo = make_topology(config.topology, task.num_clients, seed=config.topology_seed)
+    rng = np.random.default_rng(config.seed)
+    current = int(rng.integers(task.num_clients))
+    full_part = is_full_participation(config.sampler)
+
+    visits, trains, hops = [], [], []
+    for t in range(config.rounds):
+        visits.append(current)
+        trains.append(
+            full_part or bool(config.sampler.participants(t, [current]))
+        )
+        nbrs = list(topo.neighbors(current))
+        if not full_part:
+            live = config.sampler.participants(t + 1, nbrs)
+            nbrs = live or nbrs
+        if config.weighting == "data_size":
+            w = task.client_sizes[nbrs]
+            w = w / w.sum()
+        else:
+            w = np.full(len(nbrs), 1.0 / len(nbrs))
+        nxt = int(rng.choice(nbrs, p=w))
+        hops.append((current, nxt))
+        current = nxt
+    return np.asarray(visits), np.asarray(trains), hops
+
+
 def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
+    if config.scan_rounds:
+        return _run_wrwgd_scanned(task, config)
     task.reset_loaders(config.seed)
     K = config.local_steps
     sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
     lrs = jnp.asarray([sched_fn(k) for k in range(K)], dtype=jnp.float32)
-
-    topo = make_topology(config.topology, task.num_clients, seed=config.topology_seed)
-    rng = np.random.default_rng(config.seed)
-    current = int(rng.integers(task.num_clients))
 
     params = task.init_params()
     d = task.num_params()
@@ -68,42 +105,92 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
     hop_bits = channel.message_bits(d)
     gamma_one = jnp.ones((1,), jnp.float32)
 
-    full_part = is_full_participation(config.sampler)
-    rounds_log, acc_log, loss_log = [], [], []
+    # the walk is pure host rng, independent of the training state — both
+    # paths consume the ONE precomputed replay (the walk rng and the data
+    # loaders are separate streams, so hoisting the draws changes nothing)
+    visits, trains_r, hops = _precompute_walk(task, config)
+    recorder = RunRecorder(task, config.rounds, config.eval_every)
     losses = jnp.full((1,), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
-        trains = full_part or bool(config.sampler.participants(t, [current]))
-        if trains:
+        if trains_r[t]:
             batch = jax.tree.map(
-                lambda a: a[:, None], task.sample_client_batches(current, K)
+                lambda a: a[:, None], task.sample_client_batches(int(visits[t]), K)
             )  # (K, 1, B, ...): a walk step is a 1-client cluster running Eq.(5)
             params, losses = engine.grad_round(params, batch, gamma_one, lrs)
         # else: the visited client is down — pass-through, the model is
-        # forwarded untouched (and the round consumes no data or rng draws
-        # beyond the neighbor choice below)
-
-        nbrs = list(topo.neighbors(current))
-        if not full_part:
-            # the walk skips edges that will be dead next round; when every
-            # neighbor is down the model still has to move, so fall back to
-            # the full set (the receiver then passes through)
-            live = config.sampler.participants(t + 1, nbrs)
-            nbrs = live or nbrs
-        if config.weighting == "data_size":
-            w = task.client_sizes[nbrs]
-            w = w / w.sum()
-        else:
-            w = np.full(len(nbrs), 1.0 / len(nbrs))
-        prev = current
-        current = int(rng.choice(nbrs, p=w))
+        # forwarded untouched (and the round consumes no data draws)
+        prev, nxt = hops[t]
         ledger.record("client_to_client", hop_bits, round=t, phase=0,
-                      sender=f"client:{prev}", receiver=f"client:{current}")
+                      sender=f"client:{prev}", receiver=f"client:{nxt}")
         engine.end_round(ledger, t)
+        recorder.record(t, params, losses)
 
-        if t % config.eval_every == 0 or t == config.rounds - 1:
-            rounds_log.append(t)
-            acc_log.append(task.evaluate(params))
-            loss_log.append(float(jnp.mean(losses)))
+    return recorder.result("wrwgd", ledger, params)
 
-    return RunResult("wrwgd", rounds_log, acc_log, loss_log, ledger, params,
-                     metric_mode=task.metric_mode)
+
+# --------------------------------------------------------------------------
+# scanned whole-run path
+# --------------------------------------------------------------------------
+
+
+def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
+    """Whole-run `ScanPlan` + deferred glue (see `fed_chs._fed_chs_scan_plan`)."""
+    source.reset(config.seed)
+    K = config.local_steps
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = np.asarray([sched_fn(k) for k in range(K)], dtype=np.float32)
+
+    params = task.init_params()
+    d = task.num_params()
+    channel = DenseChannel(config.bits_per_param)
+    engine = RoundEngine(task.model, channel)
+    visits, trains, hops = _precompute_walk(task, config)
+    R = config.rounds
+    ones = np.ones((R, 1), np.float32)
+
+    def stage(idxs):
+        C = len(idxs)
+        occ: dict[int, list[int]] = {}
+        for c, t in enumerate(idxs):
+            occ.setdefault(int(visits[t]), []).append(c)
+        batch = stage_chunk(
+            source,
+            [(client, K * len(cs),
+              scatter_put((cs, slice(None), 0),
+                          lambda dl, n=len(cs): dl.reshape(n, K, *dl.shape[1:])))
+             for client, cs in occ.items()],
+            lambda a: (C, K, 1) + a.shape[1:],
+        )
+        return {"batch": batch, "gammas": ones[idxs]}
+
+    plan = ScanPlan(
+        body=scan_grad_body(engine.model),
+        carry=params,
+        consts={"lrs": jnp.asarray(lrs)},
+        stage=stage,
+        trained=trains,
+        rounds=R,
+        eval_every=config.eval_every,
+        chunk_rounds=config.chunk_rounds,
+    )
+
+    hop_bits = channel.message_bits(d)
+
+    def traffic(track_events: bool):
+        del track_events  # one metered hop per round either way
+        for t, (prev, nxt) in enumerate(hops):
+            yield t, [("client_to_client", hop_bits, 1, 0,
+                       f"client:{prev}", f"client:{nxt}")]
+
+    return plan, (lambda c: c), traffic
+
+
+def _run_wrwgd_scanned(task: FLTask, config: WRWGDConfig) -> RunResult:
+    plan, params_of, traffic = _wrwgd_scan_plan(task, task.source, config)
+    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    carry = run_scan(
+        plan, lambda t, c, losses, _lt: recorder.record(t, params_of(c), losses)
+    )
+    ledger = CommLedger(track_events=config.track_events)
+    ledger.materialize(traffic(config.track_events))
+    return recorder.result("wrwgd", ledger, params_of(carry))

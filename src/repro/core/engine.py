@@ -84,6 +84,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comm.channels import Channel, DenseChannel
 from repro.core.ledger import CommLedger
@@ -201,15 +202,11 @@ def _freeze_masked(mask: jax.Array, new_state: PyTree, old_state: PyTree) -> PyT
 
 
 @functools.cache
-def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
-    """Delta mode with a per-client participation mask (n,): masked-out
-    clients contribute zero delta (their slot is zeroed before compression),
-    are excluded from the loss average, and keep their `LocalOpt` state
-    frozen in place.  `gammas` must already be renormalized over the
-    participating set (zero on masked slots).  Otherwise identical to
-    `_delta_round_fn`; the unmasked function stays untouched so the default
-    full-participation path is bit-identical to the pre-participation stack.
-    """
+def _masked_round_body(model: FedModel, channel: Channel, opt: LocalOpt):
+    """The pure (unjitted) masked delta round — shared verbatim by the
+    per-round compiled function (`_masked_delta_round_fn`) and the whole-run
+    scan bodies below, so the looped and scanned paths trace the exact same
+    computation."""
     multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
     def round_fn(params, opt_state, batch, gammas, mask, lrs, subs):
@@ -233,12 +230,26 @@ def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
         )
         return params, opt_state, losses
 
-    return _jit_round(round_fn)
+    return round_fn
 
 
 @functools.cache
-def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
-    """One 3-tier HFL global round, vmapped over all M clusters at once.
+def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
+    """Delta mode with a per-client participation mask (n,): masked-out
+    clients contribute zero delta (their slot is zeroed before compression),
+    are excluded from the loss average, and keep their `LocalOpt` state
+    frozen in place.  `gammas` must already be renormalized over the
+    participating set (zero on masked slots).  Otherwise identical to
+    `_delta_round_fn`; the unmasked function stays untouched so the default
+    full-participation path is bit-identical to the pre-participation stack.
+    """
+    return _jit_round(_masked_round_body(model, channel, opt))
+
+
+@functools.cache
+def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
+    """Pure (unjitted) 3-tier HFL global round, vmapped over all M clusters at
+    once — shared by `_multi_round_fn` and the whole-run scan body.
     batch leaves: (J, M, n_max, E, B, ...), opt_state leaves: (M, n_max, ...),
     gammas/mask: (M, n_max), es_weights: (M,), lrs: (J, E), subs: (J, M, 2),
     es_subs: (M, 2).  Padded client slots (mask == 0) carry zero gamma
@@ -288,7 +299,13 @@ def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt:
         agg = jax.tree.map(lambda x_: jnp.einsum("m,m...->...", es_weights, x_), es_deltas)
         return tree_add(params, agg), opt_state, losses
 
-    return _jit_round(round_fn)
+    return round_fn
+
+
+@functools.cache
+def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
+    """Compiled `_multi_round_body` (the per-round 3-tier HFL entry point)."""
+    return _jit_round(_multi_round_body(model, channel, es_channel, opt))
 
 
 # --------------------------------------------------------------------------
@@ -374,3 +391,238 @@ class RoundEngine:
         sees a complete per-round history regardless of algorithm.
         """
         ledger.snapshot(round_idx)
+
+
+# --------------------------------------------------------------------------
+# whole-run execution: lax.scan over rounds
+# --------------------------------------------------------------------------
+#
+# The looped drivers pay per-round host costs: one jit dispatch, per-round
+# batch `jnp.asarray` transfers, scheduler advances, and ledger appends.
+# `run_scan` removes all of them from the hot loop: the driver precomputes
+# the whole run's schedule host-side (visit order, participation masks, PRNG
+# subkeys), stages batches a *chunk* of rounds at a time, and executes each
+# chunk as one jitted `lax.scan` over rounds.  The only host<->device traffic
+# between eval points is the chunk's single explicit `device_put`; communica-
+# tion accounting is deferred to `CommLedger.materialize` after the run.
+#
+# Rounds in which nothing trains (an all-dark cluster, a zero-reporter FedAvg
+# round, a pass-through walk visit) are pure no-ops on the model state, so
+# the scan simply *skips* them: it runs over the trained rounds only, and the
+# host-side schedule maps eval/ledger bookkeeping back to global round
+# indices.  That keeps the scan body mask-free of `trained` flags and means
+# dark rounds consume neither data draws nor PRNG subkeys — exactly the
+# looped drivers' behavior.
+#
+# Scan bodies close over the SAME cached pure round bodies the per-round
+# compiled functions use (`_masked_round_body`, `_multi_round_body`,
+# `oracles.grad_phase`), so looped and scanned runs trace identical per-round
+# computations: model params are bit-identical at fixed seed (pinned by
+# tests/test_engine_parity.py); only the *reported* loss scalars may differ
+# by ~1 ulp from reduction fusion across the scan boundary.
+
+
+@functools.cache
+def scan_grad_body(model: FedModel):
+    """Whole-run body, Eq. (5) grad mode.  carry: params.
+    x: {"batch": (K, n_max, B, ...), "gammas": (n_max,)} (padded client slots
+    carry zero gamma weight — exact-zero contributions).  consts: {"lrs": (K,)}.
+    Emits the per-step gamma-weighted losses (K,)."""
+    phase = grad_phase(model)
+
+    def body(params, x, consts):
+        params, losses = phase(params, x["batch"], x["gammas"], consts["lrs"])
+        return params, losses
+
+    return body
+
+
+@functools.cache
+def scan_delta_body(model: FedModel, channel: Channel, opt: LocalOpt):
+    """Whole-run body, delta mode over one fixed client set (FedAvg).
+    carry: (params, opt_state (n, ...)).  x: {"batch": (J, n, E, B, ...),
+    "gammas"/"mask": (n,), "subs": (J, 2)}.  consts: {"lrs": (J, E)}.
+    Emits per-interaction masked mean losses (J,)."""
+    round_fn = _masked_round_body(model, channel, opt)
+
+    def body(carry, x, consts):
+        params, opt_state = carry
+        params, opt_state, losses = round_fn(
+            params, opt_state, x["batch"], x["gammas"], x["mask"], consts["lrs"], x["subs"]
+        )
+        return (params, opt_state), losses
+
+    return body
+
+
+@functools.cache
+def scan_cluster_delta_body(model: FedModel, channel: Channel, opt: LocalOpt):
+    """Whole-run body, delta mode with a per-round active cluster (Fed-CHS).
+    carry: (params, opt_states (M, n_max, ...)) — the active cluster's rows
+    are gathered/scattered by the scanned cluster index x["m"].
+    x adds "m": () int32 to the `scan_delta_body` inputs (all padded to
+    n_max width)."""
+    round_fn = _masked_round_body(model, channel, opt)
+
+    def body(carry, x, consts):
+        params, opt_all = carry
+        m = x["m"]
+        s_m = jax.tree.map(
+            lambda leaf: jax.lax.dynamic_index_in_dim(leaf, m, 0, keepdims=False), opt_all
+        )
+        params, new_s, losses = round_fn(
+            params, s_m, x["batch"], x["gammas"], x["mask"], consts["lrs"], x["subs"]
+        )
+        opt_all = jax.tree.map(
+            lambda leaf, ns: jax.lax.dynamic_update_index_in_dim(leaf, ns, m, 0),
+            opt_all,
+            new_s,
+        )
+        return (params, opt_all), losses
+
+    return body
+
+
+@functools.cache
+def scan_multi_body(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
+    """Whole-run body, 3-tier HFL global rounds (Hier-Local-QSGD).
+    carry: (params, opt_state (M, n_max, ...)).  x: {"batch": (J, M, n_max,
+    E, B, ...), "gammas"/"mask": (M, n_max), "es_weights": (M,), "subs":
+    (J, M, 2), "es_subs": (M, 2)}.  Emits losses (J, M)."""
+    round_fn = _multi_round_body(model, channel, es_channel, opt)
+
+    def body(carry, x, consts):
+        params, opt_state = carry
+        params, opt_state, losses = round_fn(
+            params, opt_state, x["batch"], x["gammas"], x["mask"], x["es_weights"],
+            consts["lrs"], x["subs"], x["es_subs"],
+        )
+        return (params, opt_state), losses
+
+    return body
+
+
+@functools.cache
+def _chunk_of(body):
+    """The pure chunk function: scan `body` over a stacked-rounds xs pytree.
+    Signature: (carry, xs, consts) -> (carry, stacked per-round losses)."""
+
+    def chunk(carry, xs, consts):
+        return jax.lax.scan(lambda c, x: body(c, x, consts), carry, xs)
+
+    return chunk
+
+
+@functools.cache
+def scan_chunk_fn(body):
+    """jit(chunk) — the whole-run hot loop.  The carry is donated where the
+    backend supports it (run-level buffer donation: params/opt-state buffers
+    are reused across chunks)."""
+    return _jit_round(_chunk_of(body))
+
+
+@functools.cache
+def sweep_chunk_fn(body):
+    """`scan_chunk_fn` vmapped over a leading seed axis on carry and xs
+    (consts are shared) — one dispatch advances every seed of a sweep."""
+    return _jit_round(jax.vmap(_chunk_of(body), in_axes=(0, 0, None)))
+
+
+def eval_rounds(rounds: int, eval_every: int) -> list[int]:
+    """The rounds every driver logs at: t % eval_every == 0, plus the final
+    round — the exact looped-driver cadence."""
+    ev = [t for t in range(rounds) if t % eval_every == 0]
+    if rounds - 1 not in ev:
+        ev.append(rounds - 1)
+    return ev
+
+
+@dataclasses.dataclass
+class ScanPlan:
+    """A precomputed whole-run schedule for `run_scan`.
+
+    `trained` marks the rounds that actually train (all of them under full
+    participation); the scan runs over those only.  `stage(idxs)` returns the
+    stacked per-round scan inputs (numpy leaves, leading axis len(idxs)) for
+    the given ascending *global* round indices — it is the only host work
+    left in the loop, and `run_scan` moves its output to the device with one
+    explicit `device_put` per chunk.
+    """
+
+    body: Any                 # a scan_*_body (hashable: keys the jit cache)
+    carry: PyTree
+    consts: PyTree
+    stage: Any                # (np.ndarray of round idxs) -> xs pytree
+    trained: Any              # (rounds,) bool numpy array
+    rounds: int
+    eval_every: int
+    chunk_rounds: int = 32
+
+
+def run_scan(plan: ScanPlan, record) -> PyTree:
+    """Execute a whole run as chunked `lax.scan`s over its trained rounds.
+
+    Chunks are cut at eval rounds (and at `chunk_rounds` to bound staged-
+    batch memory), so between eval points the only host<->device traffic is
+    the per-chunk staged-input `device_put`.  `record(t, carry, losses, t_l)`
+    fires at every eval round t with the carry after round t, the last
+    trained round's on-device loss row (None if nothing trained yet), and
+    that round's global index t_l.  Returns the final carry.
+
+    Compile cost: each DISTINCT chunk length compiles its own scan program
+    (jit's shape-keyed cache).  With full participation the segmentation
+    yields at most ~3 lengths (1, the eval_every/chunk_rounds period, and a
+    remainder); participation churn can produce more (trained-round counts
+    vary per segment, bounded by chunk_rounds).  The cache is per-process and
+    keyed on the cached scan body, so repeated runs of the same shapes — the
+    sweep/benchmark pattern — compile nothing after the first.  Padding
+    chunks to one fixed length would cap this at a single compile but would
+    require staging dummy batches for pad rounds, breaking the invariant
+    that skipped rounds consume no data draws — we take the extra compiles.
+    """
+    assert plan.chunk_rounds >= 1
+    return _run_chunks(scan_chunk_fn(plan.body), plan.carry, plan.stage, plan,
+                       record, last_slice=lambda leaf: leaf[-1])
+
+
+def run_scan_sweep(plans: list[ScanPlan], record) -> PyTree:
+    """Run several same-config, different-seed `ScanPlan`s as ONE vmapped
+    scan over a leading seed axis.  All plans must share body/consts/trained
+    schedule (same config, full participation); per-seed divergence lives in
+    the stacked carries and staged inputs (visit orders, PRNG subkeys, data
+    draws).  `record(t, carry, losses, t_l)` sees seed-stacked carry/losses.
+    Returns the final stacked carry.
+    """
+    p0 = plans[0]
+    assert all(p.body is p0.body for p in plans), "sweep plans must share a body"
+    assert all(np.array_equal(np.asarray(p.trained), np.asarray(p0.trained)) for p in plans), \
+        "sweep plans must share the trained-round schedule (full participation)"
+    carry = jax.tree.map(lambda *ls: jnp.stack(ls), *[p.carry for p in plans])
+
+    def stage(idxs):
+        return jax.tree.map(lambda *ls: np.stack(ls), *[p.stage(idxs) for p in plans])
+
+    return _run_chunks(sweep_chunk_fn(p0.body), carry, stage, p0,
+                       record, last_slice=lambda leaf: leaf[:, -1])
+
+
+def _run_chunks(chunk, carry, stage, plan: ScanPlan, record, *, last_slice) -> PyTree:
+    """The shared chunked-execution loop behind `run_scan`/`run_scan_sweep`:
+    segment the trained rounds at eval boundaries (capped at `chunk_rounds`),
+    stage + `device_put` + execute each chunk, track the last trained round's
+    on-device loss row (`last_slice` absorbs the sweep's leading seed axis),
+    and fire `record` at every eval round."""
+    trained_idx = np.flatnonzero(np.asarray(plan.trained))
+    last_losses, last_t = None, None
+    pos = 0
+    for t_e in eval_rounds(plan.rounds, plan.eval_every):
+        n_t = int(np.searchsorted(trained_idx, t_e, side="right"))
+        while pos < n_t:
+            take = min(plan.chunk_rounds, n_t - pos)
+            idxs = trained_idx[pos : pos + take]
+            carry, losses = chunk(carry, jax.device_put(stage(idxs)), plan.consts)
+            last_losses = jax.tree.map(last_slice, losses)
+            last_t = int(idxs[-1])
+            pos += take
+        record(t_e, carry, last_losses, last_t)
+    return carry

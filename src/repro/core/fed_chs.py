@@ -47,15 +47,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.channels import Channel, DenseChannel, make_channel
-from repro.core.engine import RoundEngine, split_chain
+from repro.core.engine import (
+    RoundEngine,
+    ScanPlan,
+    run_scan,
+    scan_cluster_delta_body,
+    scan_grad_body,
+    split_chain,
+)
 from repro.core.ledger import CommLedger
 from repro.core.scheduler import (
     AvailabilityAwareScheduler,
     FedCHSScheduler,
     LatencyAwareScheduler,
 )
-from repro.core.simulation import FLTask, RunResult
+from repro.core.simulation import FLTask, RunRecorder, RunResult
 from repro.core.topology import make_topology
+from repro.data.sources import scatter_put, stage_chunk
 from repro.optim.local import LocalOpt, PlainSGD
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 from repro.part import Sampler, is_full_participation, participation_mask
@@ -89,11 +97,57 @@ class FedCHSConfig:
                                            # (AvailabilityAwareScheduler)
     track_events: bool = True              # False: bits only, no CommEvent stream
                                            # (saves memory at --full scale)
+    scan_rounds: bool = True               # whole-run lax.scan executor (falls back
+                                           # to the looped path under `dynamic`,
+                                           # which needs per-round host decisions)
+    chunk_rounds: int = 32                 # scanned mode: rounds staged/scanned per
+                                           # chunk (bounds staged-batch memory)
     seed: int = 0
     schedule: Schedule | None = None       # default: paper eta_k = 1/(K sqrt(k+1))
 
 
+def _make_scheduler(task: FLTask, config: FedCHSConfig, topo, m0: int):
+    """The looped and scanned paths build the identical scheduler."""
+    if config.availability_scheduler:
+        assert config.sampler is not None, "availability_scheduler needs a sampler"
+
+        def reachable(m_: int, r: int) -> bool:
+            return len(config.sampler.participants(r, task.cluster_members[m_])) > 0
+
+        return AvailabilityAwareScheduler(topo, task.cluster_sizes, reachable, initial=m0)
+    if config.link_delay is not None:
+        return LatencyAwareScheduler(topo, task.cluster_sizes, config.link_delay, initial=m0)
+    return FedCHSScheduler(topo, task.cluster_sizes, initial=m0)
+
+
+def _fed_chs_scannable(task: FLTask, config: FedCHSConfig) -> bool:
+    """Whether this run can take the whole-run scan path bit-identically.
+
+    Dynamic topologies need per-round host decisions (the looped path's
+    reason to exist).  Ragged cluster sizes force the scan to pad every round
+    to n_max clients, which is exact for padding-invariant channels (Dense:
+    identity; per-message channels like Top-K: senders compressed
+    independently) but NOT for stacked-leaf stochastic quantization (QSGD
+    blocks span the concatenated client axis, so padding shifts block
+    alignment and changes every entry's stochastic rounding) — those runs
+    stay on the looped driver.
+    """
+    if config.dynamic is not None:
+        return False
+    ragged = len({len(m) for m in task.cluster_members}) > 1
+    if not ragged:
+        return True
+    channel = (
+        config.channel
+        if config.channel is not None
+        else make_channel(config.qsgd_levels, config.bits_per_param)
+    )
+    return (not channel.stochastic) or getattr(channel, "per_message", False)
+
+
 def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
+    if config.scan_rounds and _fed_chs_scannable(task, config):
+        return _run_fed_chs_scanned(task, config)
     task.reset_loaders(config.seed)
     assert config.local_steps % config.local_epochs == 0, "K must divide by E"
     K, E = config.local_steps, config.local_epochs
@@ -118,21 +172,7 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         else config.initial_cluster
     )
     full_part = is_full_participation(config.sampler)
-    if config.availability_scheduler:
-        assert config.sampler is not None, "availability_scheduler needs a sampler"
-
-        def reachable(m_: int, r: int) -> bool:
-            return len(config.sampler.participants(r, task.cluster_members[m_])) > 0
-
-        scheduler = AvailabilityAwareScheduler(
-            topo, task.cluster_sizes, reachable, initial=m0
-        )
-    elif config.link_delay is not None:
-        scheduler = LatencyAwareScheduler(
-            topo, task.cluster_sizes, config.link_delay, initial=m0
-        )
-    else:
-        scheduler = FedCHSScheduler(topo, task.cluster_sizes, initial=m0)
+    scheduler = _make_scheduler(task, config, topo, m0)
 
     params = task.init_params()
     d = task.num_params()
@@ -160,7 +200,7 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
     )
     opt_states: dict[int, object] = {}  # cluster -> stacked client-held opt state
 
-    rounds_log, acc_log, loss_log = [], [], []
+    recorder = RunRecorder(task, config.rounds, config.eval_every)
     m = scheduler.state.current
     losses = jnp.full((1,), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
@@ -234,11 +274,214 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
         ledger.record("es_to_es", down_bits, round=t, phase=interactions,
                       sender=f"es:{prev_m}", receiver=f"es:{m}")
         engine.end_round(ledger, t)
+        recorder.record(t, params, losses)
 
-        if t % config.eval_every == 0 or t == config.rounds - 1:
-            rounds_log.append(t)
-            acc_log.append(task.evaluate(params))
-            loss_log.append(float(jnp.mean(losses)))
+    return recorder.result("fed_chs", ledger, params)
 
-    return RunResult("fed_chs", rounds_log, acc_log, loss_log, ledger, params,
-                     metric_mode=task.metric_mode)
+
+# --------------------------------------------------------------------------
+# scanned whole-run path (engine.run_scan): the entire schedule — visit
+# order, participation masks, renormalized gammas, PRNG subkeys — is
+# precomputed host-side, batches are staged a chunk of rounds at a time, and
+# the hot loop is one lax.scan per chunk with zero host transfers between
+# eval points.  Communication accounting is deferred (`CommLedger.
+# materialize`).  Bit-identical params/metrics to the looped path at fixed
+# seed (tests/test_engine_parity.py); pass-through rounds consume no data
+# draws or subkeys, exactly like the looped driver.
+# --------------------------------------------------------------------------
+
+
+def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
+    """Build the whole-run `ScanPlan` + deferred glue for one Fed-CHS run.
+
+    `source` is the staging DataSource (the task's own for a single run; a
+    per-seed copy for `run_sweep`).  Returns (plan, params_of, traffic) —
+    `params_of(carry)` extracts the model params, `traffic(track_events)`
+    yields the deferred per-round ledger entries.
+    """
+    assert config.dynamic is None, "dynamic topologies need the looped path"
+    source.reset(config.seed)
+    assert config.local_steps % config.local_epochs == 0, "K must divide by E"
+    K, E = config.local_steps, config.local_epochs
+    interactions = K // E
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = np.array([sched_fn(k) for k in range(K)], dtype=np.float32)
+
+    topo = make_topology(config.topology, task.num_clusters, seed=config.topology_seed)
+    rng = np.random.default_rng(config.seed)
+    m0 = (
+        int(rng.integers(task.num_clusters))
+        if config.initial_cluster is None
+        else config.initial_cluster
+    )
+    full_part = is_full_participation(config.sampler)
+    scheduler = _make_scheduler(task, config, topo, m0)
+    # visit order incl. m(R): round R-1's ES->ES hop names its receiver
+    ms = scheduler.precompute(config.rounds + 1)
+
+    R = config.rounds
+    members_of = task.cluster_members
+    parts = [
+        list(members_of[ms[t]]) if full_part
+        else config.sampler.participants(t, members_of[ms[t]])
+        for t in range(R)
+    ]
+    trained = np.array([len(p) > 0 for p in parts])
+
+    params = task.init_params()
+    d = task.num_params()
+    channel = (
+        config.channel
+        if config.channel is not None
+        else make_channel(config.qsgd_levels, config.bits_per_param)
+    )
+    engine = RoundEngine(task.model, channel, local_opt=config.local_opt)
+
+    grad_mode = (
+        full_part
+        and E == 1
+        and isinstance(channel, DenseChannel)
+        and (config.local_opt is None or isinstance(config.local_opt, PlainSGD))
+    )
+
+    M = task.num_clusters
+    n_max = max(len(m) for m in members_of)
+
+    # per-round gamma/mask rows, padded to n_max (zero-weight slots contribute
+    # exact zeros — the padded computation matches the looped unpadded one)
+    gammas_r = np.zeros((R, n_max), np.float32)
+    mask_r = np.zeros((R, n_max), np.float32)
+    for t in np.flatnonzero(trained):
+        members = members_of[ms[t]]
+        w = task.cluster_weights(ms[t])
+        if full_part:
+            gammas_r[t, : len(members)] = w
+            mask_r[t, : len(members)] = 1.0
+        else:
+            pmask = participation_mask(members, parts[t])
+            w = w * pmask
+            gammas_r[t, : len(members)] = (w / w.sum()).astype(np.float32)
+            mask_r[t, : len(members)] = pmask
+
+    # PRNG subkeys: one fused split chain over the trained rounds reproduces
+    # the looped per-round `split_chain(key, J)` calls draw-for-draw
+    subs_r = np.zeros((R, interactions, 2), np.uint32)
+    if channel.stochastic:
+        n_tr = int(trained.sum())
+        if n_tr:
+            _, flat = split_chain(jax.random.PRNGKey(config.seed + 1), n_tr * interactions)
+            subs_r[trained] = np.asarray(flat).reshape(n_tr, interactions, 2)
+
+    def _occurrences(idxs):
+        """chunk positions grouped by active cluster, in round order."""
+        occ: dict[int, list[int]] = {}
+        for c, t in enumerate(idxs):
+            occ.setdefault(int(ms[t]), []).append(c)
+        return occ
+
+    def _stage_batches(idxs, reshape, alloc):
+        """Draw every staged batch of the chunk with one bulk read per
+        client; per-client draw order is identical to looped round-by-round
+        staging (clients hold independent rng streams, so cross-client order
+        is immaterial)."""
+        plan, pads = [], []
+        for m, cs in _occurrences(idxs).items():
+            members = members_of[m]
+            plan += [
+                (client, K * len(cs),
+                 scatter_put((cs, slice(None), slot),
+                             lambda dl, n=len(cs): reshape(n, dl)))
+                for slot, client in enumerate(members)
+            ]
+            if len(members) < n_max:
+                pads.append((cs, len(members)))
+        batch = stage_chunk(source, plan, lambda a, C=len(idxs): alloc(C, a))
+        for cs, n_real in pads:  # padded slots replicate member 0
+            jax.tree.map(
+                lambda bl: bl.__setitem__(
+                    (cs, slice(None), slice(n_real, None)), bl[cs, :, 0:1]),
+                batch,
+            )
+        return batch
+
+    if grad_mode:
+        # leaves (C, K, n_max, B, ...); per-client draws (occ*K, B, ...) land
+        # at [cs, :, slot] as (occ, K, B, ...)
+        def stage(idxs):
+            batch = _stage_batches(
+                idxs,
+                reshape=lambda n_occ, dl: dl.reshape(n_occ, K, *dl.shape[1:]),
+                alloc=lambda C, a: (C, K, n_max) + a.shape[1:],
+            )
+            return {"batch": batch, "gammas": gammas_r[idxs]}
+
+        body = scan_grad_body(engine.model)
+        carry = params
+        consts = {"lrs": jnp.asarray(lrs)}
+        params_of = lambda c: c  # noqa: E731
+    else:
+        # leaves (C, J, n_max, E, B, ...); per-client draws reshape to
+        # (occ, J, E, B, ...) — the same K -> (J, E) grouping as
+        # FLTask._stage_round_np
+        def stage(idxs):
+            batch = _stage_batches(
+                idxs,
+                reshape=lambda n_occ, dl: dl.reshape(n_occ, interactions, E, *dl.shape[1:]),
+                alloc=lambda C, a: (C, interactions, n_max, E) + a.shape[1:],
+            )
+            return {
+                "m": ms[idxs].astype(np.int32),
+                "batch": batch,
+                "gammas": gammas_r[idxs],
+                "mask": mask_r[idxs],
+                "subs": subs_r[idxs],
+            }
+
+        body = scan_cluster_delta_body(engine.model, channel, engine.local_opt)
+        carry = (params, engine.init_opt_state(params, M, n_max))
+        consts = {"lrs": jnp.asarray(lrs.reshape(interactions, E))}
+        params_of = lambda c: c[0]  # noqa: E731
+
+    plan = ScanPlan(body=body, carry=carry, consts=consts, stage=stage,
+                    trained=trained, rounds=R, eval_every=config.eval_every,
+                    chunk_rounds=config.chunk_rounds)
+
+    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    up_bits = channel.message_bits(d)
+
+    def traffic(track_events: bool):
+        """Closed-form per-round ledger entries from the precomputed
+        schedule — byte-for-byte the looped driver's record stream."""
+        for t in range(R):
+            entries = []
+            p = parts[t]
+            if p:
+                es = f"es:{ms[t]}"
+                if track_events:
+                    for j in range(interactions):
+                        for i in p:
+                            entries.append(("es_to_client", down_bits, 1, j,
+                                            es, f"client:{i}"))
+                            entries.append(("client_to_es", up_bits, 1, j,
+                                            f"client:{i}", es))
+                else:
+                    entries.append(("es_to_client", down_bits,
+                                    interactions * len(p), 0, None, None))
+                    entries.append(("client_to_es", up_bits,
+                                    interactions * len(p), 0, None, None))
+            entries.append(("es_to_es", down_bits, 1, interactions,
+                            f"es:{ms[t]}", f"es:{ms[t + 1]}"))
+            yield t, entries
+
+    return plan, params_of, traffic
+
+
+def _run_fed_chs_scanned(task: FLTask, config: FedCHSConfig) -> RunResult:
+    plan, params_of, traffic = _fed_chs_scan_plan(task, task.source, config)
+    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    carry = run_scan(
+        plan, lambda t, c, losses, _lt: recorder.record(t, params_of(c), losses)
+    )
+    ledger = CommLedger(track_events=config.track_events)
+    ledger.materialize(traffic(config.track_events))
+    return recorder.result("fed_chs", ledger, params_of(carry))

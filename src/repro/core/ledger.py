@@ -101,6 +101,27 @@ class CommLedger:
     def snapshot(self, round_idx: int) -> None:
         self.history.append((round_idx, self.total_bits()))
 
+    def materialize(self, traffic) -> None:
+        """Deferred accounting: replay a precomputed per-round traffic plan.
+
+        The scanned whole-run drivers (`engine.run_scan`) perform zero ledger
+        appends in the hot loop; every message of a run is a closed-form
+        function of the precomputed visit/participation schedule, so the
+        driver reconstructs the stream *after* the run by materializing it
+        here.  `traffic` yields ``(round_idx, entries)`` in round order, each
+        entry a ``(hop, n_bits, count, phase, sender, receiver)`` tuple —
+        per-message entries (count=1, named endpoints) when the event stream
+        is tracked, aggregate entries otherwise.  Each round is snapshotted
+        after its entries, exactly like the looped drivers' `end_round`, so
+        aggregates, event stream, and history are bit-identical to a looped
+        run of the same schedule (pinned by tests/test_engine_parity.py).
+        """
+        for round_idx, entries in traffic:
+            for hop, n_bits, count, phase, sender, receiver in entries:
+                self.record(hop, n_bits, count, round=round_idx, phase=phase,
+                            sender=sender, receiver=receiver)
+            self.snapshot(round_idx)
+
     def total_bits(self) -> int:
         return sum(self.bits.values())
 

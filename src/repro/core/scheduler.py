@@ -82,12 +82,26 @@ class FedCHSScheduler:
 
         Does not mutate `self`; replays on a copy.
         """
+        return list(self.precompute(rounds))
+
+    def precompute(self, rounds: int) -> np.ndarray:
+        """Precompute the whole run's visit order as one int array.
+
+        The 2-step rule (and its latency-/availability-aware variants, whose
+        tie-break and candidate-pool hooks are deterministic functions of
+        (topology, link delays, participation traces)) is fully determined by
+        its inputs, so the scanned whole-run executor (`engine.run_scan`)
+        consumes this instead of advancing the scheduler round-by-round on
+        the host.  Replays `advance()` on a state copy — `self` is not
+        mutated, and the replay is step-exact with the looped drivers'
+        advances (including the `state.step`-indexed availability probes).
+        """
         saved = SchedulerState(self.state.current, self.state.visit_counts.copy(), self.state.step)
         order = [self.state.current]
         for _ in range(rounds - 1):
             order.append(self.advance())
         self.state = saved
-        return order
+        return np.asarray(order, dtype=np.int64)
 
 
 class LatencyAwareScheduler(FedCHSScheduler):

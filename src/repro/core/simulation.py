@@ -193,6 +193,42 @@ class FLTask:
 
 
 @dataclasses.dataclass
+class RunRecorder:
+    """The ONE eval/log tail shared by every driver, looped or scanned.
+
+    The four looped drivers used to carry four duplicated copies of the
+    cadence check + metric/loss fetch; the scanned executor needs the same
+    logic fired at chunk boundaries.  `record(t, params, losses)` appends to
+    the logs iff t is an eval round (t % eval_every == 0, or the final
+    round); `losses` is the last trained round's on-device loss array (any
+    shape — the logged value is `float(jnp.mean(losses))`, the historical
+    per-eval host sync) or None when nothing has trained yet (logs NaN, the
+    looped drivers' sentinel).
+    """
+
+    task: FLTask
+    rounds: int
+    eval_every: int
+    rounds_log: list = dataclasses.field(default_factory=list)
+    acc_log: list = dataclasses.field(default_factory=list)
+    loss_log: list = dataclasses.field(default_factory=list)
+
+    def should_eval(self, t: int) -> bool:
+        return t % self.eval_every == 0 or t == self.rounds - 1
+
+    def record(self, t: int, params: PyTree, losses) -> None:
+        if not self.should_eval(t):
+            return
+        self.rounds_log.append(t)
+        self.acc_log.append(self.task.evaluate(params))
+        self.loss_log.append(float("nan") if losses is None else float(jnp.mean(losses)))
+
+    def result(self, name: str, ledger: CommLedger, params: PyTree) -> RunResult:
+        return RunResult(name, self.rounds_log, self.acc_log, self.loss_log, ledger,
+                         params, metric_mode=self.task.metric_mode)
+
+
+@dataclasses.dataclass
 class RunResult:
     name: str
     rounds: list[int]

@@ -1,0 +1,101 @@
+"""Vmapped multi-seed sweeps — N whole runs as ONE device dispatch stream.
+
+The averaging regime the FL literature reports over (EdgeFLow, HiFlash:
+mean +/- std across seeds) costs N sequential runs in a looped simulator.
+With the whole-run scan executor the only per-seed state is the scan carry
+and the staged inputs (visit orders, PRNG subkeys, data draws), so a sweep
+vmaps the chunked scan over a leading seed axis (`engine.run_scan_sweep`):
+one compile, one dispatch per chunk, N trajectories.
+
+Plans are built exactly like the single-run scanned drivers', with per-seed
+shallow-copied `DataSource`s so every seed draws its own batch stream from
+shared dataset arrays.  Fidelity vs a standalone `run_*` call at the same
+seed: Fed-CHS grad mode (the paper's E=1 dense setting) is bit-identical;
+delta-mode sweeps consume identical data/subkeys but vmap's batched layout
+reassociates the small bias-vector reductions by ~1 ulp per round (weights
+stay bit-exact per round; stochastic quantization can amplify the ulp into
+an occasional level flip), so those trajectories are numerically — not
+bit- — identical to solo runs.  Both regimes are pinned by
+tests/test_run_scan.py.
+
+Scope: full-participation configs (the table-1 regime).  Samplers change
+which rounds train per seed, which would give the seeds different scan
+lengths — run those seeds sequentially instead.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+
+import jax
+
+from repro.core.baselines.fedavg import FedAvgConfig, _fedavg_scan_plan
+from repro.core.baselines.hier_local_qsgd import HierLocalQSGDConfig, _hier_scan_plan
+from repro.core.baselines.wrwgd import WRWGDConfig, _wrwgd_scan_plan
+from repro.core.engine import run_scan_sweep
+from repro.core.fed_chs import FedCHSConfig, _fed_chs_scan_plan, _fed_chs_scannable
+from repro.core.ledger import CommLedger
+from repro.core.simulation import FLTask, RunRecorder, RunResult
+from repro.part import is_full_participation
+
+_PLANNERS = {
+    FedCHSConfig: ("fed_chs", _fed_chs_scan_plan),
+    FedAvgConfig: ("fedavg", _fedavg_scan_plan),
+    WRWGDConfig: ("wrwgd", _wrwgd_scan_plan),
+    HierLocalQSGDConfig: ("hier_local_qsgd", _hier_scan_plan),
+}
+
+
+def run_sweep(task: FLTask, config, seeds) -> list[RunResult]:
+    """Run `config` at every seed in `seeds` as one vmapped scanned dispatch.
+
+    `config` is any of the four driver configs; returns one `RunResult` per
+    seed, in order, running the same settings N separate `run_*(task,
+    dataclasses.replace(config, seed=s))` calls would — bit-identically in
+    Fed-CHS grad mode and WRWGD, within ~1 ulp/round for delta modes (see
+    the module docstring for the exact fidelity contract).
+    """
+    name, planner = _PLANNERS[type(config)]
+    assert config.scan_rounds, \
+        "run_sweep is inherently scanned — a scan_rounds=False config asks " \
+        "for looped-exact trajectories, which a vmapped sweep cannot " \
+        "guarantee; run those seeds sequentially through the driver instead"
+    assert is_full_participation(config.sampler), \
+        "run_sweep vmaps over seeds with a shared trained-round schedule — " \
+        "sampler-driven runs must go through the per-seed drivers"
+    if isinstance(config, FedCHSConfig):
+        assert _fed_chs_scannable(task, config), \
+            "this Fed-CHS config needs the looped driver (dynamic topology " \
+            "or padding-sensitive channel on ragged clusters)"
+
+    seeds = list(seeds)
+    plans, params_ofs, traffics = [], [], []
+    for s in seeds:
+        cfg = dataclasses.replace(config, seed=s)
+        # per-seed batch streams over shared dataset arrays: shallow-copy the
+        # source, then reset(seed) rebinds only its per-client rng state
+        source = copy.copy(task.source)
+        out = planner(task, source, cfg)
+        plans.append(out[0])
+        params_ofs.append(out[1])
+        traffics.append(out[2])
+
+    params_of = params_ofs[0]
+    recorders = [RunRecorder(task, config.rounds, config.eval_every) for _ in seeds]
+
+    def record(t, carry, losses, _last_t):
+        stacked = params_of(carry)
+        for i in range(len(seeds)):
+            p_i = jax.tree.map(lambda leaf: leaf[i], stacked)
+            l_i = None if losses is None else losses[i]
+            recorders[i].record(t, p_i, l_i)
+
+    carry = run_scan_sweep(plans, record)
+    stacked = params_of(carry)
+    results = []
+    for i in range(len(seeds)):
+        ledger = CommLedger(track_events=config.track_events)
+        ledger.materialize(traffics[i](config.track_events))
+        params_i = jax.tree.map(lambda leaf: leaf[i], stacked)
+        results.append(recorders[i].result(name, ledger, params_i))
+    return results

@@ -22,9 +22,22 @@ class ClientLoader:
         # vmapped Eq. (5) aggregation; clients whose Dirichlet shard is
         # smaller than a batch sample with replacement (still a valid random
         # xi_{n,k} subset draw).
-        replace = self.client.size < self.batch_size
-        idx = self.rng.choice(self.client.indices, size=self.batch_size, replace=replace)
+        idx = self.next_indices()
         return self.dataset.train_x[idx], self.dataset.train_y[idx]
+
+    def next_indices(self, count: int = 1) -> np.ndarray:
+        """Draw `count` batches' worth of sample indices, (count*B,) flat.
+
+        Issues exactly `count` sequential `rng.choice` calls — the same rng
+        state evolution as `count` `next_batch` calls — but defers the (much
+        more expensive) dataset gather to the caller, which can fetch every
+        staged batch of a whole scan chunk with one fancy-index read."""
+        replace = self.client.size < self.batch_size
+        draws = [
+            self.rng.choice(self.client.indices, size=self.batch_size, replace=replace)
+            for _ in range(count)
+        ]
+        return draws[0] if count == 1 else np.concatenate(draws)
 
     @property
     def num_samples(self) -> int:

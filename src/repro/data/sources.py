@@ -25,6 +25,7 @@ from __future__ import annotations
 
 from typing import Any, Protocol, runtime_checkable
 
+import jax
 import numpy as np
 
 from repro.data.loader import ClientLoader
@@ -56,6 +57,52 @@ class DataSource(Protocol):
         ...
 
 
+def scatter_put(index, reshape):
+    """A `stage_chunk` scatter: writes one client's reshaped draw stack into
+    the chunk buffer at a fixed fancy index, leaf-wise."""
+
+    def put(batch: Batch, draws: Batch) -> None:
+        jax.tree.map(lambda bl, dl: bl.__setitem__(index, reshape(dl)), batch, draws)
+
+    return put
+
+
+def stage_chunk(source: DataSource, plan, alloc) -> Batch:
+    """Bulk-stage one scan chunk of per-client batches.
+
+    `plan` is an iterable of ``(client, count, put)``: each client's `count`
+    draws are fetched with ONE `bulk_batches` read and scattered into the
+    chunk buffer by ``put(batch, draws)`` (see `scatter_put`).  The buffer is
+    allocated lazily from the first draws — ``alloc(leaf) -> shape`` gives
+    each zero-filled leaf's full chunk shape.  This is the one implementation
+    of the alloc-on-first-draw + fancy-index scatter pattern all four scanned
+    drivers stage through; returns None for an empty plan.
+    """
+    batch = None
+    for client, count, put in plan:
+        draws = bulk_batches(source, client, count)
+        if batch is None:
+            batch = jax.tree.map(lambda a: np.zeros(alloc(a), a.dtype), draws)
+        put(batch, draws)
+    return batch
+
+
+def bulk_batches(source: DataSource, client: int, count: int) -> Batch:
+    """`count` sequential draws for one client, stacked (count, B, ...).
+
+    Uses the source's vectorized `next_batches` when it has one (ArraySource:
+    one dataset gather for the whole chunk) and falls back to stacking
+    `next_batch` calls otherwise — either way the per-client draw sequence is
+    exactly what `count` incremental `next_batch` calls would return, so
+    scanned-driver chunk staging is bit-identical to looped per-round
+    staging."""
+    fast = getattr(source, "next_batches", None)
+    if fast is not None:
+        return fast(client, count)
+    batches = [source.next_batch(client) for _ in range(count)]
+    return jax.tree.map(lambda *leaves: np.stack(leaves), *batches)
+
+
 class ArraySource:
     """Classification batches from a `Dataset` + per-client index shards."""
 
@@ -76,6 +123,16 @@ class ArraySource:
     def next_batch(self, client: int) -> Batch:
         x, y = self.loaders[client].next_batch()
         return {"x": x, "y": y}
+
+    def next_batches(self, client: int, count: int) -> Batch:
+        """`count` sequential draws as stacked (count, B, ...) leaves.
+
+        Bit-identical to `count` `next_batch` calls (same per-call rng state
+        evolution — see `ClientLoader.next_indices`) but pays ONE dataset
+        gather instead of `count`, which is what keeps the scanned drivers'
+        chunk staging off the Python floor."""
+        idx = self.loaders[client].next_indices(count).reshape(count, self.batch_size)
+        return {"x": self.dataset.train_x[idx], "y": self.dataset.train_y[idx]}
 
     def eval_data(self) -> Dataset:
         return self.dataset

@@ -13,6 +13,8 @@ from repro.part.traces import (
     UniformK,
     is_full_participation,
     participation_mask,
+    schedule_participants,
+    stack_masks,
 )
 
 __all__ = [
@@ -26,4 +28,6 @@ __all__ = [
     "UniformK",
     "is_full_participation",
     "participation_mask",
+    "schedule_participants",
+    "stack_masks",
 ]

@@ -45,6 +45,8 @@ __all__ = [
     "UniformK",
     "is_full_participation",
     "participation_mask",
+    "schedule_participants",
+    "stack_masks",
 ]
 
 
@@ -194,3 +196,31 @@ def participation_mask(members: Sequence[int], participating: Sequence[int]) -> 
     """1/0 float mask over `members` marking the participating subset."""
     part = set(participating)
     return np.asarray([1.0 if c in part else 0.0 for c in members], dtype=np.float32)
+
+
+def schedule_participants(
+    sampler: Sampler | None, rounds: int, clients: Sequence[int]
+) -> list[list[int]]:
+    """Precompute the whole run's participant sets over a fixed candidate
+    list — samplers are pure in (round_idx, clients), so the scanned
+    whole-run drivers evaluate them once up front and see exactly the sets
+    the looped drivers would query round-by-round.  `None` (and
+    `FullParticipation`) yields every client every round."""
+    if is_full_participation(sampler):
+        full = list(clients)
+        return [list(full) for _ in range(rounds)]
+    return [sampler.participants(t, clients) for t in range(rounds)]
+
+
+def stack_masks(
+    members: Sequence[int], parts_by_round: Sequence[Sequence[int]], width: int | None = None
+) -> np.ndarray:
+    """Stack per-round participation masks over `members` into one
+    (rounds, width) float array — the scanned executor's per-round mask
+    input.  `width` pads columns with zeros past len(members) (the engine's
+    padded client slots for ragged clusters)."""
+    n = len(members) if width is None else width
+    out = np.zeros((len(parts_by_round), n), dtype=np.float32)
+    for t, parts in enumerate(parts_by_round):
+        out[t, : len(members)] = participation_mask(members, parts)
+    return out

@@ -429,3 +429,172 @@ if HAS_HYPOTHESIS:
                 if not mask[i]:
                     np.testing.assert_array_equal(np.asarray(after[i]),
                                                   np.asarray(before[i]))
+
+
+# --------------------------------------------------------------------------
+# whole-run scan parity: the scanned executor (scan_rounds=True, the default)
+# must reproduce the looped path at fixed seed — params bit-identical,
+# eval metrics exactly equal, ledger (aggregates + event stream + history)
+# identical; reported loss scalars may differ by reduction-fusion ulps
+# across the scan boundary, hence the 1e-5 tolerance
+# --------------------------------------------------------------------------
+
+import dataclasses  # noqa: E402
+
+from repro.comm.channels import TopKChannel  # noqa: E402
+from repro.part import AvailabilityAware, BernoulliTrace, UniformK  # noqa: E402
+
+
+def _assert_scan_matches_loop(run, task, cfg):
+    a = run(task, dataclasses.replace(cfg, scan_rounds=True))
+    b = run(task, dataclasses.replace(cfg, scan_rounds=False))
+    assert a.rounds == b.rounds
+    assert a.test_acc == b.test_acc
+    np.testing.assert_allclose(a.train_loss, b.train_loss, atol=1e-5, rtol=0)
+    for la, lb in zip(jax.tree.leaves(a.final_params), jax.tree.leaves(b.final_params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert a.ledger.bits == b.ledger.bits
+    assert a.ledger.messages == b.ledger.messages
+    assert a.ledger.events == b.ledger.events
+    assert a.ledger.history == b.ledger.history
+
+
+_CHURN = AvailabilityAware(BernoulliTrace(p=0.4, seed=9))       # pass-through rounds
+_DARK = AvailabilityAware(BernoulliTrace(p=0.15, seed=3))       # mostly-dark rounds
+
+
+def test_scan_parity_fed_chs_grad_mode(small_task):
+    _assert_scan_matches_loop(run_fed_chs, small_task,
+                              FedCHSConfig(rounds=6, local_steps=6, eval_every=2,
+                                           seed=3, chunk_rounds=2))
+
+
+def test_scan_parity_fed_chs_channels(small_task):
+    base = dict(rounds=4, local_steps=4, local_epochs=2, eval_every=1, seed=0)
+    _assert_scan_matches_loop(run_fed_chs, small_task, FedCHSConfig(**base))
+    _assert_scan_matches_loop(run_fed_chs, small_task,
+                              FedCHSConfig(**base, qsgd_levels=16))
+    _assert_scan_matches_loop(run_fed_chs, small_task,
+                              FedCHSConfig(**base, channel=TopKChannel(0.1)))
+
+
+def test_scan_parity_fed_chs_samplers(small_task):
+    base = dict(rounds=8, local_steps=4, local_epochs=2, eval_every=3, seed=2)
+    _assert_scan_matches_loop(run_fed_chs, small_task,
+                              FedCHSConfig(**base, sampler=UniformK(k=2, seed=5)))
+    _assert_scan_matches_loop(run_fed_chs, small_task,
+                              FedCHSConfig(**base, sampler=_CHURN))
+    _assert_scan_matches_loop(run_fed_chs, small_task,
+                              FedCHSConfig(**base, sampler=_DARK, qsgd_levels=8))
+    _assert_scan_matches_loop(run_fed_chs, small_task,
+                              FedCHSConfig(**base, sampler=_CHURN,
+                                           availability_scheduler=True))
+
+
+def test_scan_parity_fedavg(small_task):
+    _assert_scan_matches_loop(run_fedavg, small_task,
+                              FedAvgConfig(rounds=3, local_steps=5, qsgd_levels=8,
+                                           eval_every=1, seed=2))
+    _assert_scan_matches_loop(run_fedavg, small_task,
+                              FedAvgConfig(rounds=3, local_steps=5, eval_every=1,
+                                           seed=0, channel=TopKChannel(0.05)))
+    _assert_scan_matches_loop(run_fedavg, small_task,
+                              FedAvgConfig(rounds=8, local_steps=3, eval_every=3,
+                                           seed=2, sampler=_DARK))
+
+
+def test_scan_parity_wrwgd(small_task):
+    _assert_scan_matches_loop(run_wrwgd, small_task,
+                              WRWGDConfig(rounds=8, local_steps=5, eval_every=3, seed=4))
+    _assert_scan_matches_loop(run_wrwgd, small_task,
+                              WRWGDConfig(rounds=10, local_steps=4, eval_every=3,
+                                          seed=4, sampler=_DARK, chunk_rounds=3))
+
+
+def test_scan_parity_hier(small_task):
+    _assert_scan_matches_loop(run_hier_local_qsgd, small_task,
+                              HierLocalQSGDConfig(rounds=2, local_steps=4,
+                                                  local_epochs=2, qsgd_levels=16,
+                                                  eval_every=1, seed=0))
+    _assert_scan_matches_loop(run_hier_local_qsgd, small_task,
+                              HierLocalQSGDConfig(rounds=6, local_steps=4,
+                                                  local_epochs=2, qsgd_levels=16,
+                                                  eval_every=2, seed=2,
+                                                  sampler=_CHURN, chunk_rounds=2))
+    _assert_scan_matches_loop(run_hier_local_qsgd, small_task,
+                              HierLocalQSGDConfig(rounds=3, local_steps=4,
+                                                  local_epochs=2, qsgd_levels=16,
+                                                  es_channel=TopKChannel(0.1),
+                                                  eval_every=1, seed=1))
+
+
+def test_scan_parity_ragged_clusters_padding_exact():
+    """Ragged clusters exercise the scanned path's padded slots (Dense and
+    per-message Top-K are padding-invariant; stacked-leaf QSGD correctly
+    falls back to the looped driver — see `_fed_chs_scannable`)."""
+    from repro.core.fed_chs import _fed_chs_scannable
+    from repro.core.simulation import FLTask
+    from repro.data import dirichlet_partition, make_dataset
+    from repro.models.classifier import make_classifier
+
+    ds = make_dataset("mnist", train_size=1200, test_size=300, seed=1)
+    clients = dirichlet_partition(ds.train_y, 7, 0.6, seed=1)
+    clusters = [[0, 1, 2], [3, 4], [5, 6]]  # ragged: 3/2/2
+    model = make_classifier("mlp", "mnist", ds.spec.image_shape, 10)
+    task = FLTask(model, ds, clients, clusters, batch_size=16, seed=1)
+
+    _assert_scan_matches_loop(run_fed_chs, task,
+                              FedCHSConfig(rounds=5, local_steps=6, local_epochs=3,
+                                           eval_every=2, seed=1))
+    _assert_scan_matches_loop(run_fed_chs, task,
+                              FedCHSConfig(rounds=4, local_steps=4, local_epochs=2,
+                                           channel=TopKChannel(0.1), eval_every=1,
+                                           seed=0))
+    assert not _fed_chs_scannable(task, FedCHSConfig(qsgd_levels=16))
+    assert _fed_chs_scannable(task, FedCHSConfig())
+
+
+def test_scanned_hot_loop_zero_host_transfers(small_task):
+    """Between eval points the scanned executor's hot loop is ONE compiled
+    chunk call on pre-staged device inputs: with jax.transfer_guard
+    ("disallow") active, executing a chunk performs zero implicit
+    host<->device transfers."""
+    from repro.core.engine import scan_chunk_fn
+    from repro.core.fed_chs import _fed_chs_scan_plan
+
+    cfg = FedCHSConfig(rounds=6, local_steps=4, local_epochs=2, eval_every=10,
+                       chunk_rounds=6, seed=0)
+    plan, _params_of, _traffic = _fed_chs_scan_plan(small_task, small_task.source, cfg)
+    idxs = np.flatnonzero(np.asarray(plan.trained))
+    xs = jax.device_put(plan.stage(idxs))
+    carry = jax.device_put(plan.carry)
+    consts = jax.device_put(plan.consts)
+    chunk = scan_chunk_fn(plan.body)
+    # compile outside the guard (compilation may stage constants); warm on a
+    # copy so backends with buffer donation don't invalidate `carry`
+    warm = chunk(jax.tree.map(jnp.array, carry), xs, consts)
+    jax.block_until_ready(jax.tree.leaves(warm))
+    with jax.transfer_guard("disallow"):
+        out_carry, losses = chunk(carry, xs, consts)
+        jax.block_until_ready(jax.tree.leaves((out_carry, losses)))
+
+
+if HAS_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 30), qsgd=st.sampled_from([None, 8]),
+           p=st.sampled_from([None, 0.7, 0.3]))
+    @settings(max_examples=5, deadline=None)
+    def test_property_scan_loop_parity(seed, qsgd, p):
+        """Random (seed, channel, churn) — scanned == looped for Fed-CHS and
+        FedAvg on a cached ragged-cluster task (QSGD on ragged clusters
+        exercises the fall-back-to-looped gate, which is trivially parity)."""
+        task = _prop_task(_SHAPES[seed % len(_SHAPES)])
+        sampler = None if p is None else AvailabilityAware(BernoulliTrace(p=p, seed=seed))
+        _assert_scan_matches_loop(
+            run_fed_chs, task,
+            FedCHSConfig(rounds=4, local_steps=4, local_epochs=2, eval_every=2,
+                         seed=seed, qsgd_levels=qsgd, sampler=sampler))
+        _assert_scan_matches_loop(
+            run_fedavg, task,
+            FedAvgConfig(rounds=3, local_steps=3, eval_every=1, seed=seed,
+                         qsgd_levels=qsgd, sampler=sampler))

@@ -1,0 +1,264 @@
+"""Unit coverage for the whole-run scan machinery: eval segmentation,
+scheduler precompute, deferred ledger materialization, bulk batch staging,
+chunk-size invariance, and the vmapped multi-seed sweep."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedCHSConfig, run_fed_chs, run_sweep
+from repro.core.baselines import (
+    FedAvgConfig,
+    HierLocalQSGDConfig,
+    WRWGDConfig,
+    run_fedavg,
+    run_hier_local_qsgd,
+    run_wrwgd,
+)
+from repro.core.engine import eval_rounds
+from repro.core.ledger import CommLedger
+from repro.core.scheduler import AvailabilityAwareScheduler, FedCHSScheduler
+from repro.core.topology import make_topology
+from repro.data.sources import ArraySource, bulk_batches
+from repro.part import AvailabilityAware, BernoulliTrace, UniformK, schedule_participants, stack_masks
+
+
+# --------------------------------------------------------------------------
+# eval segmentation
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rounds,eval_every", [(1, 1), (5, 2), (10, 3), (200, 10),
+                                               (7, 100), (8, 4)])
+def test_eval_rounds_matches_looped_cadence(rounds, eval_every):
+    looped = [t for t in range(rounds) if t % eval_every == 0 or t == rounds - 1]
+    assert eval_rounds(rounds, eval_every) == looped
+
+
+# --------------------------------------------------------------------------
+# scheduler precompute
+# --------------------------------------------------------------------------
+
+
+def test_precompute_matches_sequential_advance():
+    topo = make_topology("random_sparse", 6, seed=2)
+    sizes = [5, 9, 3, 7, 4, 6]
+    a = FedCHSScheduler(topo, sizes, initial=1)
+    order = a.precompute(25)
+    b = FedCHSScheduler(topo, sizes, initial=1)
+    seq = [b.state.current] + [b.advance() for _ in range(24)]
+    assert list(order) == seq
+    # precompute does not mutate: the scheduler still replays the same walk
+    assert a.state.current == 1 and a.state.step == 0
+    assert list(a.precompute(25)) == seq
+
+
+def test_precompute_availability_scheduler_probes_next_round():
+    """The availability variant probes reachability at state.step + 1 — the
+    precomputed order must agree with live advances (same probe indices)."""
+    topo = make_topology("ring", 5, seed=0)
+    sizes = [4, 4, 4, 4, 4]
+    trace = BernoulliTrace(p=0.5, seed=7)
+
+    def reachable(m, r):
+        return trace.available(m, r)
+
+    a = AvailabilityAwareScheduler(topo, sizes, reachable, initial=0)
+    order = a.precompute(20)
+    b = AvailabilityAwareScheduler(topo, sizes, reachable, initial=0)
+    seq = [b.state.current] + [b.advance() for _ in range(19)]
+    assert list(order) == seq
+
+
+# --------------------------------------------------------------------------
+# deferred ledger
+# --------------------------------------------------------------------------
+
+
+def test_materialize_replays_record_stream():
+    live = CommLedger()
+    for t in range(3):
+        for i in (4, 7):
+            live.record("client_to_es", 100, round=t, phase=0,
+                        sender=f"client:{i}", receiver="es:0")
+        live.record("es_to_es", 320, round=t, phase=1, sender="es:0", receiver="es:1")
+        live.snapshot(t)
+
+    deferred = CommLedger()
+    deferred.materialize(
+        (t, [("client_to_es", 100, 1, 0, "client:4", "es:0"),
+             ("client_to_es", 100, 1, 0, "client:7", "es:0"),
+             ("es_to_es", 320, 1, 1, "es:0", "es:1")])
+        for t in range(3)
+    )
+    assert deferred.bits == live.bits
+    assert deferred.messages == live.messages
+    assert deferred.events == live.events
+    assert deferred.history == live.history
+
+
+def test_materialize_aggregate_mode():
+    live = CommLedger(track_events=False)
+    live.record("client_to_ps", 64, 5)
+    live.snapshot(0)
+    deferred = CommLedger(track_events=False)
+    deferred.materialize([(0, [("client_to_ps", 64, 5, 0, None, None)])])
+    assert deferred.bits == live.bits and deferred.messages == live.messages
+    assert deferred.events == [] and deferred.history == live.history
+
+
+# --------------------------------------------------------------------------
+# participation precompute helpers
+# --------------------------------------------------------------------------
+
+
+def test_schedule_participants_matches_pointwise_queries():
+    sampler = UniformK(k=3, seed=2, trace=BernoulliTrace(p=0.7, seed=1))
+    clients = [2, 5, 6, 9, 11]
+    sched = schedule_participants(sampler, 12, clients)
+    assert sched == [sampler.participants(t, clients) for t in range(12)]
+    full = schedule_participants(None, 4, clients)
+    assert full == [clients] * 4
+
+
+def test_stack_masks_pads_to_width():
+    members = [3, 8, 5]
+    parts = [[3, 5], [], [3, 8, 5]]
+    masks = stack_masks(members, parts, width=5)
+    np.testing.assert_array_equal(
+        masks,
+        np.array([[1, 0, 1, 0, 0], [0, 0, 0, 0, 0], [1, 1, 1, 0, 0]], np.float32))
+
+
+# --------------------------------------------------------------------------
+# bulk staging
+# --------------------------------------------------------------------------
+
+
+def test_next_batches_bit_identical_to_sequential_draws(small_task):
+    src = small_task.source
+    assert isinstance(src, ArraySource)
+    src.reset(5)
+    seq = [src.next_batch(3) for _ in range(6)]
+    src.reset(5)
+    bulk = bulk_batches(src, 3, 6)
+    for j in range(6):
+        np.testing.assert_array_equal(bulk["x"][j], seq[j]["x"])
+        np.testing.assert_array_equal(bulk["y"][j], seq[j]["y"])
+    # the stream position after a bulk read equals six sequential reads
+    a = src.next_batch(3)
+    src.reset(5)
+    for _ in range(6):
+        src.next_batch(3)
+    b = src.next_batch(3)
+    np.testing.assert_array_equal(a["x"], b["x"])
+
+
+def test_bulk_batches_generic_fallback():
+    class Minimal:
+        batch_size = 2
+        num_clients = 1
+        client_sizes = np.ones(1)
+
+        def __init__(self):
+            self.n = 0
+
+        def reset(self, seed):
+            self.n = 0
+
+        def next_batch(self, client):
+            self.n += 1
+            return {"x": np.full((2, 3), self.n)}
+
+        def eval_data(self):
+            return None
+
+    src = Minimal()
+    out = bulk_batches(src, 0, 3)
+    np.testing.assert_array_equal(out["x"][:, 0, 0], [1, 2, 3])
+
+
+# --------------------------------------------------------------------------
+# chunking invariance: the chunk_rounds knob is a memory bound, never a
+# semantics change
+# --------------------------------------------------------------------------
+
+
+def test_chunk_rounds_invariance(small_task):
+    base = FedCHSConfig(rounds=7, local_steps=4, local_epochs=2, qsgd_levels=8,
+                        eval_every=3, seed=1)
+    ref = run_fed_chs(small_task, dataclasses.replace(base, chunk_rounds=1))
+    for chunk in (2, 3, 64):
+        res = run_fed_chs(small_task, dataclasses.replace(base, chunk_rounds=chunk))
+        assert res.test_acc == ref.test_acc
+        np.testing.assert_allclose(res.train_loss, ref.train_loss, atol=1e-5, rtol=0)
+        for la, lb in zip(jax.tree.leaves(res.final_params),
+                          jax.tree.leaves(ref.final_params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        assert res.ledger.events == ref.ledger.events
+
+
+# --------------------------------------------------------------------------
+# vmapped multi-seed sweep
+# --------------------------------------------------------------------------
+
+
+def _assert_sweep_matches_solo(task, run, cfg, seeds, exact):
+    swept = run_sweep(task, cfg, seeds)
+    for s, res in zip(seeds, swept):
+        solo = run(task, dataclasses.replace(cfg, seed=s))
+        assert res.name == solo.name and res.rounds == solo.rounds
+        assert res.ledger.bits == solo.ledger.bits
+        assert res.ledger.events == solo.ledger.events
+        if exact:  # grad mode: bit-identical to the solo scanned run
+            assert res.test_acc == solo.test_acc
+            for la, lb in zip(jax.tree.leaves(res.final_params),
+                              jax.tree.leaves(solo.final_params)):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        else:  # delta mode: vmap reassociates small reductions by ~1 ulp
+            np.testing.assert_allclose(res.test_acc, solo.test_acc, atol=0.02)
+            for la, lb in zip(jax.tree.leaves(res.final_params),
+                              jax.tree.leaves(solo.final_params)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           atol=1e-5, rtol=0)
+
+
+def test_sweep_fed_chs_grad_mode_bit_identical(small_task):
+    _assert_sweep_matches_solo(
+        small_task, run_fed_chs,
+        FedCHSConfig(rounds=5, local_steps=4, eval_every=2), (0, 3, 7), exact=True)
+
+
+def test_sweep_wrwgd_bit_identical(small_task):
+    _assert_sweep_matches_solo(
+        small_task, run_wrwgd,
+        WRWGDConfig(rounds=6, local_steps=4, eval_every=2), (0, 9), exact=True)
+
+
+def test_sweep_delta_mode_numerically_identical(small_task):
+    _assert_sweep_matches_solo(
+        small_task, run_fedavg,
+        FedAvgConfig(rounds=3, local_steps=4, eval_every=1), (0, 5), exact=False)
+    _assert_sweep_matches_solo(
+        small_task, run_hier_local_qsgd,
+        HierLocalQSGDConfig(rounds=2, local_steps=4, local_epochs=2,
+                            qsgd_levels=16, eval_every=1), (0, 4), exact=False)
+
+
+def test_sweep_rejects_sampler_configs(small_task):
+    cfg = FedCHSConfig(rounds=3, local_steps=4, local_epochs=2,
+                       sampler=AvailabilityAware(BernoulliTrace(p=0.5)))
+    with pytest.raises(AssertionError):
+        run_sweep(small_task, cfg, (0, 1))
+
+
+def test_sweep_leaves_task_source_untouched(small_task):
+    """Sweeps stage from per-seed shallow copies; the task's own source must
+    keep its position so interleaved solo runs stay deterministic."""
+    small_task.reset_loaders(123)
+    before = small_task.source.next_batch(0)
+    small_task.reset_loaders(123)
+    run_sweep(small_task, FedCHSConfig(rounds=3, local_steps=4, eval_every=2), (0, 1))
+    after = small_task.source.next_batch(0)
+    np.testing.assert_array_equal(before["x"], after["x"])
