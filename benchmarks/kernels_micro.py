@@ -1,14 +1,32 @@
-"""Microbenchmarks for the Pallas QSGD kernel (interpret mode on CPU; the
-numbers prove correctness-path throughput, not TPU perf — TPU timing comes
-from the roofline analysis)."""
+"""Microbenchmarks for the QSGD kernels and the packed wire format.
+
+Two tiers:
+
+  * kernel/* rows — raw transform throughput at vector sizes n (off-TPU the
+    Pallas kernels are bypassed for the bit-identical vectorized-jnp path, so
+    these prove correctness-path throughput; TPU timing comes from the
+    roofline analysis).  The packed rows also report the actual wire payload
+    in bytes — the number the CommLedger charges (pinned by test_ledger.py).
+  * round/* rows — a real Fed-CHS round (scanned driver, steady-state) with
+    the packed QSGDChannel vs the pre-packing baseline where the cross-device
+    values stay dense f32 arrays.  This is the gated comparison: packing adds
+    shift/mask arithmetic per element, which at the *round* level must
+    disappear into the training compute.  `benchmarks/run.py --json` fails if
+    the packed round drops below 0.8x of the dense-code baseline (0.8, not
+    1.0: shared-runner timing noise on few-ms rounds; the structural claim is
+    parity, the wire win is the 6.4x payload shrink the derived field shows).
+"""
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import qsgd_quantize, qsgd_roundtrip
+from repro.comm.bits import qsgd_message_bits
+from repro.comm.channels import QSGDChannel
+from repro.kernels.ops import qsgd_decode, qsgd_encode, qsgd_quantize, qsgd_roundtrip
 
 
 def _time(fn, *args, reps=5):
@@ -19,17 +37,84 @@ def _time(fn, *args, reps=5):
     return (time.time() - t0) / reps * 1e6
 
 
+@dataclasses.dataclass(frozen=True)
+class DenseCodeQSGDChannel:
+    """The pre-packing baseline: identical QSGD math, but the cross-device
+    value stays a dense f32 array (codes never leave float registers) — what
+    QSGDChannel transported before the packed integer wire format."""
+
+    levels: int = 16
+    stochastic: bool = dataclasses.field(default=True, init=False)
+    per_message: bool = dataclasses.field(default=True, init=False)
+
+    def compress(self, tree, key):
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        out = [
+            qsgd_roundtrip(leaf, k, s=self.levels).astype(leaf.dtype)
+            for leaf, k in zip(leaves, keys)
+        ]
+        return jax.tree.unflatten(treedef, out)
+
+    def message_bits(self, num_params: int) -> int:
+        return qsgd_message_bits(num_params, self.levels)
+
+
+def _round_us(task, cfg) -> float:
+    from repro.core import run_fed_chs
+
+    run_fed_chs(task, cfg)  # compile + warm the (model, channel) cache
+    t0 = time.time()
+    run_fed_chs(task, cfg)
+    return (time.time() - t0) / cfg.rounds * 1e6
+
+
 def run(quick: bool = True):
     rows = []
     key = jax.random.PRNGKey(0)
+    s = 16
     for n in (1 << 16, 1 << 20) if quick else (1 << 16, 1 << 20, 1 << 24):
         v = jax.random.normal(key, (n,), jnp.float32)
-        us_q = _time(lambda x: qsgd_quantize(x, key, s=16), v)
-        us_rt = _time(lambda x: qsgd_roundtrip(x, key, s=16), v)
+        us_q = _time(lambda x: qsgd_quantize(x, key, s=s), v)
+        us_rt = _time(lambda x: qsgd_roundtrip(x, key, s=s), v)
         gbps = n * 4 / (us_q / 1e6) / 1e9
         rows.append((f"kernel/qsgd_quantize_n{n}", us_q, f"GB/s={gbps:.2f}"))
         rows.append((f"kernel/qsgd_roundtrip_n{n}", us_rt, ""))
-        print(f"  qsgd n={n:>9d}: quantize {us_q:10.0f} us  roundtrip {us_rt:10.0f} us")
+
+        # packed wire: fused quantize->pack and unpack->dequantize
+        us_enc = _time(lambda x: qsgd_encode(x, key, s=s), v)
+        wire = qsgd_encode(v, key, s=s)
+        us_dec = _time(lambda w: qsgd_decode(w, s=s, shape=(n,)), wire)
+        payload_bytes = wire["payload"].size * 4 + wire["norms"].size * 4
+        ratio = n * 4 / payload_bytes
+        rows.append((f"kernel/qsgd_encode_n{n}", us_enc,
+                     f"payload_B={payload_bytes}"))
+        rows.append((f"kernel/qsgd_decode_n{n}", us_dec,
+                     f"{ratio:.2f}x_compression_vs_f32"))
+        print(f"  qsgd n={n:>9d}: quantize {us_q:10.0f} us  roundtrip "
+              f"{us_rt:10.0f} us  encode {us_enc:10.0f} us  decode "
+              f"{us_dec:10.0f} us  ({ratio:.1f}x smaller wire)")
+
+    # round-level head-to-head: packed wire vs dense-code baseline inside the
+    # scanned Fed-CHS driver (this ratio is the perf gate in run.py --json)
+    from benchmarks.common import BenchScale, build_task
+    from repro.core import FedCHSConfig
+
+    scale = BenchScale(train_size=2000, test_size=400, rounds=8 if quick else 30,
+                       local_steps=5, eval_every=100, batch_size=8)
+    task = build_task("mnist", "mlp", 0.6, scale)
+    def mk(ch):
+        return FedCHSConfig(rounds=scale.rounds, local_steps=scale.local_steps,
+                            local_epochs=5, eval_every=scale.eval_every,
+                            channel=ch, seed=0)
+    us_dense_code = _round_us(task, mk(DenseCodeQSGDChannel(s)))
+    us_packed = _round_us(task, mk(QSGDChannel(s)))
+    speedup = us_dense_code / us_packed
+    rows.append(("round/fed_chs_dense_code_qsgd", us_dense_code, ""))
+    rows.append(("round/fed_chs_packed_qsgd", us_packed,
+                 f"{speedup:.2f}x_vs_dense_code_qsgd"))
+    print(f"  fed_chs round: dense-code {us_dense_code:.0f} us  packed "
+          f"{us_packed:.0f} us  ({speedup:.2f}x)")
     return rows
 
 

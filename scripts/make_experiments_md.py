@@ -158,10 +158,15 @@ def bench_section():
         "",
         f"Machine-readable results from `benchmarks/run.py --json` ({mode} "
         "mode, 2-core CPU container; BENCH_core.json is also uploaded as a "
-        "CI artifact by the perf-smoke job, so the perf trajectory is "
-        "tracked across PRs).  `scanned_*` rows are the whole-run "
-        "`lax.scan` executor vs the looped driver / seed-style loop at 200 "
-        "rounds, steady-state.",
+        "CI artifact by the perf-smoke and kernels-smoke jobs, so the perf "
+        "trajectory is tracked across PRs).  `scanned_*` rows are the "
+        "whole-run `lax.scan` executor vs the looped driver / seed-style "
+        "loop at 200 rounds, steady-state.  The `kernel/qsgd_encode_*` rows' "
+        "`payload_B` is the byte size of the actual packed uint32 wire value "
+        "(+ f32 norm sidecar) and equals `QSGDChannel.message_bits(n) / 8` "
+        "exactly — the ledger charges what the wire weighs "
+        "(tests/test_ledger.py); `round/fed_chs_packed_qsgd` vs the "
+        "dense-code baseline is the gated round-throughput comparison.",
         "",
         "| suite | row | per-call | derived |",
         "|---|---|---|---|",

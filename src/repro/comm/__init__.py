@@ -8,15 +8,22 @@ from repro.comm.channels import (
     Channel,
     DenseChannel,
     QSGDChannel,
+    SignSGDChannel,
     TopKChannel,
+    channel_wire_bits,
+    low_bit_channel,
     make_channel,
 )
 from repro.core.ledger import CommLedger, dense_message_bits, qsgd_message_bits
 from repro.kernels.ops import (
     qsgd_compress_tree,
+    qsgd_decode,
     qsgd_dequantize,
+    qsgd_encode,
     qsgd_quantize,
     qsgd_roundtrip,
+    signsgd_decode,
+    signsgd_encode,
     topk_sparsify,
     topk_sparsify_tree,
 )
@@ -25,15 +32,22 @@ __all__ = [
     "Channel",
     "DenseChannel",
     "QSGDChannel",
+    "SignSGDChannel",
     "TopKChannel",
+    "channel_wire_bits",
+    "low_bit_channel",
     "make_channel",
     "CommLedger",
     "dense_message_bits",
     "qsgd_message_bits",
     "qsgd_compress_tree",
+    "qsgd_decode",
     "qsgd_dequantize",
+    "qsgd_encode",
     "qsgd_quantize",
     "qsgd_roundtrip",
+    "signsgd_decode",
+    "signsgd_encode",
     "topk_sparsify",
     "topk_sparsify_tree",
 ]

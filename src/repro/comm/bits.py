@@ -12,14 +12,40 @@ def dense_message_bits(num_params: int, bits_per_param: int = 32) -> int:
     return num_params * bits_per_param
 
 
-def qsgd_message_bits(num_params: int, levels: int, block: int = 2048) -> int:
-    """QSGD-encoded message size (Alistarh et al. 2017), per-block norm + per-entry
-    sign + level index. levels = s quantization levels -> ceil(log2(s+1)) bits/entry,
-    one f32 norm per block, one sign bit per entry.
-    """
-    level_bits = max(1, math.ceil(math.log2(levels + 1)))
-    n_blocks = math.ceil(num_params / block)
-    return num_params * (1 + level_bits) + n_blocks * 32
+def qsgd_code_bits(levels: int) -> int:
+    """Bits per packed QSGD entry: the sign is folded into the code
+    (c = q + s in [0, 2s]) so one entry costs ceil(log2(2s+1)) bits — equal,
+    for every s >= 1, to the 1 sign bit + ceil(log2(s+1)) level-index bits the
+    formula historically charged.  (Duplicated from `repro.kernels.ref` to
+    keep this module jax-free; a test pins the two in sync.)"""
+    return max(1, math.ceil(math.log2(2 * levels + 1)))
+
+
+def qsgd_message_bits(num_params: int, levels: int, block: int = 1024) -> int:
+    """Size of the *actual* packed QSGD wire message (Alistarh et al. 2017):
+    ceil(n/block) blocks, each carrying block packed codes
+    (ceil(log2(2s+1)) bits/entry, tail block zero-padded to full width) plus
+    one f32 norm word.  This is exactly `payload.size * 32 + norms.size * 32`
+    of the uint32 payload `qsgd_encode` emits for one flat n-vector."""
+    n_blocks = max(1, math.ceil(num_params / block))
+    return n_blocks * (qsgd_code_bits(levels) * block + 32)
+
+
+def signsgd_message_bits(num_params: int, block: int = 1024) -> int:
+    """1-bit sign-SGD wire size: 1 bit/entry (tail-padded) + one f32 scale
+    per block."""
+    n_blocks = max(1, math.ceil(num_params / block))
+    return n_blocks * (block + 32)
+
+
+def packed_wire_bits(leaf_sizes, code_bits: int, block: int = 1024) -> int:
+    """Exact wire size of a multi-leaf packed message: blocks are laid out
+    *per leaf* (padding-invariant block boundaries), so each leaf rounds up to
+    whole blocks independently."""
+    total = 0
+    for n in leaf_sizes:
+        total += max(1, math.ceil(n / block)) * (code_bits * block + 32)
+    return total
 
 
 def topk_message_bits(num_params: int, fraction: float, bits_per_param: int = 32) -> int:

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 import numpy as np
 
-from repro.comm.channels import Channel, DenseChannel, make_channel
+from repro.comm.channels import Channel, DenseChannel, channel_wire_bits, make_channel
 from repro.core.engine import (
     RoundEngine,
     ScanPlan,
@@ -95,7 +95,7 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
     key = jax.random.PRNGKey(config.seed + 1)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
-    up_bits = channel.message_bits(d)
+    up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     recorder = RunRecorder(task, config.rounds, config.eval_every)
     n = task.num_clients
@@ -221,7 +221,7 @@ def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
     )
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
-    up_bits = channel.message_bits(d)
+    up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     def traffic(track_events: bool):
         for t in range(R):

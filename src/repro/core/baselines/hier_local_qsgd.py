@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.channels import Channel, DenseChannel, make_channel
+from repro.comm.channels import Channel, DenseChannel, channel_wire_bits, make_channel
 from repro.core.engine import (
     RoundEngine,
     ScanPlan,
@@ -112,8 +112,8 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
     key = jax.random.PRNGKey(config.seed + 1)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
-    up_bits = channel.message_bits(d)
-    es_up_bits = es_channel.message_bits(d)
+    up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
+    es_up_bits = channel_wire_bits(es_channel, d, task.param_leaf_sizes())
 
     M = task.num_clusters
     gammas, mask = task.padded_cluster_weights()
@@ -324,8 +324,8 @@ def _hier_scan_plan(task: FLTask, source, config: HierLocalQSGDConfig):
     )
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
-    up_bits = channel.message_bits(d)
-    es_up_bits = es_channel.message_bits(d)
+    up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
+    es_up_bits = channel_wire_bits(es_channel, d, task.param_leaf_sizes())
 
     def traffic(track_events: bool):
         for t in range(R):

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.channels import DenseChannel
+from repro.comm.channels import DenseChannel, channel_wire_bits
 from repro.core.engine import RoundEngine, ScanPlan, run_scan, scan_grad_body
 from repro.core.ledger import CommLedger
 from repro.core.simulation import FLTask, RunRecorder, RunResult
@@ -102,7 +102,7 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
     ledger = CommLedger(track_events=config.track_events)
     channel = DenseChannel(config.bits_per_param)
     engine = RoundEngine(task.model, channel)
-    hop_bits = channel.message_bits(d)
+    hop_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
     gamma_one = jnp.ones((1,), jnp.float32)
 
     # the walk is pure host rng, independent of the training state — both
@@ -174,7 +174,7 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
         chunk_rounds=config.chunk_rounds,
     )
 
-    hop_bits = channel.message_bits(d)
+    hop_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     def traffic(track_events: bool):
         del track_events  # one metered hop per round either way

@@ -144,13 +144,22 @@ def dummy_subs(*lead: int) -> jnp.ndarray:
 def compress_uplinks(channel: Channel, deltas: PyTree, sub: jax.Array) -> PyTree:
     """Compress a stacked uplink (leading sender axis on every leaf).
 
-    `per_message` channels (e.g. Top-K, whose selection couples entries) are
-    vmapped over the sender axis with per-sender keys; others transform the
-    stacked leaves directly (QSGD's historical stacked-leaf semantics)."""
+    `per_message` channels (every lossy channel: QSGD/sign-SGD encode each
+    sender's message against its own per-leaf blocks; Top-K selection couples
+    entries within one message) are vmapped over the sender axis with
+    per-sender `fold_in(sub, slot)` keys.  fold_in — not `random.split` — is
+    load-bearing: split(sub, n) changes *every* subkey when n changes, while
+    fold_in keys slot i independently of how many slots the stacked uplink
+    carries, so a run padded to n_max senders (the whole-run scan path) hands
+    each real sender the exact key the unpadded looped path would.  Padded
+    slots carry zero deltas, which every wire channel encodes to zero norms
+    and decodes to exact zeros.  Dense transforms the stack directly."""
     if getattr(channel, "per_message", False):
         n = jax.tree.leaves(deltas)[0].shape[0]
-        keys = jax.random.split(sub, n)
-        return jax.vmap(lambda d, k: channel.compress(d, k))(deltas, keys)
+        slots = jnp.arange(n)
+        return jax.vmap(
+            lambda d, i: channel.compress(d, jax.random.fold_in(sub, i))
+        )(deltas, slots)
     return channel.compress(deltas, sub)
 
 

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.channels import Channel, DenseChannel, make_channel
+from repro.comm.channels import Channel, DenseChannel, channel_wire_bits, make_channel
 from repro.core.engine import (
     RoundEngine,
     ScanPlan,
@@ -123,26 +123,14 @@ def _make_scheduler(task: FLTask, config: FedCHSConfig, topo, m0: int):
 def _fed_chs_scannable(task: FLTask, config: FedCHSConfig) -> bool:
     """Whether this run can take the whole-run scan path bit-identically.
 
-    Dynamic topologies need per-round host decisions (the looped path's
-    reason to exist).  Ragged cluster sizes force the scan to pad every round
-    to n_max clients, which is exact for padding-invariant channels (Dense:
-    identity; per-message channels like Top-K: senders compressed
-    independently) but NOT for stacked-leaf stochastic quantization (QSGD
-    blocks span the concatenated client axis, so padding shifts block
-    alignment and changes every entry's stochastic rounding) — those runs
-    stay on the looped driver.
+    Only dynamic topologies can't: IoV/LEO per-round graphs genuinely need
+    per-round host decisions (the looped path's reason to exist).  Ragged
+    cluster sizes used to force stacked-leaf QSGD onto the looped driver
+    (padding to n_max shifted block alignment); with per-leaf block
+    boundaries and per-sender fold_in keys every channel is now
+    padding-invariant, so ragged clusters scan bit-identically too.
     """
-    if config.dynamic is not None:
-        return False
-    ragged = len({len(m) for m in task.cluster_members}) > 1
-    if not ragged:
-        return True
-    channel = (
-        config.channel
-        if config.channel is not None
-        else make_channel(config.qsgd_levels, config.bits_per_param)
-    )
-    return (not channel.stochastic) or getattr(channel, "per_message", False)
+    return config.dynamic is None
 
 
 def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
@@ -186,7 +174,7 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
     key = jax.random.PRNGKey(config.seed + 1)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)  # model broadcast
-    up_bits = channel.message_bits(d)
+    up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     # literal Eq. (5): E=1 dense plain-SGD interactions are gradient uplinks
     # fused into the per-step gamma-weighted SGD scan (explicit PlainSGD is
@@ -447,7 +435,7 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
                     chunk_rounds=config.chunk_rounds)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
-    up_bits = channel.message_bits(d)
+    up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     def traffic(track_events: bool):
         """Closed-form per-round ledger entries from the precomputed

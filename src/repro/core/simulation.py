@@ -187,6 +187,12 @@ class FLTask:
     def num_params(self) -> int:
         return tree_num_params(self.init_params())
 
+    def param_leaf_sizes(self) -> tuple[int, ...]:
+        """Per-leaf entry counts of the params pytree, in leaf order — what a
+        wire channel needs to price a message exactly (packed blocks are laid
+        out per leaf, so each leaf rounds up to whole blocks independently)."""
+        return tuple(leaf.size for leaf in jax.tree.leaves(self.init_params()))
+
     def evaluate(self, params: PyTree) -> float:
         """The task's scalar quality metric (accuracy, perplexity, ...)."""
         return self.fed_model.eval_metric(params, self.source.eval_data())

@@ -65,8 +65,7 @@ def run_sweep(task: FLTask, config, seeds) -> list[RunResult]:
         "sampler-driven runs must go through the per-seed drivers"
     if isinstance(config, FedCHSConfig):
         assert _fed_chs_scannable(task, config), \
-            "this Fed-CHS config needs the looped driver (dynamic topology " \
-            "or padding-sensitive channel on ragged clusters)"
+            "this Fed-CHS config needs the looped driver (dynamic topology)"
 
     seeds = list(seeds)
     plans, params_ofs, traffics = [], [], []

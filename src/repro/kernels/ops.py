@@ -6,13 +6,30 @@ kernels themselves (qsgd.py) only see dense (n_blocks, block) tiles.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qsgd import ROWS_PER_TILE, qsgd_dequantize_blocks, qsgd_quantize_blocks
-from repro.kernels.ref import qsgd_dequantize_blocks_ref, qsgd_quantize_blocks_ref
+from repro.kernels.qsgd import (
+    ROWS_PER_TILE,
+    _pack_words,
+    _unpack_words,
+    qsgd_dequantize_blocks,
+    qsgd_quantize_blocks,
+    qsgd_quantize_pack_blocks,
+    qsgd_unpack_dequantize_blocks,
+)
+from repro.kernels.ref import (
+    qsgd_code_bits,
+    qsgd_dequantize_blocks_ref,
+    qsgd_dequantize_codes_ref,
+    qsgd_quantize_blocks_ref,
+    qsgd_quantize_codes_ref,
+    signsgd_dequantize_codes_ref,
+    signsgd_quantize_codes_ref,
+)
 
 PyTree = Any
 DEFAULT_BLOCK = 1024
@@ -64,11 +81,123 @@ def qsgd_roundtrip(v: jnp.ndarray, key: jax.Array, *, s: int = 16, block: int = 
     return qsgd_dequantize(q, norms, s=s, shape=tuple(v.shape), block=block)
 
 
-def qsgd_compress_tree(tree: PyTree, key: jax.Array, *, s: int = 16) -> PyTree:
-    """Apply the QSGD channel leaf-wise to a gradient pytree."""
-    leaves, treedef = jax.tree.flatten(tree)
+# --------------------------------------------------------------------------
+# packed wire format: fused quantize→pack / unpack→dequantize
+# --------------------------------------------------------------------------
+# On TPU the fused Pallas kernels run; elsewhere the fallback is the same
+# *vectorized* jnp pack/unpack the kernels use internally (`_pack_words` /
+# `_unpack_words`: one iota + per-plane reduction, no python-per-bit index
+# loops) composed with the oracle's vectorized quantize math — bit-identical
+# to the naive `ref.pack_codes_ref` oracle (pinned by tests) but XLA-fusable.
+
+
+def _leaf_blocks(n: int, block: int) -> int:
+    return max(1, math.ceil(n / block))
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block"))
+def qsgd_encode(v: jnp.ndarray, key: jax.Array, *, s: int = 16, block: int = DEFAULT_BLOCK):
+    """Encode one leaf to its wire form: {'payload': uint32 (nb, b*block/32),
+    'norms': f32 (nb,)} with nb = ceil(v.size / block) blocks *per leaf* —
+    block boundaries never depend on anything outside this leaf, so stacking,
+    padding, or concatenating messages cannot shift them.
+    """
+    # named_scope tags every op with op_name=".../qsgd_encode/..." so
+    # roofline.attribution.phase_bytes can bill the quantize+pack cost
+    with jax.named_scope("qsgd_encode"):
+        n = v.size
+        nb = _leaf_blocks(n, block)
+        flat = jnp.zeros((nb * block,), jnp.float32).at[:n].set(
+            v.reshape(-1).astype(jnp.float32))
+        blocks = flat.reshape(nb, block)
+        u = jax.random.uniform(key, blocks.shape, jnp.float32)
+        if _use_pallas():
+            payload, norms = qsgd_quantize_pack_blocks(blocks, u, s=s)
+        else:
+            codes, norms = qsgd_quantize_codes_ref(blocks, u, s)
+            payload = _pack_words(codes, qsgd_code_bits(s))
+        return {"payload": payload, "norms": norms}
+
+
+@functools.partial(jax.jit, static_argnames=("s", "shape", "block"))
+def qsgd_decode(wire, *, s: int = 16, shape: tuple = (), block: int = DEFAULT_BLOCK):
+    """Receiver side: unpack + dequantize a wire dict back to a (shape) f32 leaf."""
+    with jax.named_scope("qsgd_decode"):
+        payload, norms = wire["payload"], wire["norms"]
+        if _use_pallas():
+            blocks = qsgd_unpack_dequantize_blocks(payload, norms, s=s, block=block)
+        else:
+            codes = _unpack_words(payload, qsgd_code_bits(s))
+            blocks = qsgd_dequantize_codes_ref(codes, norms, s)
+        n = math.prod(shape) if shape else blocks.size
+        return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def qsgd_encode_tree(tree: PyTree, key: jax.Array, *, s: int = 16,
+                     block: int = DEFAULT_BLOCK) -> list:
+    """Encode every leaf of a message pytree; returns wire dicts in leaf order
+    (the packed payloads + norm sidecars are the values that cross a channel)."""
+    leaves, _ = jax.tree.flatten(tree)
     keys = jax.random.split(key, len(leaves))
-    out = [qsgd_roundtrip(leaf, k, s=s).astype(leaf.dtype) for leaf, k in zip(leaves, keys)]
+    return [qsgd_encode(leaf, k, s=s, block=block) for leaf, k in zip(leaves, keys)]
+
+
+def qsgd_decode_tree(wires: list, like: PyTree, *, s: int = 16,
+                     block: int = DEFAULT_BLOCK) -> PyTree:
+    """Decode wire dicts (leaf order) back into the structure/dtypes of `like`."""
+    leaves, treedef = jax.tree.flatten(like)
+    out = [
+        qsgd_decode(w, s=s, shape=tuple(leaf.shape), block=block).astype(leaf.dtype)
+        for w, leaf in zip(wires, leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def qsgd_compress_tree(tree: PyTree, key: jax.Array, *, s: int = 16,
+                       block: int = DEFAULT_BLOCK) -> PyTree:
+    """The QSGD channel roundtrip: encode to the packed wire format, decode at
+    the receiver. Leaf-wise with per-leaf PRNG keys."""
+    return qsgd_decode_tree(qsgd_encode_tree(tree, key, s=s, block=block), tree,
+                            s=s, block=block)
+
+
+# -- sign-SGD (1-bit) ---------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def signsgd_encode(v: jnp.ndarray, *, block: int = DEFAULT_BLOCK):
+    """1-bit sign codes + per-block mean-|v| scale. Deterministic (no key)."""
+    with jax.named_scope("signsgd_encode"):
+        n = v.size
+        nb = _leaf_blocks(n, block)
+        flat = jnp.zeros((nb * block,), jnp.float32).at[:n].set(
+            v.reshape(-1).astype(jnp.float32))
+        blocks = flat.reshape(nb, block)
+        codes, scales = signsgd_quantize_codes_ref(blocks)
+        return {"payload": _pack_words(codes, 1), "norms": scales}
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "block"))
+def signsgd_decode(wire, *, shape: tuple = (), block: int = DEFAULT_BLOCK):
+    with jax.named_scope("signsgd_decode"):
+        codes = _unpack_words(wire["payload"], 1)
+        blocks = signsgd_dequantize_codes_ref(codes, wire["norms"])
+        n = math.prod(shape) if shape else blocks.size
+        return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def signsgd_compress_tree(tree: PyTree, *, block: int = DEFAULT_BLOCK) -> PyTree:
+    """Sign-SGD channel roundtrip, leaf-wise. Note the *padding* subtlety: the
+    tail block's zero padding decodes to +scale like any non-negative entry,
+    but those slots are sliced off before the leaf is rebuilt — and an all-zero
+    leaf (e.g. a masked-out sender's delta) has scale 0 everywhere, so it
+    decodes to exact zeros."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out = [
+        signsgd_decode(signsgd_encode(leaf, block=block), shape=tuple(leaf.shape),
+                       block=block).astype(leaf.dtype)
+        for leaf in leaves
+    ]
     return jax.tree.unflatten(treedef, out)
 
 

@@ -9,6 +9,20 @@ TPU adaptation notes (vs the CPU/GPU reference implementations of QSGD):
   * stochastic rounding consumes an explicit uniform tensor (generated with
     jax.random outside) instead of on-chip RNG — keeps the kernel a pure
     function, bit-identical to ref.py, and validated under interpret=True.
+
+The fused quantize→pack / unpack→dequantize pair emits/consumes the packed
+uint32 wire format defined (bit-for-bit) by `ref.pack_codes_ref`: sign-folded
+codes, bit-plane packed, b = ceil(log2(2s+1)) bits per entry.  The pack
+reduction runs over the *sublane* axis of a (rows, 32, W) view — every word
+sums 32 single-bit terms at distinct bit positions, so a uint32 add is an
+exact bitwise OR — keeping the lane axis contiguous for the VPU.  `s` and
+`bits` are static closure args (functools.partial), not scalar operands, so
+the per-bit loop unrolls at trace time.
+
+All wrappers accept any n_blocks: tail tiles are handled by host-side
+pad-to-ROWS_PER_TILE + slice (padding rows are all-zero -> zero norms -> the
+kernel's zero-norm guard makes them inert), so arbitrary model dims never
+trip a grid assert.
 """
 from __future__ import annotations
 
@@ -18,7 +32,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import qsgd_code_bits
+
 ROWS_PER_TILE = 8  # 8 x 1024 f32 = 32 KiB per input tile; 4 tensors in flight << 16 MiB VMEM
+
+
+def _pad_rows(arrs, n_blocks: int, rows_per_tile: int):
+    """Host-side tail-tile fix: zero-pad the leading (block-row) axis of every
+    array to a multiple of rows_per_tile. Returns (padded arrays, padded rows)."""
+    padded = ((n_blocks + rows_per_tile - 1) // rows_per_tile) * rows_per_tile
+    if padded == n_blocks:
+        return arrs, n_blocks
+    out = [
+        jnp.zeros((padded,) + a.shape[1:], a.dtype).at[:n_blocks].set(a) for a in arrs
+    ]
+    return out, padded
 
 
 def _quantize_kernel(v_ref, u_ref, s_ref, q_ref, n_ref):
@@ -49,12 +77,12 @@ def _interpret() -> bool:
 def qsgd_quantize_blocks(
     v: jnp.ndarray, u: jnp.ndarray, *, s: int, rows_per_tile: int = ROWS_PER_TILE
 ):
-    """v, u: (n_blocks, block) f32 -> (q int8, norms f32). n_blocks % rows_per_tile == 0."""
+    """v, u: (n_blocks, block) f32 -> (q int8, norms f32). Any n_blocks."""
     n_blocks, block = v.shape
-    assert n_blocks % rows_per_tile == 0, (n_blocks, rows_per_tile)
-    grid = (n_blocks // rows_per_tile,)
+    (v, u), padded = _pad_rows([v, u], n_blocks, rows_per_tile)
+    grid = (padded // rows_per_tile,)
     s_arr = jnp.full((1,), float(s), jnp.float32)
-    return pl.pallas_call(
+    q, norms = pl.pallas_call(
         _quantize_kernel,
         grid=grid,
         in_specs=[
@@ -67,11 +95,12 @@ def qsgd_quantize_blocks(
             pl.BlockSpec((rows_per_tile,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_blocks, block), jnp.int8),
-            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+            jax.ShapeDtypeStruct((padded, block), jnp.int8),
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
         ],
         interpret=_interpret(),
     )(v, u, s_arr)
+    return q[:n_blocks], norms[:n_blocks]
 
 
 @functools.partial(jax.jit, static_argnames=("s", "rows_per_tile"))
@@ -79,10 +108,10 @@ def qsgd_dequantize_blocks(
     q: jnp.ndarray, norms: jnp.ndarray, *, s: int, rows_per_tile: int = ROWS_PER_TILE
 ):
     n_blocks, block = q.shape
-    assert n_blocks % rows_per_tile == 0
-    grid = (n_blocks // rows_per_tile,)
+    (q, norms), padded = _pad_rows([q, norms], n_blocks, rows_per_tile)
+    grid = (padded // rows_per_tile,)
     s_arr = jnp.full((1,), float(s), jnp.float32)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _dequantize_kernel,
         grid=grid,
         in_specs=[
@@ -91,6 +120,123 @@ def qsgd_dequantize_blocks(
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((rows_per_tile, block), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_blocks, block), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((padded, block), jnp.float32),
         interpret=_interpret(),
     )(q, norms, s_arr)
+    return out[:n_blocks]
+
+
+# --------------------------------------------------------------------------
+# fused quantize→bit-pack / unpack→dequantize (the packed wire format)
+# --------------------------------------------------------------------------
+
+
+def _pack_words(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(rows, block) uint32 codes -> (rows, bits * block/32) uint32 payload.
+
+    Layout defined by `ref.pack_codes_ref`.  The (rows, 32, W) view puts the
+    32 codes of a word on the sublane axis; each plane word is a 32-term sum
+    of single bits at distinct positions (an exact OR in uint32 arithmetic).
+    """
+    rows, block = codes.shape
+    w_per_plane = block // 32
+    c = codes.reshape(rows, 32, w_per_plane)
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (rows, 32, w_per_plane), 1)
+    planes = [
+        jnp.sum(((c >> jnp.uint32(j)) & jnp.uint32(1)) << pos, axis=1, dtype=jnp.uint32)
+        for j in range(bits)
+    ]
+    return jnp.concatenate(planes, axis=1)
+
+
+def _unpack_words(payload: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Exact inverse of `_pack_words`: (rows, bits*W) uint32 -> (rows, 32*W)."""
+    rows = payload.shape[0]
+    w_per_plane = payload.shape[1] // bits
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (rows, 32, w_per_plane), 1)
+    c = jnp.zeros((rows, 32, w_per_plane), jnp.uint32)
+    for j in range(bits):
+        word = jax.lax.slice_in_dim(payload, j * w_per_plane, (j + 1) * w_per_plane, axis=1)
+        c = c | (((word[:, None, :] >> pos) & jnp.uint32(1)) << jnp.uint32(j))
+    return c.reshape(rows, 32 * w_per_plane)
+
+
+def _quantize_pack_kernel(v_ref, u_ref, payload_ref, n_ref, *, s: int, bits: int):
+    v = v_ref[...]  # (rows, block) f32
+    u = u_ref[...]
+    norms = jnp.sqrt(jnp.sum(v * v, axis=1))
+    safe = jnp.where(norms > 0, norms, 1.0)
+    p = jnp.abs(v) / safe[:, None] * s
+    q = jnp.clip(jnp.floor(p + u), 0.0, float(s))
+    q = jnp.where(norms[:, None] > 0, q, 0.0)
+    codes = (jnp.sign(v) * q + s).astype(jnp.uint32)  # sign-folded, in [0, 2s]
+    payload_ref[...] = _pack_words(codes, bits)
+    n_ref[...] = norms.astype(jnp.float32)
+
+
+def _unpack_dequantize_kernel(payload_ref, n_ref, v_ref, *, s: int, bits: int):
+    codes = _unpack_words(payload_ref[...], bits)
+    q = codes.astype(jnp.int32) - s
+    v_ref[...] = q.astype(jnp.float32) * (n_ref[...][:, None] / s)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "rows_per_tile"))
+def qsgd_quantize_pack_blocks(
+    v: jnp.ndarray, u: jnp.ndarray, *, s: int, rows_per_tile: int = ROWS_PER_TILE
+):
+    """Fused quantize + bit-pack: v, u (n_blocks, block) f32 ->
+    (payload uint32 (n_blocks, bits*block/32), norms f32 (n_blocks,))."""
+    n_blocks, block = v.shape
+    assert block % 32 == 0, block
+    bits = qsgd_code_bits(s)
+    words = bits * (block // 32)
+    (v, u), padded = _pad_rows([v, u], n_blocks, rows_per_tile)
+    grid = (padded // rows_per_tile,)
+    payload, norms = pl.pallas_call(
+        functools.partial(_quantize_pack_kernel, s=s, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_tile, block), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_tile, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows_per_tile, words), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, words), jnp.uint32),
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(v, u)
+    return payload[:n_blocks], norms[:n_blocks]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block", "rows_per_tile"))
+def qsgd_unpack_dequantize_blocks(
+    payload: jnp.ndarray,
+    norms: jnp.ndarray,
+    *,
+    s: int,
+    block: int,
+    rows_per_tile: int = ROWS_PER_TILE,
+):
+    """Fused unpack + dequantize: (n_blocks, bits*block/32) uint32 payload +
+    (n_blocks,) f32 norms -> (n_blocks, block) f32."""
+    n_blocks = payload.shape[0]
+    bits = qsgd_code_bits(s)
+    assert payload.shape[1] == bits * (block // 32), (payload.shape, bits, block)
+    (payload, norms), padded = _pad_rows([payload, norms], n_blocks, rows_per_tile)
+    grid = (padded // rows_per_tile,)
+    out = pl.pallas_call(
+        functools.partial(_unpack_dequantize_kernel, s=s, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_tile, payload.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_tile, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, block), jnp.float32),
+        interpret=_interpret(),
+    )(payload, norms)
+    return out[:n_blocks]

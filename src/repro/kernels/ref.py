@@ -8,10 +8,32 @@ QSGD (Alistarh et al., 2017) stochastic quantization, per-block:
   and decoded as  sign * q_i / s * n.
 The stochastic rounding is driven by an explicit uniform tensor `u` so the
 kernel and the oracle are bit-identical (and the kernel needs no on-chip RNG).
+
+The packed wire format (what actually crosses a channel):
+  * code  c = sign(v)*q + s  in [0, 2s]  — the sign is folded into the code,
+    so one entry costs b = ceil(log2(2s+1)) bits (== 1 + ceil(log2(s+1)),
+    the sign-bit + level-index count the accounting always claimed);
+  * codes are bit-plane packed into uint32 words: with W = block/32 words
+    per plane, word `j*W + w` of a block row holds bit j of the 32 codes
+    {k*W + w : k in 0..31}, with code k*W+w's bit in bit position k.  The
+    payload of an (n_blocks, block) code array is (n_blocks, b*W) uint32 —
+    exactly b bits per entry, zero slack;
+  * per-block L2 norms travel as an f32 sidecar (one word per block).
+The interleaved entry->word map (stride W, not 32) keeps the pack reduction
+over the *sublane* axis of a (rows, 32, W) reshape, so the lane axis of the
+Pallas kernel is the word axis — the layout is chosen for the TPU, and the
+oracles here define it bit-for-bit.
 """
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
+
+
+def qsgd_code_bits(s: int) -> int:
+    """Bits per packed QSGD entry: codes live in [0, 2s], sign included."""
+    return max(1, math.ceil(math.log2(2 * s + 1)))
 
 
 def qsgd_quantize_blocks_ref(v: jnp.ndarray, u: jnp.ndarray, s: int):
@@ -32,6 +54,68 @@ def qsgd_quantize_blocks_ref(v: jnp.ndarray, u: jnp.ndarray, s: int):
 def qsgd_dequantize_blocks_ref(q: jnp.ndarray, norms: jnp.ndarray, s: int) -> jnp.ndarray:
     """Inverse map: (n_blocks, block) int8, (n_blocks,) f32 -> f32 blocks."""
     return q.astype(jnp.float32) * (norms[:, None] / s)
+
+
+def qsgd_quantize_codes_ref(v: jnp.ndarray, u: jnp.ndarray, s: int):
+    """Sign-folded codes: (n_blocks, block) f32 -> (codes uint32 in [0, 2s],
+    norms f32). code = sign(v)*q + s; zero-norm blocks emit the all-`s`
+    (all-zero-valued) row."""
+    q, norms = qsgd_quantize_blocks_ref(v, u, s)
+    return (q.astype(jnp.int32) + s).astype(jnp.uint32), norms
+
+
+def qsgd_dequantize_codes_ref(codes: jnp.ndarray, norms: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Inverse of the sign-folded map: c -> (c - s) * norm / s."""
+    q = codes.astype(jnp.int32) - s
+    return q.astype(jnp.float32) * (norms[:, None] / s)
+
+
+def pack_codes_ref(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Bit-plane pack (naive double loop — the layout's definition).
+
+    codes: (n_blocks, block) uint32, each < 2**bits, block % 32 == 0.
+    Returns (n_blocks, bits * block/32) uint32, plane-major: plane j occupies
+    words [j*W, (j+1)*W); word w of a plane packs bit j of codes
+    {k*W + w : k in 0..31} with code k*W+w in bit position k.
+    """
+    nb, block = codes.shape
+    assert block % 32 == 0, block
+    w_per_plane = block // 32
+    c = codes.astype(jnp.uint32).reshape(nb, 32, w_per_plane)
+    planes = []
+    for j in range(bits):
+        word = jnp.zeros((nb, w_per_plane), jnp.uint32)
+        for k in range(32):
+            word = word | (((c[:, k, :] >> j) & 1) << k)
+        planes.append(word)
+    return jnp.concatenate(planes, axis=1)
+
+
+def unpack_codes_ref(payload: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Exact inverse of `pack_codes_ref`: (n_blocks, bits*W) -> (n_blocks, 32*W)."""
+    nb, total = payload.shape
+    assert total % bits == 0, (total, bits)
+    w_per_plane = total // bits
+    c = jnp.zeros((nb, 32, w_per_plane), jnp.uint32)
+    for j in range(bits):
+        word = payload[:, j * w_per_plane : (j + 1) * w_per_plane]
+        for k in range(32):
+            c = c.at[:, k, :].set(c[:, k, :] | (((word >> k) & 1) << j))
+    return c.reshape(nb, 32 * w_per_plane)
+
+
+def signsgd_quantize_codes_ref(v: jnp.ndarray):
+    """1-bit sign-SGD codes with per-block norm scaling: code 1 = non-negative,
+    scale = mean |v| per block (the l1/n scaling of Bernstein et al.'s
+    scaled signSGD). Returns (codes uint32 in {0,1}, scales f32)."""
+    scales = jnp.mean(jnp.abs(v), axis=1)
+    return (v >= 0).astype(jnp.uint32), scales.astype(jnp.float32)
+
+
+def signsgd_dequantize_codes_ref(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Decode ±scale; all-zero blocks (scale 0) decode to exact zeros."""
+    sign = codes.astype(jnp.float32) * 2.0 - 1.0
+    return sign * scales[:, None]
 
 
 def weighted_aggregate_ref(grads: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:

@@ -1,7 +1,12 @@
 """roofline.attribution on a hand-written post-optimization HLO module:
-trip scaling through while bodies, the 2x all-reduce factor, skip-list."""
+trip scaling through while bodies, the 2x all-reduce factor, skip-list,
+and op_name-phase grouping (phase_bytes)."""
 
-from repro.roofline.attribution import collective_breakdown, top_output_bytes
+from repro.roofline.attribution import (
+    collective_breakdown,
+    phase_bytes,
+    top_output_bytes,
+)
 
 # 8*4*4 = 128 B all-reduce inside a 48-trip while; 16*4 = 64 B permute outside
 HLO = """\
@@ -61,3 +66,41 @@ def test_top_output_bytes_scaling_and_skips():
     # the all-reduce output inside the loop is also trip-scaled
     ar = next(r for r in rows if r["name"] == "ar")
     assert ar["bytes"] == 128 * 48
+
+
+def test_phase_bytes_groups_by_op_name():
+    got = phase_bytes(HLO, {"comm": r"psum|ppermute"})
+    # tagged: in-loop all-reduce output (128 B x 48) + permute (64 B)
+    assert got["comm"] == 128 * 48 + 64
+    # untagged non-bookkeeping: the 16 KiB multiply x 48 (+ tiny cond pred)
+    assert got["other"] >= 64 * 64 * 4 * 48
+    # first-match-wins: a pattern hitting everything leaves nothing behind
+    all_in = phase_bytes(HLO, {"everything": r""})
+    assert "other" not in all_in or all_in["other"] == 0.0
+
+
+def test_phase_bytes_attributes_qsgd_wire_cost_end_to_end():
+    """The named_scope tags in kernels/ops.py survive jit into compiled HLO:
+    phase_bytes on a real encode→decode roundtrip bills nonzero bytes to both
+    phases. This is the hook benchmarks use to attribute quantize/pack cost."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import qsgd_decode, qsgd_encode
+
+    def roundtrip(v, key):
+        wire = qsgd_encode(v, key, s=16)
+        return qsgd_decode(wire, s=16, shape=(4096,))
+
+    hlo = (
+        jax.jit(roundtrip)
+        .lower(jnp.zeros((4096,)), jax.random.PRNGKey(0))
+        .compile()
+        .as_text()
+    )
+    got = phase_bytes(hlo, {"encode": r"qsgd_encode", "decode": r"qsgd_decode"})
+    assert got.get("encode", 0.0) > 0.0
+    assert got.get("decode", 0.0) > 0.0
+    # the payload itself (4 blocks x 6-bit planes x 32 words x 4 B) plus the
+    # uniform draw and intermediates: encode moves at least the payload bytes
+    assert got["encode"] >= 4 * 6 * 32 * 4

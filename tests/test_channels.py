@@ -10,7 +10,10 @@ from repro.comm import (
     Channel,
     DenseChannel,
     QSGDChannel,
+    SignSGDChannel,
     TopKChannel,
+    channel_wire_bits,
+    low_bit_channel,
     make_channel,
 )
 from repro.core.ledger import dense_message_bits, qsgd_message_bits
@@ -132,6 +135,62 @@ def test_split_chain_matches_eager_chain():
     k_chain, subs = split_chain(key, 5)
     assert bool(jnp.all(k_chain == k_eager))
     assert bool(jnp.all(subs == jnp.stack(subs_eager)))
+
+
+def test_low_bit_channel_table():
+    """The wire width (code bits per entry) is exactly the advertised budget."""
+    from repro.comm.bits import qsgd_code_bits
+
+    for bits, ch in [(8, low_bit_channel(8)), (4, low_bit_channel(4)),
+                     (2, low_bit_channel(2))]:
+        assert isinstance(ch, QSGDChannel)
+        assert qsgd_code_bits(ch.levels) == bits
+    assert isinstance(low_bit_channel(1), SignSGDChannel)
+    try:
+        low_bit_channel(3)
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass
+
+
+def test_wire_bits_matches_actual_payload():
+    """channel_wire_bits prices exactly what encode() emits (also pinned
+    end-to-end in test_ledger.py against a real run's events)."""
+    tree = _tree()
+    sizes = tuple(leaf.size for leaf in jax.tree.leaves(tree))
+    d = sum(sizes)
+    for ch in (QSGDChannel(16), QSGDChannel(1), SignSGDChannel()):
+        wires = ch.encode(tree, jax.random.PRNGKey(0))
+        measured_bits = 8 * sum(
+            w["payload"].size * 4 + w["norms"].size * 4 for w in wires)
+        assert channel_wire_bits(ch, d, sizes) == measured_bits
+    # dense has no encode(): the helper falls back to message_bits(d)
+    assert channel_wire_bits(DenseChannel(), d, sizes) == dense_message_bits(d)
+
+
+def test_signsgd_channel_properties():
+    ch = SignSGDChannel()
+    assert isinstance(ch, Channel)
+    assert not ch.stochastic  # deterministic: no rounding noise
+    assert ch.per_message
+    tree = _tree()
+    out = ch.compress(tree, jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        a, b = np.asarray(a), np.asarray(b)
+        # decode is +/- (per-block mean |.|): signs preserved everywhere
+        np.testing.assert_array_equal(np.sign(a) != 0,
+                                      np.abs(b) > 0)
+        np.testing.assert_array_equal(np.sign(a), np.sign(b))
+
+
+def test_qsgd_channel_compress_is_decode_of_encode():
+    tree = _tree()
+    key = jax.random.PRNGKey(11)
+    ch = QSGDChannel(7)
+    via_wire = ch.decode(ch.encode(tree, key), tree)
+    direct = ch.compress(tree, key)
+    for a, b in zip(jax.tree.leaves(via_wire), jax.tree.leaves(direct)):
+        assert bool(jnp.all(a == b))
 
 
 def test_topk_channel_drives_fed_chs_end_to_end(small_task):

@@ -4,10 +4,14 @@ pre-refactor (host-level, per-interaction) loop implementations at fixed seed.
 The reference implementations below are verbatim copies of the pre-engine
 driver loops: eager per-interaction staging, per-interaction `float()` host
 syncs, Python loops over clusters, `key, sub = jax.random.split(key)` chains.
-The one intentional deviation is the Hier-Local-QSGD ES->PS hop, which now
-splits its PRNG key per leaf (the historical implementation reused one subkey
-for every layer — the bug class the Channel abstraction removes); the
-reference mirrors the FIXED behavior via `qsgd_compress_tree`.
+Two intentional deviations: (1) the Hier-Local-QSGD ES->PS hop splits its
+PRNG key per leaf (the historical implementation reused one subkey for every
+layer — the bug class the Channel abstraction removes); (2) stacked client
+uplinks compress per-sender with `fold_in(sub, slot)` keys and per-leaf
+packed-wire block boundaries (the packed-QSGD refactor: a sender's encoding
+is independent of how many senders share the stacked uplink, which is what
+lets ragged clusters run under the whole-run scan).  The references mirror
+both via `qsgd_compress_tree` under an explicit per-sender vmap.
 
 Tolerance: losses within 1e-5, accuracies within 1e-5 (test-set accuracy is
 quantized in steps of 1/test_size, so this effectively requires identical
@@ -35,6 +39,16 @@ from repro.core.topology import make_topology
 from repro.kernels.ops import qsgd_compress_tree
 from repro.optim.schedules import paper_sqrt_schedule
 from repro.utils import tree_add
+
+
+def _compress_stacked(deltas, sub, levels):
+    """The engine's stacked-uplink keying (see `engine.compress_uplinks`):
+    sender slot i compresses under fold_in(sub, i), so its message is
+    independent of the stacked width."""
+    n = jax.tree.leaves(deltas)[0].shape[0]
+    return jax.vmap(
+        lambda d, i: qsgd_compress_tree(d, jax.random.fold_in(sub, i), s=levels)
+    )(deltas, jnp.arange(n))
 
 
 def _assert_trajectories_match(ref, new, atol=1e-5):
@@ -88,7 +102,7 @@ def ref_fed_chs(task, config):
                 deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
                 if config.qsgd_levels is not None:
                     key, sub = jax.random.split(key)
-                    deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
+                    deltas = _compress_stacked(deltas, sub, config.qsgd_levels)
                 agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
                 params = tree_add(params, agg)
                 loss_acc += float(jnp.mean(losses))
@@ -123,7 +137,7 @@ def ref_fedavg(task, config):
         deltas = jax.tree.map(lambda np_, op: np_ - op[None], new_p, params)
         if config.qsgd_levels is not None:
             key, sub = jax.random.split(key)
-            deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
+            deltas = _compress_stacked(deltas, sub, config.qsgd_levels)
         agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
         params = tree_add(params, agg)
 
@@ -200,7 +214,7 @@ def ref_hier_local_qsgd(task, config):
                 )
                 if config.qsgd_levels is not None:
                     key, sub = jax.random.split(key)
-                    deltas = qsgd_compress_tree(deltas, sub, s=config.qsgd_levels)
+                    deltas = _compress_stacked(deltas, sub, config.qsgd_levels)
                 agg = jax.tree.map(
                     lambda dl, g=cluster_gammas[m]: jnp.einsum("n,n...->...", g, dl),
                     deltas,
@@ -529,9 +543,12 @@ def test_scan_parity_hier(small_task):
 
 
 def test_scan_parity_ragged_clusters_padding_exact():
-    """Ragged clusters exercise the scanned path's padded slots (Dense and
-    per-message Top-K are padding-invariant; stacked-leaf QSGD correctly
-    falls back to the looped driver — see `_fed_chs_scannable`)."""
+    """Ragged clusters exercise the scanned path's padded slots.  Every
+    channel is padding-invariant now — Dense (identity), per-message Top-K,
+    and packed-wire QSGD/sign-SGD (per-leaf block boundaries + per-sender
+    fold_in keys), so the PR-5-era QSGD fall-back-to-looped gate is gone:
+    Fed-CHS+QSGD on ragged clusters runs scanned, bit-identically."""
+    from repro.comm.channels import SignSGDChannel
     from repro.core.fed_chs import _fed_chs_scannable
     from repro.core.simulation import FLTask
     from repro.data import dirichlet_partition, make_dataset
@@ -550,7 +567,15 @@ def test_scan_parity_ragged_clusters_padding_exact():
                               FedCHSConfig(rounds=4, local_steps=4, local_epochs=2,
                                            channel=TopKChannel(0.1), eval_every=1,
                                            seed=0))
-    assert not _fed_chs_scannable(task, FedCHSConfig(qsgd_levels=16))
+    # the cell PR 5 had to gate out: stochastic QSGD on ragged clusters
+    _assert_scan_matches_loop(run_fed_chs, task,
+                              FedCHSConfig(rounds=4, local_steps=4, local_epochs=2,
+                                           qsgd_levels=16, eval_every=1, seed=2))
+    _assert_scan_matches_loop(run_fed_chs, task,
+                              FedCHSConfig(rounds=3, local_steps=4, local_epochs=2,
+                                           channel=SignSGDChannel(), eval_every=1,
+                                           seed=3))
+    assert _fed_chs_scannable(task, FedCHSConfig(qsgd_levels=16))
     assert _fed_chs_scannable(task, FedCHSConfig())
 
 
@@ -586,8 +611,9 @@ if HAS_HYPOTHESIS:
     @settings(max_examples=5, deadline=None)
     def test_property_scan_loop_parity(seed, qsgd, p):
         """Random (seed, channel, churn) — scanned == looped for Fed-CHS and
-        FedAvg on a cached ragged-cluster task (QSGD on ragged clusters
-        exercises the fall-back-to-looped gate, which is trivially parity)."""
+        FedAvg on a cached ragged-cluster task (QSGD on ragged clusters now
+        runs the real scanned path: packed-wire blocks are per-leaf and keys
+        per-sender, so padding to n_max cannot change any message)."""
         task = _prop_task(_SHAPES[seed % len(_SHAPES)])
         sampler = None if p is None else AvailabilityAware(BernoulliTrace(p=p, seed=seed))
         _assert_scan_matches_loop(

@@ -4,7 +4,7 @@ events, and a netsim replay to simulated wall-clock time-to-perplexity."""
 import numpy as np
 import pytest
 
-from repro.comm.channels import QSGDChannel
+from repro.comm.channels import QSGDChannel, channel_wire_bits
 from repro.comm.bits import dense_message_bits
 from repro.configs.base import ArchConfig
 from repro.core import FedCHSConfig, run_fed_chs
@@ -57,7 +57,8 @@ def test_fed_chs_lm_loss_decreases_and_ledger_closed_form(lm_task):
     # 2-client cluster runs J interactions (broadcast down, QSGD up), then
     # one dense ES->ES pass
     d = lm_task.num_params()
-    up = QSGDChannel(16).message_bits(d)
+    # wire channels are priced on the exact per-leaf packed payload
+    up = channel_wire_bits(QSGDChannel(16), d, lm_task.param_leaf_sizes())
     down = dense_message_bits(d)
     assert res.ledger.bits["client_to_es"] == T * J * 2 * up
     assert res.ledger.bits["es_to_client"] == T * J * 2 * down
@@ -74,7 +75,8 @@ def test_fedavg_lm_loss_decreases_and_ledger_closed_form(lm_task):
 
     d = lm_task.num_params()
     n = lm_task.num_clients
-    assert res.ledger.bits["client_to_ps"] == T * n * QSGDChannel(16).message_bits(d)
+    up = channel_wire_bits(QSGDChannel(16), d, lm_task.param_leaf_sizes())
+    assert res.ledger.bits["client_to_ps"] == T * n * up
     assert res.ledger.bits["ps_to_client"] == T * n * dense_message_bits(d)
 
 

@@ -2,16 +2,50 @@
 
 Sweeps shapes / dtypes / levels; checks bit-exact oracle agreement (the
 stochastic rounding shares the same uniform draw), unbiasedness, and the
-QSGD variance bound.
+QSGD variance bound.  Off-TPU every `pl.pallas_call` here runs under
+`interpret=True` (see `qsgd._interpret`), so CI exercises the actual kernel
+bodies, not just the fallback.
+
+The packed-wire tests pin integer bit-parity: codes and packed uint32
+payloads must match the `ref.py` oracles exactly; dequantized *floats* are
+compared at rtol=1e-6 (jit fusion of the norm/s divide moves the last ulp,
+exactly as for the pre-existing dense-code kernels).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import qsgd_dequantize, qsgd_quantize, qsgd_roundtrip
-from repro.kernels.qsgd import qsgd_dequantize_blocks, qsgd_quantize_blocks
-from repro.kernels.ref import qsgd_dequantize_blocks_ref, qsgd_quantize_blocks_ref
+from repro.kernels.ops import (
+    qsgd_decode,
+    qsgd_dequantize,
+    qsgd_encode,
+    qsgd_quantize,
+    qsgd_roundtrip,
+    signsgd_decode,
+    signsgd_encode,
+)
+from repro.kernels.qsgd import (
+    _pack_words,
+    _unpack_words,
+    qsgd_dequantize_blocks,
+    qsgd_quantize_blocks,
+    qsgd_quantize_pack_blocks,
+    qsgd_unpack_dequantize_blocks,
+)
+from repro.kernels.ref import (
+    pack_codes_ref,
+    qsgd_code_bits,
+    qsgd_dequantize_blocks_ref,
+    qsgd_dequantize_codes_ref,
+    qsgd_quantize_blocks_ref,
+    qsgd_quantize_codes_ref,
+    signsgd_dequantize_codes_ref,
+    signsgd_quantize_codes_ref,
+    unpack_codes_ref,
+)
+
+PACK_LEVELS = [1, 3, 7, 15, 127]  # 2, 3, 4, 5, 8-bit codes
 
 
 @pytest.mark.parametrize("n_blocks", [8, 16, 64])
@@ -105,3 +139,135 @@ def test_quantize_padding_roundtrip():
     rel = float(jnp.linalg.norm(back - v) / jnp.linalg.norm(v))
     expected = np.sqrt(block / 6.0) / 127
     assert rel < 1.5 * expected, (rel, expected)
+
+
+# -- packed wire format: fused quantize->pack / unpack->dequantize -----------
+
+
+def _codes_and_blocks(key, n_blocks, block, s):
+    v = jax.random.normal(key, (n_blocks, block), jnp.float32) * 2.0
+    u = jax.random.uniform(jax.random.fold_in(key, 1), v.shape)
+    codes, norms = qsgd_quantize_codes_ref(v, u, s)
+    return v, u, codes, norms
+
+
+@pytest.mark.parametrize("s", PACK_LEVELS)
+@pytest.mark.parametrize("n_blocks,block", [(3, 128), (8, 1024), (5, 1024)])
+def test_pack_unpack_identity_on_codes(s, n_blocks, block):
+    """pack o unpack == identity, and the vectorized packer used inside the
+    Pallas kernels is word-for-word the naive bit-plane oracle."""
+    key = jax.random.PRNGKey(s * 1000 + n_blocks)
+    _, _, codes, _ = _codes_and_blocks(key, n_blocks, block, s)
+    bits = qsgd_code_bits(s)
+    ref_payload = pack_codes_ref(np.asarray(codes), bits)
+    vec_payload = np.asarray(_pack_words(codes, bits))
+    np.testing.assert_array_equal(vec_payload, ref_payload)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes_ref(ref_payload, bits)), np.asarray(codes))
+    np.testing.assert_array_equal(
+        np.asarray(_unpack_words(jnp.asarray(ref_payload), bits)),
+        np.asarray(codes))
+
+
+@pytest.mark.parametrize("s", PACK_LEVELS)
+def test_fused_kernels_match_oracles_bit_exactly(s):
+    """The fused Pallas pair (interpret=True off-TPU) must agree with the
+    ref.py oracles: payload and norms bit-exact, dequantized floats rtol."""
+    key = jax.random.PRNGKey(17 + s)
+    n_blocks, block = 5, 1024  # 5 rows: exercises the tail-tile pad path
+    v, u, codes, norms_ref = _codes_and_blocks(key, n_blocks, block, s)
+    bits = qsgd_code_bits(s)
+    payload_k, norms_k = qsgd_quantize_pack_blocks(v, u, s=s)
+    np.testing.assert_array_equal(
+        np.asarray(payload_k), pack_codes_ref(np.asarray(codes), bits))
+    np.testing.assert_allclose(np.asarray(norms_k), np.asarray(norms_ref),
+                               rtol=1e-6)
+    deq_k = qsgd_unpack_dequantize_blocks(payload_k, norms_k, s=s, block=block)
+    deq_ref = qsgd_dequantize_codes_ref(codes, norms_ref, s)
+    np.testing.assert_allclose(np.asarray(deq_k), np.asarray(deq_ref),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("s", [1, 7, 16])
+def test_encode_decode_tail_and_shape(s):
+    """Non-multiple-of-block leaves round-trip through the wire dict with the
+    tail zero-padded (decode slices it back off) and exact payload shape."""
+    shape = (33, 17)  # 561 params -> one 1024-block with a 463-entry tail
+    key = jax.random.PRNGKey(3)
+    v = jax.random.normal(key, shape, jnp.float32)
+    wire = qsgd_encode(v, jax.random.fold_in(key, 1), s=s)
+    bits = qsgd_code_bits(s)
+    assert wire["payload"].dtype == jnp.uint32
+    assert wire["payload"].shape == (1, bits * (1024 // 32))
+    assert wire["norms"].shape == (1,)
+    back = qsgd_decode(wire, s=s, shape=shape)
+    assert back.shape == shape
+    # tail codes come from zero padding -> code == s -> decode to exactly 0,
+    # so the error obeys the QSGD bound on the real entries alone:
+    # E||Q(v)-v||^2 <= min(B/s^2, sqrt(B)/s) ||v||^2  (B = 1024 here)
+    bound = np.sqrt(min(1024 / s**2, np.sqrt(1024) / s))
+    err = float(jnp.linalg.norm(back - v)) / float(jnp.linalg.norm(v))
+    assert err <= 2.0 * bound, (err, bound)
+
+
+def test_zero_norm_blocks_decode_to_exact_zero():
+    v = jnp.zeros((4096,))
+    wire = qsgd_encode(v, jax.random.PRNGKey(0), s=16)
+    np.testing.assert_array_equal(np.asarray(wire["norms"]), 0.0)
+    back = qsgd_decode(wire, s=16, shape=(4096,))
+    np.testing.assert_array_equal(np.asarray(back), 0.0)
+
+
+def test_signsgd_wire_roundtrip():
+    key = jax.random.PRNGKey(5)
+    v = jax.random.normal(key, (2048,), jnp.float32)
+    wire = signsgd_encode(v)
+    codes_ref, scales_ref = signsgd_quantize_codes_ref(
+        jnp.reshape(v, (2, 1024)))
+    np.testing.assert_array_equal(
+        np.asarray(wire["payload"]),
+        pack_codes_ref(np.asarray(codes_ref), 1))
+    np.testing.assert_allclose(np.asarray(wire["norms"]),
+                               np.asarray(scales_ref), rtol=1e-6)
+    back = signsgd_decode(wire, shape=(2048,))
+    ref = signsgd_dequantize_codes_ref(codes_ref, scales_ref).reshape(2048)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(ref), rtol=1e-6)
+    # every decoded entry is +/- its block scale; signs match the input's
+    np.testing.assert_array_equal(np.sign(np.asarray(back)),
+                                  np.sign(np.asarray(v)))
+
+
+def test_signsgd_zero_block_decodes_to_zero():
+    wire = signsgd_encode(jnp.zeros((1024,)))
+    np.testing.assert_array_equal(np.asarray(wire["norms"]), 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(signsgd_decode(wire, shape=(1024,))), 0.0)
+
+
+def test_code_bits_formula_matches_comm_bits():
+    """comm.bits duplicates qsgd_code_bits to stay jax-free; pin them."""
+    from repro.comm.bits import qsgd_code_bits as comm_code_bits
+    for s in range(1, 260):
+        assert comm_code_bits(s) == qsgd_code_bits(s), s
+
+
+def test_pack_unpack_identity_property():
+    """Hypothesis property: pack o unpack == identity on arbitrary code
+    tensors (any values representable in `bits`, not just QSGD outputs)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.integers(1, 8), st.integers(1, 4), st.integers(0, 2**32 - 1))
+    @hyp.settings(deadline=None, max_examples=25)
+    def check(bits, n_blocks, seed):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, 2**bits, size=(n_blocks, 1024),
+                             dtype=np.uint32)
+        payload = pack_codes_ref(codes, bits)
+        assert payload.shape == (n_blocks, bits * 32)
+        np.testing.assert_array_equal(unpack_codes_ref(payload, bits), codes)
+        np.testing.assert_array_equal(
+            np.asarray(_unpack_words(_pack_words(jnp.asarray(codes), bits),
+                                     bits)), codes)
+
+    check()

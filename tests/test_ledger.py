@@ -1,7 +1,14 @@
 """CommLedger: aggregate accounting, snapshots, and the CommEvent stream."""
+import jax
 import pytest
 
-from repro.comm.channels import DenseChannel, QSGDChannel, TopKChannel
+from repro.comm.channels import (
+    DenseChannel,
+    QSGDChannel,
+    SignSGDChannel,
+    TopKChannel,
+    channel_wire_bits,
+)
 from repro.core import CommLedger, FedCHSConfig, FedCHSScheduler, run_fed_chs
 from repro.core.baselines import FedAvgConfig, WRWGDConfig, run_fedavg, run_wrwgd
 from repro.core.ledger import dense_message_bits
@@ -105,7 +112,9 @@ def test_uniform_k_uplink_bits_closed_form(small_task, channel):
                        sampler=sampler)
     res = run_fed_chs(small_task, cfg)
     d = small_task.num_params()
-    up = channel.message_bits(d)
+    # wire channels are priced on the exact multi-leaf payload (per-leaf
+    # block padding), not the flat-vector approximation
+    up = channel_wire_bits(channel, d, small_task.param_leaf_sizes())
     down = dense_message_bits(d)
 
     # replay the deterministic 2-step schedule to know each round's cluster
@@ -142,6 +151,40 @@ def test_uniform_k_fedavg_uplink_bits_closed_form(small_task):
             {f"client:{i}" for i in sampled}
         assert res.ledger.round_bits("client_to_ps")[t] == len(sampled) * q
     assert res.ledger.bits["client_to_ps"] == T * k * q
+
+
+# -- wire honesty: the ledger charges what the payload actually weighs -------
+
+
+@pytest.mark.parametrize("channel", [QSGDChannel(16), QSGDChannel(7),
+                                     QSGDChannel(1), SignSGDChannel()],
+                         ids=["qsgd16", "qsgd4bit", "qsgd2bit", "signsgd"])
+def test_ledger_matches_transmitted_payload_bytes(small_task, channel):
+    """The honesty check the packed wire format exists for: the byte size of
+    the *transmitted* in-graph value (uint32 payload words + f32 norm sidecar,
+    per leaf) equals the CommLedger's per-message accounting — within one
+    32-bit word of padding per block row, and in fact exactly."""
+    params = small_task.init_params()
+    wires = channel.encode(params, jax.random.PRNGKey(0))
+    measured = sum(
+        w["payload"].size * w["payload"].dtype.itemsize
+        + w["norms"].size * w["norms"].dtype.itemsize
+        for w in wires
+    )
+    d = small_task.num_params()
+    priced = channel_wire_bits(channel, d, small_task.param_leaf_sizes())
+    assert priced % 8 == 0
+    assert measured == priced // 8
+    # the flat-d formula may differ only by tail padding: strictly less than
+    # one block row (payload words + norm word) per extra leaf
+    n_leaves = len(wires)
+    per_block_bits = channel.message_bits(1)
+    assert 0 <= priced - channel.message_bits(d) < n_leaves * per_block_bits
+    # and a run's recorded uplink bits are an integer multiple of the payload
+    res = run_fed_chs(small_task, FedCHSConfig(rounds=2, local_steps=2,
+                                               eval_every=10, channel=channel))
+    ups = [e.n_bits for e in res.ledger.events if e.hop == "client_to_es"]
+    assert ups and all(b == measured * 8 for b in ups)
 
 
 def test_fed_chs_event_stream_matches_aggregates(small_task):

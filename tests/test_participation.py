@@ -342,8 +342,9 @@ def test_channel_message_bits_unchanged_by_masking(small_task):
     cfg = FedCHSConfig(rounds=3, local_steps=4, local_epochs=2, eval_every=10,
                        seed=0, qsgd_levels=16, sampler=AvailabilityAware(tr))
     res = run_fed_chs(small_task, cfg)
-    from repro.core.ledger import qsgd_message_bits
+    from repro.comm.channels import channel_wire_bits
 
-    q = qsgd_message_bits(small_task.num_params(), 16)
+    q = channel_wire_bits(QSGDChannel(16), small_task.num_params(),
+                          small_task.param_leaf_sizes())
     up_events = [e for e in res.ledger.events if e.hop == "client_to_es"]
     assert up_events and all(e.n_bits == q for e in up_events)
