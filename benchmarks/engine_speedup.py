@@ -174,6 +174,19 @@ def _steady(fn, *args) -> float:
     return min(_timed(fn, *args), _timed(fn, *args))
 
 
+def _steady_pair(fn_a, fn_b, trials: int = 3) -> tuple[float, float]:
+    """Best-of-`trials` for two arms with INTERLEAVED timed calls (a, b, a,
+    b, ...).  For ratio gates (telemetry overhead) this cancels the slow
+    machine-load drift that sequential best-of measurements pick up as a
+    phantom regression on a shared 2-core container."""
+    fn_a(), fn_b()  # warm/compile both arms
+    best_a = best_b = float("inf")
+    for _ in range(trials):
+        best_a = min(best_a, _timed(fn_a))
+        best_b = min(best_b, _timed(fn_b))
+    return best_a, best_b
+
+
 def whole_run(quick: bool = True) -> list[tuple[str, float, str]]:
     """Whole-run arms: scanned executor vs looped driver vs seed-style loop,
     plus the vmapped multi-seed sweep.  200 rounds, edge-scale task (quick)
@@ -222,6 +235,21 @@ def whole_run(quick: bool = True) -> list[tuple[str, float, str]]:
     t_seed_q = _timed(seed_style_fed_chs, task, qsgd_cfg(20)) / 20 * R
     report("scanned_fed_chs_e5_qsgd", t_scan_q, t_loop_q, "looped_driver")
     report("scanned_fed_chs_e5_qsgd_seed", t_scan_q, t_seed_q, "seed_loop")
+
+    # --- telemetry overhead: the SAME scanned E=5+QSGD run with in-graph
+    # taps + host spans on (fresh RunTelemetry per call — it accumulates).
+    # run.py --json gates this row: the tapped run must stay within ~10% of
+    # the untapped one (speedup >= 0.91x), i.e. observability is cheap
+    # enough to leave on --------------------------------------------------
+    from repro.obs import RunTelemetry
+
+    # interleaved pair: the ratio is gated, so both arms must see the same
+    # machine conditions — comparing against the t_scan_q measured a minute
+    # earlier turns background load drift into a phantom regression
+    t_base, t_taps = _steady_pair(
+        lambda: run_fed_chs(task, qsgd_cfg(R)),
+        lambda: run_fed_chs(task, qsgd_cfg(R, obs=RunTelemetry())))
+    report("scanned_fed_chs_telemetry", t_taps, t_base, "untapped")
 
     # --- vmapped 4-seed sweep vs 4 sequential looped runs (per-run time) --
     seeds = (0, 1, 2, 3)

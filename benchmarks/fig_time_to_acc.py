@@ -19,7 +19,14 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import BenchScale, build_task, run_algorithm
-from repro.netsim import edge_cloud_network, simulate_run, time_to_accuracy
+from repro.core.ledger import dense_message_bits
+from repro.netsim import (
+    edge_cloud_network,
+    replay_run,
+    sgd_step_flops,
+    simulate_run,
+    time_to_accuracy,
+)
 
 GAMMA = 0.80  # below fig2's 0.90: at the reduced per-algorithm round budgets
               # every algorithm (incl. 5-round Hier-Local-QSGD) crosses it, so
@@ -85,6 +92,33 @@ def run(quick: bool = True):
         time_winner = min(timed, key=lambda n: t2a[n]) if timed else None
         if bits_winner and time_winner and time_winner != bits_winner:
             divergences.append((scen, time_winner))
+
+    # --- deadline replay: who the straggler edge DROPS, and what it saves.
+    # Same recorded runs, re-timed with a per-interaction reporting deadline
+    # of 3x a nominal client chain (fig_participation's setting): ±het stays
+    # inside it, 16x stragglers blow through and are dropped.  WRWGD's walk
+    # has no aggregation phase, so deadlines don't apply to it. ------------
+    net = SCENARIOS["straggler"]()
+    d = task.num_params()
+    steps_per_phase = {"fed_chs": 1, "fedavg": scale.local_steps,
+                       "hier_local_qsgd": 5}
+    access = {"fed_chs": "wireless", "fedavg": "wan",
+              "hier_local_qsgd": "wireless"}
+    print("\nDeadline replay (straggler edge, deadline = 3x nominal chain):")
+    for name in ("fed_chs", "fedavg", "hier_local_qsgd"):
+        flops = steps_per_phase[name] * sgd_step_flops(d, task.batch_size)
+        deadline = 3.0 * net.nominal_chain_s(access[name],
+                                             dense_message_bits(d), flops)
+        jobs, tl = replay_run(runs[name], net, local_steps=scale.local_steps,
+                              batch_size=task.batch_size, num_params=d,
+                              deadline_s=deadline)
+        drops = tl.drop_counts()
+        n_drop = sum(drops.values())
+        rows.append((f"timeacc/deadline-{name}", float(len(jobs)),
+                     f"dropped={n_drop}_saved_mb={tl.dropped_bits / 8e6:.1f}"))
+        print(f"{name:16s} {len(jobs):6d} jobs  "
+              f"dropped {n_drop} client-rounds over {len(drops)} rounds  "
+              f"saved {tl.dropped_bits / 8e6:.1f} MB uplink")
 
     mb = {n: (None if b is None else round(b / 8e6, 1)) for n, b in bits.items()}
     print(f"bits-to-Γ (MB): {mb}  ->  bits-winner: {bits_winner}")

@@ -1,0 +1,143 @@
+"""One profiled run -> the merged observability artifact set.
+
+Runs a short instrumented run of any of the four algorithms (telemetry taps
++ host spans on, CommEvent stream tracked), replays it through `repro.netsim`
+on a straggler-heavy edge with a reporting deadline (so the trace also shows
+deadline drops), and writes `experiments/obs/`:
+
+  trace.json    — merged Chrome-trace/Perfetto timeline (host spans + comm
+                  events + simulated deployment jobs; open in
+                  ui.perfetto.dev or chrome://tracing)
+  metrics.jsonl — one row per round of in-graph training-health taps
+                  (update_norm, drift, comp_err, mass)
+  summary.json  — per-metric aggregates, span wall-clocks, netsim makespan
+                  and deadline-drop totals
+
+The trace is validated (`repro.obs.validate_chrome_trace`) before writing:
+monotonic per-track timestamps, matched B/E pairs, comm-instant count ==
+ledger event count.  Entry point: ``python benchmarks/run.py --profile
+[algo]`` (CI's obs-smoke job) or this module directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from benchmarks.common import ALGORITHMS, BenchScale, algorithm_config, build_task
+from repro.core.ledger import dense_message_bits
+from repro.netsim import edge_cloud_network, replay_run, sgd_step_flops
+from repro.obs import (
+    RunTelemetry,
+    build_chrome_trace,
+    validate_chrome_trace,
+    write_chrome_trace,
+    write_metrics_jsonl,
+)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "obs")
+
+# deadline setup shared with fig_participation / fig_time_to_acc: 3x a
+# nominal client chain — heterogeneity stays inside, stragglers get dropped
+_STEPS_PER_PHASE = {"fed_chs": 1, "fedavg": None, "hier_local_qsgd": 5,
+                    "wrwgd": None}
+_ACCESS = {"fed_chs": "wireless", "fedavg": "wan",
+           "hier_local_qsgd": "wireless"}
+
+
+def _profile_scale(quick: bool) -> BenchScale:
+    return (BenchScale(train_size=2000, test_size=400, num_clients=15,
+                       num_clusters=5, rounds=16, local_steps=10, eval_every=4)
+            if quick else BenchScale())
+
+
+def run_profile(algo: str = "fed_chs", *, quick: bool = True,
+                profiler: bool = False, out_dir: str = OUT_DIR) -> dict:
+    """Produce, validate, and write the merged observability artifacts for
+    one short instrumented `algo` run; returns the summary dict."""
+    assert algo in ALGORITHMS, f"unknown algorithm {algo!r}"
+    scale = _profile_scale(quick)
+    task = build_task("mnist", "mlp", 0.6, scale)
+    d = task.num_params()
+
+    # sync_chunks: block on each chunk's tele transfer so the scan_chunk
+    # spans in the exported timeline measure real device execution
+    obs = RunTelemetry(profiler=profiler, sync_chunks=True)
+    run, config = algorithm_config(algo, scale, seed=0, track_events=True,
+                                   qsgd=16 if algo == "fed_chs" else None)
+    config = dataclasses.replace(config, obs=obs)
+    if algo == "fed_chs":
+        # E=5 + QSGD puts the flagship artifact on the delta-mode path, so
+        # the exported drift / comp_err taps are live signals (grad mode
+        # zeroes both structurally — see repro.obs.taps.grad_taps)
+        config = dataclasses.replace(config, local_epochs=5)
+    t0 = time.time()
+    res = run(task, config)
+    wall = time.time() - t0
+    assert res.telemetry is obs
+
+    net = edge_cloud_network(seed=2, heterogeneity=0.3, straggler_frac=0.25,
+                             straggler_slowdown=16.0)
+    steps = _STEPS_PER_PHASE[algo]
+    if steps is None and algo == "fedavg":
+        steps = scale.local_steps
+    deadline = None
+    if steps is not None:  # WRWGD's walk has no aggregation phase
+        flops = steps * sgd_step_flops(d, task.batch_size)
+        deadline = 3.0 * net.nominal_chain_s(_ACCESS[algo],
+                                             dense_message_bits(d), flops)
+    jobs, timeline = replay_run(res, net, local_steps=config.local_steps,
+                                batch_size=task.batch_size, num_params=d,
+                                deadline_s=deadline)
+
+    trace = build_chrome_trace(obs, res.ledger, jobs, timeline)
+    problems = validate_chrome_trace(trace,
+                                     expected_comm_events=len(res.ledger.events))
+    if problems:
+        raise SystemExit("invalid merged trace:\n  " + "\n  ".join(problems))
+
+    os.makedirs(out_dir, exist_ok=True)
+    write_chrome_trace(trace, os.path.join(out_dir, "trace.json"))
+    n_rows = write_metrics_jsonl(obs, os.path.join(out_dir, "metrics.jsonl"))
+
+    summary = {
+        "algo": algo,
+        "rounds": config.rounds,
+        "train_wall_s": round(wall, 2),
+        "final_acc": round(res.final_acc(), 4),
+        "telemetry": obs.summary(),
+        "trace_events": len(trace["traceEvents"]),
+        "comm_events": len(res.ledger.events),
+        "netsim": {
+            "jobs": len(jobs),
+            "makespan_s": round(timeline.makespan, 3),
+            "deadline_s": None if deadline is None else round(deadline, 4),
+            "dropped_client_rounds": sum(timeline.drop_counts().values()),
+            "dropped_mb": round(timeline.dropped_bits / 8e6, 2),
+        },
+    }
+    with open(os.path.join(out_dir, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+
+    print(f"profiled {algo}: {config.rounds} rounds in {wall:.1f}s, "
+          f"{n_rows} telemetry rows, {len(trace['traceEvents'])} trace events "
+          f"({len(res.ledger.events)} comm), netsim makespan "
+          f"{timeline.makespan:.2f}s, dropped "
+          f"{summary['netsim']['dropped_client_rounds']} client-rounds "
+          f"({summary['netsim']['dropped_mb']} MB saved)")
+    print(f"wrote {os.path.normpath(out_dir)}/{{trace.json, metrics.jsonl, "
+          "summary.json} — open trace.json in ui.perfetto.dev")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("algo", nargs="?", default="fed_chs", choices=ALGORITHMS)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--profiler", action="store_true",
+                    help="also wrap spans in jax.profiler.TraceAnnotation")
+    args = ap.parse_args()
+    run_profile(args.algo, quick=not args.full, profiler=args.profiler)

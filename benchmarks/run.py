@@ -32,8 +32,20 @@ def main() -> None:
                          "fail if the scanned whole-run driver is slower than "
                          "the looped one or a packed-QSGD round is slower than "
                          "the dense-code baseline")
+    ap.add_argument("--profile", nargs="?", const="fed_chs", default=None,
+                    metavar="ALGO",
+                    help="run one short instrumented run (telemetry taps + "
+                         "spans + netsim replay) and write the merged "
+                         "Perfetto trace / metrics / summary to "
+                         "experiments/obs/ instead of the benchmark suites")
     args = ap.parse_args()
     quick = not args.full
+
+    if args.profile is not None:
+        from benchmarks import profile_obs
+
+        profile_obs.run_profile(args.profile, quick=quick)
+        return
 
     from benchmarks import engine_speedup, fig2_comm, fig3_hparams, fig4_partial_het
     from benchmarks import fig_participation, fig_time_to_acc, kernels_micro
@@ -97,6 +109,14 @@ def main() -> None:
                 if s < 0.9:
                     failures.append(
                         f"{row['name']}: {s:.2f}x < 0.90x vs looped driver")
+            # the telemetry gate: in-graph taps + host spans must cost < 10%
+            # wall-clock vs the identical untapped scanned run (0.91x ~=
+            # 1/1.10) — observability has to be cheap enough to leave on
+            if (row["name"] == "scanned_fed_chs_telemetry"
+                    and "vs_untapped" in row["derived"] and s < 0.91):
+                failures.append(
+                    f"{row['name']}: {s:.2f}x < 0.91x vs untapped "
+                    "(taps cost >10% wall-clock)")
         payload["engine_headline"] = headline
     if "kernels" in suite_results:
         # the packed-wire gate: a Fed-CHS round on the packed QSGDChannel

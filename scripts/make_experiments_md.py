@@ -1,8 +1,9 @@
 """Regenerate EXPERIMENTS.md §Dry-run and §Roofline from experiments/dryrun/*.json,
 the §Benchmarks table from BENCH_core.json (written by `benchmarks/run.py
---json`), the hand-authored §Perf log from experiments/perf_log.md, and the
+--json`), the hand-authored §Perf log from experiments/perf_log.md, the
 §Participation table written by `benchmarks/fig_participation.py`
-(experiments/participation.md).  Sections whose inputs are absent are
+(experiments/participation.md), and §Telemetry from
+experiments/obs/summary.json (written by `benchmarks/run.py --profile`).  Sections whose inputs are absent are
 omitted rather than rendered empty, and a malformed/partial suite output
 (e.g. an interrupted benchmark run) skips that section with a warning
 instead of aborting the whole regeneration.
@@ -20,6 +21,7 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
 PERF_LOG = os.path.join(ROOT, "experiments", "perf_log.md")
 PARTICIPATION = os.path.join(ROOT, "experiments", "participation.md")
+OBS_SUMMARY = os.path.join(ROOT, "experiments", "obs", "summary.json")
 BENCH_JSON = os.path.join(ROOT, "BENCH_core.json")
 OUT = os.path.join(ROOT, "EXPERIMENTS.md")
 
@@ -180,6 +182,42 @@ def bench_section():
     return "\n".join(lines)
 
 
+def telemetry_section():
+    """§Telemetry from experiments/obs/summary.json (benchmarks/run.py
+    --profile): per-round tap aggregates, span wall-clocks, and the netsim
+    replay's deadline-drop totals for one instrumented run."""
+    if not os.path.exists(OBS_SUMMARY):
+        return ""
+    with open(OBS_SUMMARY) as f:
+        s = json.load(f)
+    tele, net = s["telemetry"], s["netsim"]
+    lines = [
+        "## §Telemetry",
+        "",
+        f"One instrumented `{s['algo']}` run ({s['rounds']} rounds, final "
+        f"acc {s['final_acc']}) from `benchmarks/run.py --profile`: in-graph "
+        "training-health taps, host phase spans, and a straggler-network "
+        "replay merged into `experiments/obs/trace.json` (open in "
+        "ui.perfetto.dev; validated by CI's obs-smoke job).  "
+        f"{s['trace_events']} trace events, of which {s['comm_events']} comm "
+        "instants — exactly one per CommLedger event.  Simulated makespan "
+        f"{net['makespan_s']} s; the reporting deadline dropped "
+        f"{net['dropped_client_rounds']} client-rounds, saving "
+        f"{net['dropped_mb']} MB of uplink.  Tapped runs stay bit-identical "
+        "to untapped ones (tests/test_engine_parity.py) and under the 10% "
+        "overhead gate (benchmarks/run.py --json).",
+        "",
+        "| tap (per-round, run aggregate) | mean | max |",
+        "|---|---|---|",
+    ]
+    for k, v in sorted(tele["metrics"].items()):
+        lines.append(f"| {k} | {v['mean']:.4g} | {v['max']:.4g} |")
+    lines += ["", "| host span | total wall s |", "|---|---|"]
+    for k, v in tele["spans"].items():
+        lines.append(f"| {k} | {v:.3f} |")
+    return "\n".join(lines)
+
+
 def _read(path):
     if os.path.exists(path):
         with open(path) as f:
@@ -195,8 +233,9 @@ def main():
         "§Benchmarks from BENCH_core.json, written by `benchmarks/run.py --json`; "
         "§Perf from experiments/perf_log.md; §Participation from "
         "experiments/participation.md, written by `benchmarks/run.py --only "
-        "participation`; paper-claims validation from benchmarks — see "
-        "bench_output.txt)",
+        "participation`; §Telemetry from experiments/obs/summary.json, written "
+        "by `benchmarks/run.py --profile`; paper-claims validation from "
+        "benchmarks — see bench_output.txt)",
     ]
     # each section tolerates its own broken/partial input: a failed suite
     # must not block regenerating the rest of EXPERIMENTS.md
@@ -204,7 +243,8 @@ def main():
     if recs:
         builders += [lambda: dryrun_section(recs), lambda: roofline_section(recs),
                      lambda: bottleneck_notes(recs)]
-    builders += [bench_section, lambda: _read(PARTICIPATION), lambda: _read(PERF_LOG)]
+    builders += [bench_section, telemetry_section,
+                 lambda: _read(PARTICIPATION), lambda: _read(PERF_LOG)]
     for build in builders:
         try:
             section = build()

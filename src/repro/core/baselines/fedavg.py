@@ -28,6 +28,7 @@ itself and the ledger is reconstructed after the run
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,7 @@ from repro.core.engine import (
 from repro.core.ledger import CommLedger
 from repro.core.simulation import FLTask, RunRecorder, RunResult
 from repro.data.sources import scatter_put, stage_chunk
+from repro.obs.trace import maybe_span
 from repro.optim.local import LocalOpt
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 from repro.part import (
@@ -72,6 +74,8 @@ class FedAvgConfig:
     chunk_rounds: int = 32             # scanned mode: rounds staged per chunk
     seed: int = 0
     schedule: Schedule | None = None
+    obs: Any = None                    # repro.obs.RunTelemetry; None = the
+                                       # byte-for-byte untapped fast path
 
 
 def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
@@ -97,7 +101,9 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
-    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    obs = config.obs
+    taps = obs is not None and obs.taps
+    recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
     n = task.num_clients
     full_part = is_full_participation(config.sampler)
     all_clients = list(range(n))
@@ -116,18 +122,25 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
             if channel.stochastic:
                 key, subs = split_chain(key, 1)
             if full_part:
-                params, opt_state, losses = engine.cluster_round(
-                    params, batch, gammas, lrs, subs, opt_state
-                )
+                with maybe_span(obs, "round"):
+                    out = engine.cluster_round(
+                        params, batch, gammas, lrs, subs, opt_state, taps=taps
+                    )
+                    params, opt_state, losses, tele = out if taps else (*out, None)
             else:
                 # masked round: D_n weights renormalized over the participants,
                 # dropped clients contribute zero delta + frozen opt state
                 pmask = participation_mask(all_clients, participating)
                 w = task.global_weights() * pmask
                 gammas_r = jnp.asarray((w / w.sum()).astype(np.float32))
-                params, opt_state, losses = engine.cluster_round(
-                    params, batch, gammas_r, lrs, subs, opt_state, mask=pmask
-                )
+                with maybe_span(obs, "round"):
+                    out = engine.cluster_round(
+                        params, batch, gammas_r, lrs, subs, opt_state, mask=pmask,
+                        taps=taps,
+                    )
+                    params, opt_state, losses, tele = out if taps else (*out, None)
+            if tele is not None:
+                obs.record_round(t, tele)
 
             if ledger.track_events:
                 for i in participating:
@@ -208,7 +221,8 @@ def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
             "subs": subs_r[idxs],
         }
 
-    body = scan_delta_body(engine.model, channel, engine.local_opt)
+    taps = config.obs is not None and config.obs.taps
+    body = scan_delta_body(engine.model, channel, engine.local_opt, taps)
     plan = ScanPlan(
         body=body,
         carry=(params, engine.init_opt_state(params, n)),
@@ -218,6 +232,7 @@ def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
         rounds=R,
         eval_every=config.eval_every,
         chunk_rounds=config.chunk_rounds,
+        obs=config.obs,
     )
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
@@ -243,11 +258,14 @@ def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
 
 
 def _run_fedavg_scanned(task: FLTask, config: FedAvgConfig) -> RunResult:
-    plan, params_of, traffic = _fedavg_scan_plan(task, task.source, config)
-    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    obs = config.obs
+    with maybe_span(obs, "precompute"):
+        plan, params_of, traffic = _fedavg_scan_plan(task, task.source, config)
+    recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
     carry = run_scan(
         plan, lambda t, c, losses, _lt: recorder.record(t, params_of(c), losses)
     )
     ledger = CommLedger(track_events=config.track_events)
-    ledger.materialize(traffic(config.track_events))
+    with maybe_span(obs, "materialize"):
+        ledger.materialize(traffic(config.track_events))
     return recorder.result("fedavg", ledger, params_of(carry))

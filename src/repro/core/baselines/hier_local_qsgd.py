@@ -28,6 +28,7 @@ to the pre-participation stack.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +45,7 @@ from repro.core.engine import (
 from repro.core.ledger import CommLedger
 from repro.core.simulation import FLTask, RunRecorder, RunResult
 from repro.data.sources import scatter_put, stage_chunk
+from repro.obs.trace import maybe_span
 from repro.optim.local import LocalOpt
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 from repro.part import Sampler, is_full_participation, participation_mask
@@ -67,6 +69,8 @@ class HierLocalQSGDConfig:
     chunk_rounds: int = 32             # scanned mode: rounds staged per chunk
     seed: int = 0
     schedule: Schedule | None = None
+    obs: Any = None                    # repro.obs.RunTelemetry; None = the
+                                       # byte-for-byte untapped fast path
 
 
 def _participation_arrays(task: FLTask, parts_t, M: int, n_max: int):
@@ -124,7 +128,9 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
     n_max = mask.shape[1]
     full_part = is_full_participation(config.sampler)
     opt_state = engine.init_opt_state(params, M, n_max)  # client-held, cross-round
-    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    obs = config.obs
+    taps = obs is not None and obs.taps
+    recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
     losses = jnp.full((1, 1), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
         if full_part:
@@ -153,10 +159,14 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
                 subs = flat.reshape(interactions, M, 2)
             if es_channel.stochastic:
                 key, es_subs = split_chain(key, M)
-            params, opt_state, losses = engine.multi_cluster_round(
-                params, batch, gammas_t, mask_t, es_weights_t, lrs_grouped,
-                subs, es_subs, opt_state
-            )
+            with maybe_span(obs, "round"):
+                out = engine.multi_cluster_round(
+                    params, batch, gammas_t, mask_t, es_weights_t, lrs_grouped,
+                    subs, es_subs, opt_state, taps=taps,
+                )
+                params, opt_state, losses, tele = out if taps else (*out, None)
+            if tele is not None:
+                obs.record_round(t, tele)
             if not full_part:
                 # report loss over the clusters that actually trained (empty
                 # clusters read 0 from the engine's guarded average)
@@ -312,8 +322,10 @@ def _hier_scan_plan(task: FLTask, source, config: HierLocalQSGDConfig):
             "es_subs": es_subs_r[idxs],
         }
 
+    taps = config.obs is not None and config.obs.taps
     plan = ScanPlan(
-        body=scan_multi_body(engine.model, channel, es_channel, engine.local_opt),
+        body=scan_multi_body(engine.model, channel, es_channel, engine.local_opt,
+                             taps),
         carry=(params, engine.init_opt_state(params, M, n_max)),
         consts={"lrs": jnp.asarray(lrs.reshape(interactions, E))},
         stage=stage,
@@ -321,6 +333,7 @@ def _hier_scan_plan(task: FLTask, source, config: HierLocalQSGDConfig):
         rounds=R,
         eval_every=config.eval_every,
         chunk_rounds=config.chunk_rounds,
+        obs=config.obs,
     )
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
@@ -365,8 +378,10 @@ def _hier_scan_plan(task: FLTask, source, config: HierLocalQSGDConfig):
 
 
 def _run_hier_scanned(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
-    plan, params_of, traffic, sel_of = _hier_scan_plan(task, task.source, config)
-    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    obs = config.obs
+    with maybe_span(obs, "precompute"):
+        plan, params_of, traffic, sel_of = _hier_scan_plan(task, task.source, config)
+    recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
 
     def record(t, carry, losses, last_t):
         if losses is not None:
@@ -379,5 +394,6 @@ def _run_hier_scanned(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
 
     carry = run_scan(plan, record)
     ledger = CommLedger(track_events=config.track_events)
-    ledger.materialize(traffic(config.track_events))
+    with maybe_span(obs, "materialize"):
+        ledger.materialize(traffic(config.track_events))
     return recorder.result("hier_local_qsgd", ledger, params_of(carry))

@@ -26,6 +26,7 @@ by the scan and consume no data draws, exactly like the looped driver.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,7 @@ from repro.core.ledger import CommLedger
 from repro.core.simulation import FLTask, RunRecorder, RunResult
 from repro.core.topology import make_topology
 from repro.data.sources import scatter_put, stage_chunk
+from repro.obs.trace import maybe_span
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 from repro.part import Sampler, is_full_participation
 
@@ -57,6 +59,8 @@ class WRWGDConfig:
     bits_per_param: int = 32
     seed: int = 0
     schedule: Schedule | None = None
+    obs: Any = None                    # repro.obs.RunTelemetry; None = the
+                                       # byte-for-byte untapped fast path
 
 
 def _precompute_walk(task: FLTask, config: WRWGDConfig):
@@ -109,14 +113,20 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
     # paths consume the ONE precomputed replay (the walk rng and the data
     # loaders are separate streams, so hoisting the draws changes nothing)
     visits, trains_r, hops = _precompute_walk(task, config)
-    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    obs = config.obs
+    taps = obs is not None and obs.taps
+    recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
     losses = jnp.full((1,), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
         if trains_r[t]:
             batch = jax.tree.map(
                 lambda a: a[:, None], task.sample_client_batches(int(visits[t]), K)
             )  # (K, 1, B, ...): a walk step is a 1-client cluster running Eq.(5)
-            params, losses = engine.grad_round(params, batch, gamma_one, lrs)
+            with maybe_span(obs, "round"):
+                out = engine.grad_round(params, batch, gamma_one, lrs, taps=taps)
+                params, losses, tele = out if taps else (*out, None)
+            if tele is not None:
+                obs.record_round(t, tele)
         # else: the visited client is down — pass-through, the model is
         # forwarded untouched (and the round consumes no data draws)
         prev, nxt = hops[t]
@@ -163,8 +173,9 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
         )
         return {"batch": batch, "gammas": ones[idxs]}
 
+    taps = config.obs is not None and config.obs.taps
     plan = ScanPlan(
-        body=scan_grad_body(engine.model),
+        body=scan_grad_body(engine.model, taps),
         carry=params,
         consts={"lrs": jnp.asarray(lrs)},
         stage=stage,
@@ -172,6 +183,7 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
         rounds=R,
         eval_every=config.eval_every,
         chunk_rounds=config.chunk_rounds,
+        obs=config.obs,
     )
 
     hop_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
@@ -186,11 +198,14 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
 
 
 def _run_wrwgd_scanned(task: FLTask, config: WRWGDConfig) -> RunResult:
-    plan, params_of, traffic = _wrwgd_scan_plan(task, task.source, config)
-    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    obs = config.obs
+    with maybe_span(obs, "precompute"):
+        plan, params_of, traffic = _wrwgd_scan_plan(task, task.source, config)
+    recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
     carry = run_scan(
         plan, lambda t, c, losses, _lt: recorder.record(t, params_of(c), losses)
     )
     ledger = CommLedger(track_events=config.track_events)
-    ledger.materialize(traffic(config.track_events))
+    with maybe_span(obs, "materialize"):
+        ledger.materialize(traffic(config.track_events))
     return recorder.result("wrwgd", ledger, params_of(carry))

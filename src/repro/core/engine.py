@@ -90,6 +90,8 @@ from repro.comm.channels import Channel, DenseChannel
 from repro.core.ledger import CommLedger
 from repro.core.oracles import grad_phase, local_opt_steps
 from repro.models.fed import FedModel, as_fed_model
+from repro.obs.taps import delta_taps, grad_taps, tree_client_norms
+from repro.obs.trace import maybe_span
 from repro.optim.local import LocalOpt, PlainSGD
 from repro.utils import tree_add, tree_sub
 
@@ -164,36 +166,80 @@ def compress_uplinks(channel: Channel, deltas: PyTree, sub: jax.Array) -> PyTree
 
 
 @functools.cache
-def _grad_round_fn(model: FedModel):
+def _grad_round_fn(model: FedModel, taps: bool = False):
     """Eq. (5) literal (see `oracles.grad_phase`): batch leaves (K, n, B, ...),
-    gammas (n,), lrs (K,). Returns (params, per-step gamma-weighted losses)."""
-    return _jit_round(grad_phase(model))
+    gammas (n,), lrs (K,). Returns (params, per-step gamma-weighted losses).
+    With `taps`, additionally returns the grad-mode tele dict (obs/taps.py).
+    Telemetry variants are SEPARATE cache entries: the taps=False graph is
+    the exact pre-telemetry round, so the obs=None fast path costs nothing."""
+    phase = grad_phase(model)
+
+    def round_fn(params, batch, gammas, lrs):
+        with jax.named_scope("local_train"):
+            new_params, losses = phase(params, batch, gammas, lrs)
+        if taps:
+            return new_params, losses, grad_taps(params, new_params, gammas)
+        return new_params, losses
+
+    return _jit_round(round_fn)
+
+
+def _scan_and_tap_last(interaction, carry, xs, taps):
+    """Scan `interaction` over a round's interactions; with `taps`, peel the
+    FINAL interaction out of the scan and run it with `tap=True`, so the tap
+    reductions trace exactly once per round and the tele dict is a
+    final-interaction snapshot.  Alternatives measured worse on XLA:CPU
+    inside the whole-run scan: a `lax.cond` on "is this the last
+    interaction" copies its n×d operands through the conditional every
+    interaction, and unconditional per-interaction taps re-run the
+    reductions J times at memory speed.  The untapped path is the plain
+    full-length scan — byte-for-byte the pre-telemetry graph.
+    Returns (carry..., losses (J,)[, tele])."""
+    if not taps:
+        (a, b), losses = jax.lax.scan(interaction, carry, xs)
+        return a, b, losses
+    head = jax.tree.map(lambda x: x[:-1], xs)
+    last = jax.tree.map(lambda x: x[-1], xs)
+    carry, head_losses = jax.lax.scan(interaction, carry, head)
+    (a, b), (last_loss, tele) = interaction(carry, last, tap=True)
+    losses = jnp.concatenate([head_losses, last_loss[None]])
+    return a, b, losses, tele
 
 
 @functools.cache
-def _delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
+def _delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt,
+                    taps: bool = False):
     """Delta mode: scan over J = K/E interactions; each interaction runs E
     local optimizer steps per client (vmapped), pushes channel-compressed
     deltas, and applies the gamma-weighted aggregate.
     batch leaves: (J, n, E, B, ...), opt_state leaves: (n, ...), lrs: (J, E),
     subs: (J, 2).
-    Returns (params, opt_state, per-interaction mean losses (J,))."""
+    Returns (params, opt_state, per-interaction mean losses (J,)); with
+    `taps` also the per-round tele dict (a final-interaction snapshot — see
+    `_scan_and_tap_last`).  The round phases are `jax.named_scope`-tagged
+    (metadata only — numerics are untouched) so
+    roofline.attribution.phase_bytes can bill a whole round."""
     multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
     def round_fn(params, opt_state, batch, gammas, lrs, subs):
-        def interaction(carry, inp):
+        def interaction(carry, inp, tap=False):
             p, s = carry
             b, lr, sub = inp
-            new_p, new_s, losses = multi_local(p, s, b, lr)
-            deltas = jax.tree.map(lambda a, base: a - base[None], new_p, p)
-            deltas = compress_uplinks(channel, deltas, sub)
-            agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
-            return (tree_add(p, agg), new_s), jnp.mean(losses)
+            with jax.named_scope("local_train"):
+                new_p, new_s, losses = multi_local(p, s, b, lr)
+            with jax.named_scope("uplink"):
+                raw = jax.tree.map(lambda a, base: a - base[None], new_p, p)
+                deltas = compress_uplinks(channel, raw, sub)
+            with jax.named_scope("intra_agg"):
+                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+                new_params = tree_add(p, agg)
+            loss = jnp.mean(losses)
+            out = (loss, delta_taps(raw, tree_sub(new_params, p),
+                                    gammas)) if tap else loss
+            return (new_params, new_s), out
 
-        (params, opt_state), losses = jax.lax.scan(
-            interaction, (params, opt_state), (batch, lrs, subs)
-        )
-        return params, opt_state, losses
+        return _scan_and_tap_last(interaction, (params, opt_state),
+                                  (batch, lrs, subs), taps)
 
     return _jit_round(round_fn)
 
@@ -211,39 +257,48 @@ def _freeze_masked(mask: jax.Array, new_state: PyTree, old_state: PyTree) -> PyT
 
 
 @functools.cache
-def _masked_round_body(model: FedModel, channel: Channel, opt: LocalOpt):
+def _masked_round_body(model: FedModel, channel: Channel, opt: LocalOpt,
+                       taps: bool = False):
     """The pure (unjitted) masked delta round — shared verbatim by the
     per-round compiled function (`_masked_delta_round_fn`) and the whole-run
     scan bodies below, so the looped and scanned paths trace the exact same
-    computation."""
+    computation.  With `taps` the round additionally returns the tele dict
+    (mask-weighted, a final-interaction snapshot — see `_scan_and_tap_last`);
+    taps=False is its own cache entry tracing the exact pre-telemetry
+    graph."""
     multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
     def round_fn(params, opt_state, batch, gammas, mask, lrs, subs):
-        def interaction(carry, inp):
+        def interaction(carry, inp, tap=False):
             p, s = carry
             b, lr, sub = inp
-            new_p, new_s, losses = multi_local(p, s, b, lr)
-            new_s = _freeze_masked(mask, new_s, s)
-            deltas = jax.tree.map(
-                lambda a, base: (a - base[None]) * mask.reshape((-1,) + (1,) * (a.ndim - 1)),
-                new_p,
-                p,
-            )
-            deltas = compress_uplinks(channel, deltas, sub)
-            agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+            with jax.named_scope("local_train"):
+                new_p, new_s, losses = multi_local(p, s, b, lr)
+                new_s = _freeze_masked(mask, new_s, s)
+            with jax.named_scope("uplink"):
+                raw = jax.tree.map(
+                    lambda a, base: (a - base[None]) * mask.reshape((-1,) + (1,) * (a.ndim - 1)),
+                    new_p,
+                    p,
+                )
+                deltas = compress_uplinks(channel, raw, sub)
+            with jax.named_scope("intra_agg"):
+                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+                new_params = tree_add(p, agg)
             loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-            return (tree_add(p, agg), new_s), loss
+            out = (loss, delta_taps(raw, tree_sub(new_params, p),
+                                    gammas, mask)) if tap else loss
+            return (new_params, new_s), out
 
-        (params, opt_state), losses = jax.lax.scan(
-            interaction, (params, opt_state), (batch, lrs, subs)
-        )
-        return params, opt_state, losses
+        return _scan_and_tap_last(interaction, (params, opt_state),
+                                  (batch, lrs, subs), taps)
 
     return round_fn
 
 
 @functools.cache
-def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
+def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt,
+                           taps: bool = False):
     """Delta mode with a per-client participation mask (n,): masked-out
     clients contribute zero delta (their slot is zeroed before compression),
     are excluded from the loss average, and keep their `LocalOpt` state
@@ -252,18 +307,22 @@ def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt):
     `_delta_round_fn`; the unmasked function stays untouched so the default
     full-participation path is bit-identical to the pre-participation stack.
     """
-    return _jit_round(_masked_round_body(model, channel, opt))
+    return _jit_round(_masked_round_body(model, channel, opt, taps))
 
 
 @functools.cache
-def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
+def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt,
+                      taps: bool = False):
     """Pure (unjitted) 3-tier HFL global round, vmapped over all M clusters at
     once — shared by `_multi_round_fn` and the whole-run scan body.
     batch leaves: (J, M, n_max, E, B, ...), opt_state leaves: (M, n_max, ...),
     gammas/mask: (M, n_max), es_weights: (M,), lrs: (J, E), subs: (J, M, 2),
     es_subs: (M, 2).  Padded client slots (mask == 0) carry zero gamma
     weight and their deltas are zeroed before compression.
-    Returns (params, opt_state, per-(interaction, cluster) losses (J, M))."""
+    Returns (params, opt_state, per-(interaction, cluster) losses (J, M));
+    with `taps` also a per-cluster (M,) tele dict (a final-interaction
+    snapshot — see `_scan_and_tap_last` — + "es_comp_err" for the ES->PS
+    channel).  taps=False traces the exact pre-telemetry graph."""
     multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
     def round_fn(params, opt_state, batch, gammas, mask, es_weights, lrs, subs, es_subs):
@@ -272,49 +331,67 @@ def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, op
             lambda leaf: jnp.broadcast_to(leaf[None], (M,) + leaf.shape), params
         )
 
-        def interaction(carry, inp):
+        def interaction(carry, inp, tap=False):
             cp, s = carry
             b, lr, sub = inp
 
             def one_cluster(p_m, s_m, b_m, g_m, msk_m, sub_m):
-                new_p, new_s, losses = multi_local(p_m, s_m, b_m, lr)
-                # masked slots (padding OR dropped-out clients) keep their opt
-                # state frozen; for real participating slots the select is a
-                # bit-exact identity, so default-path parity holds
-                new_s = _freeze_masked(msk_m, new_s, s_m)
-                deltas = jax.tree.map(
-                    lambda a, base: (a - base[None]) * msk_m.reshape((-1,) + (1,) * (a.ndim - 1)),
-                    new_p,
-                    p_m,
-                )
-                deltas = compress_uplinks(channel, deltas, sub_m)
-                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", g_m, dl), deltas)
+                with jax.named_scope("local_train"):
+                    new_p, new_s, losses = multi_local(p_m, s_m, b_m, lr)
+                    # masked slots (padding OR dropped-out clients) keep their opt
+                    # state frozen; for real participating slots the select is a
+                    # bit-exact identity, so default-path parity holds
+                    new_s = _freeze_masked(msk_m, new_s, s_m)
+                with jax.named_scope("uplink"):
+                    raw = jax.tree.map(
+                        lambda a, base: (a - base[None]) * msk_m.reshape((-1,) + (1,) * (a.ndim - 1)),
+                        new_p,
+                        p_m,
+                    )
+                    deltas = compress_uplinks(channel, raw, sub_m)
+                with jax.named_scope("intra_agg"):
+                    agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", g_m, dl), deltas)
+                    new_pm = tree_add(p_m, agg)
                 # a fully-dropped cluster has sum(mask) == 0: its loss reads 0
                 # and its params stay at the broadcast model (zero deltas)
                 loss = jnp.sum(losses * msk_m) / jnp.maximum(jnp.sum(msk_m), 1.0)
-                return tree_add(p_m, agg), new_s, loss
+                out = (loss, delta_taps(raw, tree_sub(new_pm, p_m),
+                                        g_m, msk_m)) if tap else loss
+                return new_pm, new_s, out
 
-            cp, s, losses = jax.vmap(one_cluster)(cp, s, b, gammas, mask, sub)
-            return (cp, s), losses
+            cp, s, ys = jax.vmap(one_cluster)(cp, s, b, gammas, mask, sub)
+            return (cp, s), ys
 
-        (cparams, opt_state), losses = jax.lax.scan(
-            interaction, (cparams0, opt_state), (batch, lrs, subs)
-        )
+        out = _scan_and_tap_last(interaction, (cparams0, opt_state),
+                                 (batch, lrs, subs), taps)
+        cparams, opt_state = out[0], out[1]
 
         # ES -> PS: compressed cluster deltas, PS weighted-aggregates + broadcasts
-        es_deltas = jax.vmap(
-            lambda p_m, sub_m: es_channel.compress(tree_sub(p_m, params), sub_m)
-        )(cparams, es_subs)
-        agg = jax.tree.map(lambda x_: jnp.einsum("m,m...->...", es_weights, x_), es_deltas)
-        return tree_add(params, agg), opt_state, losses
+        with jax.named_scope("es_hop"):
+            if taps:
+                raw_es = jax.vmap(lambda p_m: tree_sub(p_m, params))(cparams)
+                es_deltas = jax.vmap(es_channel.compress)(raw_es, es_subs)
+            else:
+                es_deltas = jax.vmap(
+                    lambda p_m, sub_m: es_channel.compress(tree_sub(p_m, params), sub_m)
+                )(cparams, es_subs)
+            agg = jax.tree.map(lambda x_: jnp.einsum("m,m...->...", es_weights, x_), es_deltas)
+            new_params = tree_add(params, agg)
+        if taps:
+            losses, tele = out[2], dict(out[3])  # tele leaves: (M,)
+            tele["es_comp_err"] = tree_client_norms(
+                jax.tree.map(lambda c, r: c - r, es_deltas, raw_es))
+            return new_params, opt_state, losses, tele
+        return new_params, opt_state, out[2]
 
     return round_fn
 
 
 @functools.cache
-def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
+def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt,
+                    taps: bool = False):
     """Compiled `_multi_round_body` (the per-round 3-tier HFL entry point)."""
-    return _jit_round(_multi_round_body(model, channel, es_channel, opt))
+    return _jit_round(_multi_round_body(model, channel, es_channel, opt, taps))
 
 
 # --------------------------------------------------------------------------
@@ -354,16 +431,18 @@ class RoundEngine:
             )
         return state
 
-    def grad_round(self, params, batch, gammas, lrs):
-        return _grad_round_fn(self.model)(params, batch, gammas, lrs)
+    def grad_round(self, params, batch, gammas, lrs, *, taps=False):
+        return _grad_round_fn(self.model, taps)(params, batch, gammas, lrs)
 
     def cluster_round(self, params, batch, gammas, lrs, subs=None, opt_state=None,
-                      mask=None):
+                      mask=None, *, taps=False):
         """One delta-mode round.  `mask` (n,) is the optional per-client
         participation mask (repro.part): masked-out clients contribute zero
         delta, are excluded from the loss, and keep their opt state frozen.
         With `mask=None` the compiled function is the exact pre-participation
-        round — the bit-identical full-participation path."""
+        round — the bit-identical full-participation path.  `taps=True`
+        appends the per-round tele dict to the return tuple (a separately
+        cached compiled variant; the default path's graph is untouched)."""
         J = jax.tree.leaves(batch)[0].shape[0]
         n = jax.tree.leaves(batch)[0].shape[1]
         if subs is None:
@@ -371,14 +450,14 @@ class RoundEngine:
         if opt_state is None:
             opt_state = self.init_opt_state(params, n)
         if mask is None:
-            fn = _delta_round_fn(self.model, self.channel, self.local_opt)
+            fn = _delta_round_fn(self.model, self.channel, self.local_opt, taps)
             return fn(params, opt_state, batch, gammas, lrs, subs)
-        fn = _masked_delta_round_fn(self.model, self.channel, self.local_opt)
+        fn = _masked_delta_round_fn(self.model, self.channel, self.local_opt, taps)
         return fn(params, opt_state, batch, gammas, jnp.asarray(mask), lrs, subs)
 
     def multi_cluster_round(
         self, params, batch, gammas, mask, es_weights, lrs,
-        subs=None, es_subs=None, opt_state=None,
+        subs=None, es_subs=None, opt_state=None, *, taps=False,
     ):
         J, M = jax.tree.leaves(batch)[0].shape[:2]
         if subs is None:
@@ -388,7 +467,8 @@ class RoundEngine:
         if opt_state is None:
             opt_state = self.init_opt_state(params, M, mask.shape[1])
         fn = _multi_round_fn(
-            self.model, self.channel, self.es_channel or self.channel, self.local_opt
+            self.model, self.channel, self.es_channel or self.channel, self.local_opt,
+            taps,
         )
         return fn(params, opt_state, batch, gammas, mask, es_weights, lrs, subs, es_subs)
 
@@ -432,46 +512,57 @@ class RoundEngine:
 
 
 @functools.cache
-def scan_grad_body(model: FedModel):
+def scan_grad_body(model: FedModel, taps: bool = False):
     """Whole-run body, Eq. (5) grad mode.  carry: params.
     x: {"batch": (K, n_max, B, ...), "gammas": (n_max,)} (padded client slots
     carry zero gamma weight — exact-zero contributions).  consts: {"lrs": (K,)}.
-    Emits the per-step gamma-weighted losses (K,)."""
+    Emits the per-step gamma-weighted losses (K,); with `taps` the ys are
+    (losses, tele) so the chunk runner can split the stacked telemetry off."""
     phase = grad_phase(model)
 
     def body(params, x, consts):
-        params, losses = phase(params, x["batch"], x["gammas"], consts["lrs"])
-        return params, losses
+        with jax.named_scope("local_train"):
+            new_params, losses = phase(params, x["batch"], x["gammas"], consts["lrs"])
+        if taps:
+            return new_params, (losses, grad_taps(params, new_params, x["gammas"]))
+        return new_params, losses
 
     return body
 
 
 @functools.cache
-def scan_delta_body(model: FedModel, channel: Channel, opt: LocalOpt):
+def scan_delta_body(model: FedModel, channel: Channel, opt: LocalOpt,
+                    taps: bool = False):
     """Whole-run body, delta mode over one fixed client set (FedAvg).
     carry: (params, opt_state (n, ...)).  x: {"batch": (J, n, E, B, ...),
     "gammas"/"mask": (n,), "subs": (J, 2)}.  consts: {"lrs": (J, E)}.
-    Emits per-interaction masked mean losses (J,)."""
-    round_fn = _masked_round_body(model, channel, opt)
+    Emits per-interaction masked mean losses (J,); with `taps` the ys are
+    (losses, tele)."""
+    round_fn = _masked_round_body(model, channel, opt, taps)
 
     def body(carry, x, consts):
         params, opt_state = carry
-        params, opt_state, losses = round_fn(
+        out = round_fn(
             params, opt_state, x["batch"], x["gammas"], x["mask"], consts["lrs"], x["subs"]
         )
+        if taps:
+            params, opt_state, losses, tele = out
+            return (params, opt_state), (losses, tele)
+        params, opt_state, losses = out
         return (params, opt_state), losses
 
     return body
 
 
 @functools.cache
-def scan_cluster_delta_body(model: FedModel, channel: Channel, opt: LocalOpt):
+def scan_cluster_delta_body(model: FedModel, channel: Channel, opt: LocalOpt,
+                            taps: bool = False):
     """Whole-run body, delta mode with a per-round active cluster (Fed-CHS).
     carry: (params, opt_states (M, n_max, ...)) — the active cluster's rows
     are gathered/scattered by the scanned cluster index x["m"].
     x adds "m": () int32 to the `scan_delta_body` inputs (all padded to
     n_max width)."""
-    round_fn = _masked_round_body(model, channel, opt)
+    round_fn = _masked_round_body(model, channel, opt, taps)
 
     def body(carry, x, consts):
         params, opt_all = carry
@@ -479,33 +570,45 @@ def scan_cluster_delta_body(model: FedModel, channel: Channel, opt: LocalOpt):
         s_m = jax.tree.map(
             lambda leaf: jax.lax.dynamic_index_in_dim(leaf, m, 0, keepdims=False), opt_all
         )
-        params, new_s, losses = round_fn(
+        out = round_fn(
             params, s_m, x["batch"], x["gammas"], x["mask"], consts["lrs"], x["subs"]
         )
+        if taps:
+            params, new_s, losses, tele = out
+        else:
+            params, new_s, losses = out
         opt_all = jax.tree.map(
             lambda leaf, ns: jax.lax.dynamic_update_index_in_dim(leaf, ns, m, 0),
             opt_all,
             new_s,
         )
+        if taps:
+            return (params, opt_all), (losses, tele)
         return (params, opt_all), losses
 
     return body
 
 
 @functools.cache
-def scan_multi_body(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt):
+def scan_multi_body(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt,
+                    taps: bool = False):
     """Whole-run body, 3-tier HFL global rounds (Hier-Local-QSGD).
     carry: (params, opt_state (M, n_max, ...)).  x: {"batch": (J, M, n_max,
     E, B, ...), "gammas"/"mask": (M, n_max), "es_weights": (M,), "subs":
-    (J, M, 2), "es_subs": (M, 2)}.  Emits losses (J, M)."""
-    round_fn = _multi_round_body(model, channel, es_channel, opt)
+    (J, M, 2), "es_subs": (M, 2)}.  Emits losses (J, M); with `taps` the ys
+    are (losses, tele) with per-cluster (M,) tele leaves."""
+    round_fn = _multi_round_body(model, channel, es_channel, opt, taps)
 
     def body(carry, x, consts):
         params, opt_state = carry
-        params, opt_state, losses = round_fn(
+        out = round_fn(
             params, opt_state, x["batch"], x["gammas"], x["mask"], x["es_weights"],
             consts["lrs"], x["subs"], x["es_subs"],
         )
+        if taps:
+            params, opt_state, losses, tele = out
+            return (params, opt_state), (losses, tele)
+        params, opt_state, losses = out
         return (params, opt_state), losses
 
     return body
@@ -566,6 +669,9 @@ class ScanPlan:
     rounds: int
     eval_every: int
     chunk_rounds: int = 32
+    obs: Any = None           # repro.obs.RunTelemetry | None; when its taps
+    #                           flag is set, `body` must be the tapped variant
+    #                           (ys = (losses, tele)) — plan builders pair them
 
 
 def run_scan(plan: ScanPlan, record) -> PyTree:
@@ -603,6 +709,7 @@ def run_scan_sweep(plans: list[ScanPlan], record) -> PyTree:
     Returns the final stacked carry.
     """
     p0 = plans[0]
+    assert p0.obs is None, "telemetry is unsupported in vmapped sweeps"
     assert all(p.body is p0.body for p in plans), "sweep plans must share a body"
     assert all(np.array_equal(np.asarray(p.trained), np.asarray(p0.trained)) for p in plans), \
         "sweep plans must share the trained-round schedule (full participation)"
@@ -621,6 +728,8 @@ def _run_chunks(chunk, carry, stage, plan: ScanPlan, record, *, last_slice) -> P
     stage + `device_put` + execute each chunk, track the last trained round's
     on-device loss row (`last_slice` absorbs the sweep's leading seed axis),
     and fire `record` at every eval round."""
+    obs = plan.obs
+    tapped = obs is not None and obs.taps
     trained_idx = np.flatnonzero(np.asarray(plan.trained))
     last_losses, last_t = None, None
     pos = 0
@@ -629,7 +738,19 @@ def _run_chunks(chunk, carry, stage, plan: ScanPlan, record, *, last_slice) -> P
         while pos < n_t:
             take = min(plan.chunk_rounds, n_t - pos)
             idxs = trained_idx[pos : pos + take]
-            carry, losses = chunk(carry, jax.device_put(stage(idxs)), plan.consts)
+            with maybe_span(obs, "stage"):
+                xs = jax.device_put(stage(idxs))
+            with maybe_span(obs, "scan_chunk"):
+                carry, ys = chunk(carry, xs, plan.consts)
+                if tapped:
+                    # hand the stacked tele to the recorder; by default it
+                    # defers the host transfer (keeping this loop's async
+                    # pipelining), while obs.sync_chunks blocks here so the
+                    # span covers the chunk's real execution time
+                    losses, tele = ys
+                    obs.record_stacked(idxs.tolist(), tele)
+                else:
+                    losses = ys
             last_losses = jax.tree.map(last_slice, losses)
             last_t = int(idxs[-1])
             pos += take

@@ -40,7 +40,7 @@ stack.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +63,7 @@ from repro.core.scheduler import (
 )
 from repro.core.simulation import FLTask, RunRecorder, RunResult
 from repro.core.topology import make_topology
+from repro.obs.trace import maybe_span
 from repro.data.sources import scatter_put, stage_chunk
 from repro.optim.local import LocalOpt, PlainSGD
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
@@ -104,6 +105,9 @@ class FedCHSConfig:
                                            # chunk (bounds staged-batch memory)
     seed: int = 0
     schedule: Schedule | None = None       # default: paper eta_k = 1/(K sqrt(k+1))
+    obs: Any = None                        # repro.obs.RunTelemetry: in-graph taps
+                                           # + host spans; None (default) keeps the
+                                           # compiled graphs byte-for-byte unchanged
 
 
 def _make_scheduler(task: FLTask, config: FedCHSConfig, topo, m0: int):
@@ -188,7 +192,9 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
     )
     opt_states: dict[int, object] = {}  # cluster -> stacked client-held opt state
 
-    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    obs = config.obs
+    taps = obs is not None and obs.taps
+    recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
     m = scheduler.state.current
     losses = jnp.full((1,), jnp.nan)  # stays nan until a first trained round
     for t in range(config.rounds):
@@ -197,10 +203,13 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
             members if full_part else config.sampler.participants(t, members)
         )
 
+        tele = None
         if grad_mode:
             gammas = jnp.asarray(task.cluster_weights(m))
             batch = task.sample_cluster_batches(m, K)
-            params, losses = engine.grad_round(params, batch, gammas, lrs_flat)
+            with maybe_span(obs, "round"):
+                out = engine.grad_round(params, batch, gammas, lrs_flat, taps=taps)
+                params, losses, tele = out if taps else (*out, None)
         elif full_part:
             gammas = jnp.asarray(task.cluster_weights(m))
             batch = task.sample_round_batches(m, K, E)
@@ -209,9 +218,12 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
                 key, subs = split_chain(key, interactions)
             if m not in opt_states:
                 opt_states[m] = engine.init_opt_state(params, len(members))
-            params, opt_states[m], losses = engine.cluster_round(
-                params, batch, gammas, lrs_grouped, subs, opt_states[m]
-            )
+            with maybe_span(obs, "round"):
+                out = engine.cluster_round(
+                    params, batch, gammas, lrs_grouped, subs, opt_states[m],
+                    taps=taps,
+                )
+                params, opt_states[m], losses, tele = out if taps else (*out, None)
         elif participating:
             # masked round: gammas renormalized over the participating set;
             # batches are staged at full cluster width so the per-client data
@@ -226,13 +238,17 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
                 key, subs = split_chain(key, interactions)
             if m not in opt_states:
                 opt_states[m] = engine.init_opt_state(params, len(members))
-            params, opt_states[m], losses = engine.cluster_round(
-                params, batch, gammas, lrs_grouped, subs, opt_states[m],
-                mask=pmask,
-            )
+            with maybe_span(obs, "round"):
+                out = engine.cluster_round(
+                    params, batch, gammas, lrs_grouped, subs, opt_states[m],
+                    mask=pmask, taps=taps,
+                )
+                params, opt_states[m], losses, tele = out if taps else (*out, None)
         # else: the whole cluster is unavailable — the ES becomes a pass-
         # through hop: no training, no client traffic, the model is simply
         # forwarded on the ES->ES pass below (losses keeps its last value)
+        if tele is not None:
+            obs.record_round(t, tele)
 
         # comm accounting: one broadcast + one upload per *participating*
         # client per interaction, metered per message so netsim sees the
@@ -331,6 +347,7 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
         and isinstance(channel, DenseChannel)
         and (config.local_opt is None or isinstance(config.local_opt, PlainSGD))
     )
+    taps = config.obs is not None and config.obs.taps
 
     M = task.num_clusters
     n_max = max(len(m) for m in members_of)
@@ -403,7 +420,7 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
             )
             return {"batch": batch, "gammas": gammas_r[idxs]}
 
-        body = scan_grad_body(engine.model)
+        body = scan_grad_body(engine.model, taps)
         carry = params
         consts = {"lrs": jnp.asarray(lrs)}
         params_of = lambda c: c  # noqa: E731
@@ -425,14 +442,14 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
                 "subs": subs_r[idxs],
             }
 
-        body = scan_cluster_delta_body(engine.model, channel, engine.local_opt)
+        body = scan_cluster_delta_body(engine.model, channel, engine.local_opt, taps)
         carry = (params, engine.init_opt_state(params, M, n_max))
         consts = {"lrs": jnp.asarray(lrs.reshape(interactions, E))}
         params_of = lambda c: c[0]  # noqa: E731
 
     plan = ScanPlan(body=body, carry=carry, consts=consts, stage=stage,
                     trained=trained, rounds=R, eval_every=config.eval_every,
-                    chunk_rounds=config.chunk_rounds)
+                    chunk_rounds=config.chunk_rounds, obs=config.obs)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
@@ -465,11 +482,14 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
 
 
 def _run_fed_chs_scanned(task: FLTask, config: FedCHSConfig) -> RunResult:
-    plan, params_of, traffic = _fed_chs_scan_plan(task, task.source, config)
-    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    obs = config.obs
+    with maybe_span(obs, "precompute"):
+        plan, params_of, traffic = _fed_chs_scan_plan(task, task.source, config)
+    recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
     carry = run_scan(
         plan, lambda t, c, losses, _lt: recorder.record(t, params_of(c), losses)
     )
     ledger = CommLedger(track_events=config.track_events)
-    ledger.materialize(traffic(config.track_events))
+    with maybe_span(obs, "materialize"):
+        ledger.materialize(traffic(config.track_events))
     return recorder.result("fed_chs", ledger, params_of(carry))

@@ -140,6 +140,17 @@ class CommLedger:
             evs.sort(key=lambda e: (e.phase, e.hop, e.sender, e.receiver))
         return dict(grouped)
 
+    def event_index(self) -> dict[tuple, list[int]]:
+        """Event positions grouped by ``(round, hop, "sender->receiver")`` in
+        stream order — the key the netsim adapters use for transfer-job IDs,
+        so the merged-timeline exporter (repro.obs.export) can FIFO-match
+        each CommEvent to the simulated job that carried it.  Requires
+        `track_events`."""
+        idx: dict[tuple, list[int]] = defaultdict(list)
+        for i, ev in enumerate(self.events):
+            idx[(ev.round, ev.hop, f"{ev.sender}->{ev.receiver}")].append(i)
+        return dict(idx)
+
     def round_bits(self, hop: str | None = None) -> dict[int, int]:
         """Per-round bit totals from the event stream (optionally one hop) —
         the closed-form participation checks read this: under a sampler,

@@ -30,6 +30,7 @@ from repro.data.sources import ArraySource, DataSource
 from repro.data.synthetic import Dataset
 from repro.models.classifier import Classifier
 from repro.models.fed import FedModel, as_fed_model
+from repro.obs.trace import maybe_span
 from repro.utils import tree_num_params
 
 PyTree = Any
@@ -210,11 +211,17 @@ class RunRecorder:
     shape — the logged value is `float(jnp.mean(losses))`, the historical
     per-eval host sync) or None when nothing has trained yet (logs NaN, the
     looped drivers' sentinel).
+
+    `obs` (repro.obs.RunTelemetry) is the run's observability carrier: every
+    evaluation is wrapped in its "eval" span (the one place eval happens for
+    both looped and scanned paths) and the finished telemetry rides out on
+    `RunResult.telemetry`.
     """
 
     task: FLTask
     rounds: int
     eval_every: int
+    obs: Any = None
     rounds_log: list = dataclasses.field(default_factory=list)
     acc_log: list = dataclasses.field(default_factory=list)
     loss_log: list = dataclasses.field(default_factory=list)
@@ -226,12 +233,14 @@ class RunRecorder:
         if not self.should_eval(t):
             return
         self.rounds_log.append(t)
-        self.acc_log.append(self.task.evaluate(params))
+        with maybe_span(self.obs, "eval"):
+            self.acc_log.append(self.task.evaluate(params))
         self.loss_log.append(float("nan") if losses is None else float(jnp.mean(losses)))
 
     def result(self, name: str, ledger: CommLedger, params: PyTree) -> RunResult:
         return RunResult(name, self.rounds_log, self.acc_log, self.loss_log, ledger,
-                         params, metric_mode=self.task.metric_mode)
+                         params, metric_mode=self.task.metric_mode,
+                         telemetry=self.obs)
 
 
 @dataclasses.dataclass
@@ -243,14 +252,21 @@ class RunResult:
     ledger: CommLedger
     final_params: PyTree
     metric_mode: str = "max"  # "max": accuracy-like; "min": perplexity-like
+    telemetry: Any = None  # repro.obs.RunTelemetry when the run carried one
+
+    def _empty_metric(self) -> float:
+        # an empty log must read as WORST-possible, whatever the metric's
+        # direction: 0.0 for accuracy-like metrics, but +inf for
+        # perplexity-like ones (0.0 would read as a *perfect* perplexity)
+        return 0.0 if self.metric_mode == "max" else float("inf")
 
     def best_acc(self) -> float:
         if not self.test_acc:
-            return 0.0
+            return self._empty_metric()
         return max(self.test_acc) if self.metric_mode == "max" else min(self.test_acc)
 
     def final_acc(self) -> float:
-        return self.test_acc[-1] if self.test_acc else 0.0
+        return self.test_acc[-1] if self.test_acc else self._empty_metric()
 
     def _reached(self, value: float, gamma: float) -> bool:
         return value >= gamma if self.metric_mode == "max" else value <= gamma

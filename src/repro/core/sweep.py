@@ -63,6 +63,9 @@ def run_sweep(task: FLTask, config, seeds) -> list[RunResult]:
     assert is_full_participation(config.sampler), \
         "run_sweep vmaps over seeds with a shared trained-round schedule — " \
         "sampler-driven runs must go through the per-seed drivers"
+    assert config.obs is None, \
+        "telemetry is per-run host state — a vmapped sweep has no per-seed " \
+        "chunk boundaries to materialize taps at; profile a single run instead"
     if isinstance(config, FedCHSConfig):
         assert _fed_chs_scannable(task, config), \
             "this Fed-CHS config needs the looped driver (dynamic topology)"

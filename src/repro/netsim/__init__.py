@@ -4,6 +4,7 @@
 # simulator (events.py), and per-algorithm adapters (adapters.py).
 from repro.netsim.adapters import (
     build_jobs,
+    replay_run,
     simulate_run,
     time_to_accuracy,
     timeline_for,
@@ -27,6 +28,7 @@ __all__ = [
     "edge_cloud_network",
     "sgd_step_flops",
     "build_jobs",
+    "replay_run",
     "timeline_for",
     "simulate_run",
     "time_to_accuracy",

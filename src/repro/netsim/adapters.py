@@ -49,7 +49,8 @@ from collections import defaultdict
 from repro.netsim.events import Job, Timeline, simulate
 from repro.netsim.links import NetworkModel, sgd_step_flops
 
-__all__ = ["build_jobs", "timeline_for", "simulate_run", "time_to_accuracy"]
+__all__ = ["build_jobs", "replay_run", "timeline_for", "simulate_run",
+           "time_to_accuracy"]
 
 _WIRELESS_UP = ("client_to_es", "client_to_ps")
 _WIRELESS_DOWN = ("es_to_client", "ps_to_client")
@@ -258,6 +259,24 @@ def _build_walk(b, events, local_steps, flops1):
     return b.jobs
 
 
+def replay_run(result, net: NetworkModel, *, local_steps: int, batch_size: int,
+               num_params: int,
+               deadline_s: float | None = None) -> tuple[list[Job], Timeline]:
+    """Replay a recorded run through `net`: the job DAG AND its resolved
+    timeline, from ONE compile.
+
+    The pair is what consumers that need job-level detail (the merged
+    Perfetto exporter in `repro.obs.export`, which matches each `CommEvent`
+    to the transfer job that carried it) use; callers that only want
+    wall-clock aggregates can keep calling `timeline_for`."""
+    b = _compile(result, net, local_steps=local_steps, batch_size=batch_size,
+                 num_params=num_params, deadline_s=deadline_s)
+    tl = simulate(b.jobs)
+    tl.dropped = {r: frozenset(s) for r, s in b.dropped.items()}
+    tl.dropped_bits = b.dropped_bits
+    return b.jobs, tl
+
+
 def timeline_for(result, net: NetworkModel, *, local_steps: int, batch_size: int,
                  num_params: int, deadline_s: float | None = None) -> Timeline:
     """Wall-clock timeline of a recorded run under `net`.
@@ -265,11 +284,9 @@ def timeline_for(result, net: NetworkModel, *, local_steps: int, batch_size: int
     `deadline_s` (default: `net.deadline_s`) switches on deadline dropouts;
     the timeline then reports who was dropped when (`Timeline.dropped`) and
     the uplink bits saved (`Timeline.dropped_bits`)."""
-    b = _compile(result, net, local_steps=local_steps, batch_size=batch_size,
-                 num_params=num_params, deadline_s=deadline_s)
-    tl = simulate(b.jobs)
-    tl.dropped = {r: frozenset(s) for r, s in b.dropped.items()}
-    tl.dropped_bits = b.dropped_bits
+    _, tl = replay_run(result, net, local_steps=local_steps,
+                       batch_size=batch_size, num_params=num_params,
+                       deadline_s=deadline_s)
     return tl
 
 

@@ -77,6 +77,12 @@ class Timeline:
     dropped: dict[int, frozenset] = dataclasses.field(default_factory=dict)
     dropped_bits: int = 0
 
+    def drop_counts(self) -> dict[int, int]:
+        """Per-round deadline-dropped client counts (empty without a
+        deadline) — the shape the timeline exporter and the summary tables
+        consume."""
+        return {r: len(c) for r, c in sorted(self.dropped.items()) if c}
+
     def round_duration(self, round_idx: int) -> float:
         """Wall-clock between the end of the previous round and this one."""
         prev = [r for r in self.round_end if r < round_idx]

@@ -604,6 +604,64 @@ def test_scanned_hot_loop_zero_host_transfers(small_task):
         jax.block_until_ready(jax.tree.leaves((out_carry, losses)))
 
 
+# --------------------------------------------------------------------------
+# telemetry parity: the in-graph taps are READ-ONLY — a run with
+# obs=RunTelemetry() must be bit-identical (params, metrics, losses, ledger)
+# to the same run with obs=None, for all four drivers, scanned and looped
+# --------------------------------------------------------------------------
+
+from repro.obs import RunTelemetry  # noqa: E402
+
+
+def _assert_telemetry_neutral(task, run, cfg_cls, kwargs):
+    base = run(task, cfg_cls(**kwargs))
+    obs = RunTelemetry()
+    tapped = run(task, cfg_cls(**kwargs, obs=obs))
+    _assert_bit_identical(base, tapped)
+    assert base.telemetry is None and tapped.telemetry is obs
+    # full participation: every round trains, so every round is tapped
+    assert obs.rounds == list(range(kwargs["rounds"]))
+    for k in ("update_norm", "drift", "comp_err", "mass"):
+        assert len(obs.metrics[k]) == kwargs["rounds"]
+    assert obs.tracer.events  # spans were recorded
+
+
+def test_telemetry_is_bit_neutral_all_drivers_scanned(small_task):
+    for run, cfg_cls, kwargs in _full_participation_cases(seed=1, qsgd=8):
+        _assert_telemetry_neutral(small_task, run, cfg_cls, kwargs)
+
+
+def test_telemetry_is_bit_neutral_all_drivers_looped(small_task):
+    for run, cfg_cls, kwargs in _full_participation_cases(seed=2, qsgd=None):
+        _assert_telemetry_neutral(small_task, run, cfg_cls,
+                                  dict(kwargs, scan_rounds=False))
+
+
+def test_tapped_scanned_hot_loop_zero_host_transfers(small_task):
+    """The tapped chunk accumulates telemetry ON DEVICE: with
+    jax.transfer_guard("disallow") active, executing a tapped chunk still
+    performs zero implicit host<->device transfers (materialization happens
+    at the chunk boundary via RunTelemetry.record_stacked, outside the
+    guard)."""
+    from repro.core.engine import scan_chunk_fn
+    from repro.core.fed_chs import _fed_chs_scan_plan
+
+    cfg = FedCHSConfig(rounds=6, local_steps=4, local_epochs=2, eval_every=10,
+                       chunk_rounds=6, seed=0, obs=RunTelemetry())
+    plan, _params_of, _traffic = _fed_chs_scan_plan(small_task, small_task.source, cfg)
+    idxs = np.flatnonzero(np.asarray(plan.trained))
+    xs = jax.device_put(plan.stage(idxs))
+    carry = jax.device_put(plan.carry)
+    consts = jax.device_put(plan.consts)
+    chunk = scan_chunk_fn(plan.body)
+    warm = chunk(jax.tree.map(jnp.array, carry), xs, consts)
+    jax.block_until_ready(jax.tree.leaves(warm))
+    with jax.transfer_guard("disallow"):
+        out_carry, (losses, tele) = chunk(carry, xs, consts)
+        jax.block_until_ready(jax.tree.leaves((out_carry, losses, tele)))
+    assert set(tele) == {"update_norm", "drift", "comp_err", "mass"}
+
+
 if HAS_HYPOTHESIS:
 
     @given(seed=st.integers(0, 30), qsgd=st.sampled_from([None, 8]),
