@@ -19,6 +19,7 @@ Two tiers:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 
 import jax
@@ -26,7 +27,16 @@ import jax.numpy as jnp
 
 from repro.comm.bits import qsgd_message_bits
 from repro.comm.channels import QSGDChannel
-from repro.kernels.ops import qsgd_decode, qsgd_encode, qsgd_quantize, qsgd_roundtrip
+from repro.kernels.ops import (
+    DEFAULT_BLOCK,
+    _pad_to_blocks,
+    qsgd_decode,
+    qsgd_encode,
+    qsgd_quantize,
+    qsgd_roundtrip,
+)
+from repro.kernels.qsgd import ROWS_PER_TILE
+from repro.kernels.ref import qsgd_quantize_blocks_ref
 
 
 def _time(fn, *args, reps=5):
@@ -35,6 +45,17 @@ def _time(fn, *args, reps=5):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / reps * 1e6
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _quantize_threefry(v, key, *, s):
+    """The pre-optimization qsgd_quantize (threefry-uniform dither), timed
+    alongside the shipped path so the quantize row's derived field records
+    the dither swap's before/after in-run: `GB/s=<now>_was_<threefry>`."""
+    blocks, n = _pad_to_blocks(v, DEFAULT_BLOCK, ROWS_PER_TILE)
+    u = jax.random.uniform(key, blocks.shape, jnp.float32)
+    q, norms = qsgd_quantize_blocks_ref(blocks, u, s)
+    return q, norms, n
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,9 +97,12 @@ def run(quick: bool = True):
     for n in (1 << 16, 1 << 20) if quick else (1 << 16, 1 << 20, 1 << 24):
         v = jax.random.normal(key, (n,), jnp.float32)
         us_q = _time(lambda x: qsgd_quantize(x, key, s=s), v)
+        us_q_old = _time(lambda x: _quantize_threefry(x, key, s=s), v)
         us_rt = _time(lambda x: qsgd_roundtrip(x, key, s=s), v)
         gbps = n * 4 / (us_q / 1e6) / 1e9
-        rows.append((f"kernel/qsgd_quantize_n{n}", us_q, f"GB/s={gbps:.2f}"))
+        gbps_old = n * 4 / (us_q_old / 1e6) / 1e9
+        rows.append((f"kernel/qsgd_quantize_n{n}", us_q,
+                     f"GB/s={gbps:.2f}_was_{gbps_old:.2f}"))
         rows.append((f"kernel/qsgd_roundtrip_n{n}", us_rt, ""))
 
         # packed wire: fused quantize->pack and unpack->dequantize

@@ -56,6 +56,7 @@ from repro.part import (
     schedule_participants,
     stack_masks,
 )
+from repro.sharding.fed import resolve_mesh, shard_plan
 
 
 @dataclasses.dataclass
@@ -76,6 +77,11 @@ class FedAvgConfig:
     schedule: Schedule | None = None
     obs: Any = None                    # repro.obs.RunTelemetry; None = the
                                        # byte-for-byte untapped fast path
+    mesh: Any = None                   # jax Mesh ("clusters", "clients"):
+                                       # shard the scanned client axis
+                                       # (repro.sharding.fed, bit-identical);
+                                       # None adopts an ambient federation
+                                       # mesh or stays single-device
 
 
 def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
@@ -234,6 +240,11 @@ def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
         chunk_rounds=config.chunk_rounds,
         obs=config.obs,
     )
+
+    mesh = resolve_mesh(config.mesh)
+    if mesh is not None:
+        plan = shard_plan(plan, mesh, "delta", model=engine.model,
+                          channel=channel, opt=engine.local_opt, clients=n)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())

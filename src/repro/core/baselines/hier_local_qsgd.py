@@ -49,6 +49,7 @@ from repro.obs.trace import maybe_span
 from repro.optim.local import LocalOpt
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 from repro.part import Sampler, is_full_participation, participation_mask
+from repro.sharding.fed import resolve_mesh, shard_plan
 
 
 @dataclasses.dataclass
@@ -71,6 +72,12 @@ class HierLocalQSGDConfig:
     schedule: Schedule | None = None
     obs: Any = None                    # repro.obs.RunTelemetry; None = the
                                        # byte-for-byte untapped fast path
+    mesh: Any = None                   # jax Mesh ("clusters", "clients"):
+                                       # shard clusters over "clusters" and
+                                       # in-cluster clients over "clients"
+                                       # (repro.sharding.fed, bit-identical);
+                                       # None adopts an ambient federation
+                                       # mesh or stays single-device
 
 
 def _participation_arrays(task: FLTask, parts_t, M: int, n_max: int):
@@ -335,6 +342,12 @@ def _hier_scan_plan(task: FLTask, source, config: HierLocalQSGDConfig):
         chunk_rounds=config.chunk_rounds,
         obs=config.obs,
     )
+
+    mesh = resolve_mesh(config.mesh)
+    if mesh is not None:
+        plan = shard_plan(plan, mesh, "multi", model=engine.model,
+                          channel=channel, es_channel=es_channel,
+                          opt=engine.local_opt, clusters=M, clients=n_max)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())

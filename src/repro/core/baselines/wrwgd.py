@@ -41,6 +41,7 @@ from repro.data.sources import scatter_put, stage_chunk
 from repro.obs.trace import maybe_span
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 from repro.part import Sampler, is_full_participation
+from repro.sharding.fed import resolve_mesh, shard_plan
 
 
 @dataclasses.dataclass
@@ -61,6 +62,11 @@ class WRWGDConfig:
     schedule: Schedule | None = None
     obs: Any = None                    # repro.obs.RunTelemetry; None = the
                                        # byte-for-byte untapped fast path
+    mesh: Any = None                   # jax Mesh ("clusters", "clients");
+                                       # a 1-client walk degrades gracefully
+                                       # to replicated compute — accepted so
+                                       # all four drivers share the config
+                                       # surface (repro.sharding.fed)
 
 
 def _precompute_walk(task: FLTask, config: WRWGDConfig):
@@ -185,6 +191,10 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
         chunk_rounds=config.chunk_rounds,
         obs=config.obs,
     )
+
+    mesh = resolve_mesh(config.mesh)
+    if mesh is not None:
+        plan = shard_plan(plan, mesh, "grad", model=engine.model, clients=1)
 
     hop_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 

@@ -80,6 +80,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Any
 
 import jax
@@ -97,6 +98,8 @@ from repro.utils import tree_add, tree_sub
 
 PyTree = Any
 Batch = Any  # pytree of arrays sharing the documented leading axes
+
+_log = logging.getLogger(__name__)
 
 
 def _jit_round(fn):
@@ -672,6 +675,16 @@ class ScanPlan:
     obs: Any = None           # repro.obs.RunTelemetry | None; when its taps
     #                           flag is set, `body` must be the tapped variant
     #                           (ys = (losses, tele)) — plan builders pair them
+    chunk_fn: Any = None      # compiled (carry, xs, consts) -> (carry, ys)
+    #                           override; None -> scan_chunk_fn(body).  The
+    #                           device-mesh path (repro.sharding.fed) installs
+    #                           its shard_map-wrapped chunk here so run_scan
+    #                           itself never branches on sharding.
+    xs_put: Any = None        # staged-xs host->device transfer override; None
+    #                           -> plain jax.device_put.  The mesh path uses a
+    #                           per-leaf NamedSharding put (each device
+    #                           receives only its shard slice — the global
+    #                           stacked tensor never lands on one device).
 
 
 def run_scan(plan: ScanPlan, record) -> PyTree:
@@ -696,27 +709,59 @@ def run_scan(plan: ScanPlan, record) -> PyTree:
     that skipped rounds consume no data draws — we take the extra compiles.
     """
     assert plan.chunk_rounds >= 1
-    return _run_chunks(scan_chunk_fn(plan.body), plan.carry, plan.stage, plan,
+    chunk = plan.chunk_fn if plan.chunk_fn is not None else scan_chunk_fn(plan.body)
+    return _run_chunks(chunk, plan.carry, plan.stage, plan,
                        record, last_slice=lambda leaf: leaf[-1])
 
 
-def run_scan_sweep(plans: list[ScanPlan], record) -> PyTree:
+def run_scan_sweep(plans: list[ScanPlan], record, *, mesh=None) -> PyTree:
     """Run several same-config, different-seed `ScanPlan`s as ONE vmapped
     scan over a leading seed axis.  All plans must share body/consts/trained
     schedule (same config, full participation); per-seed divergence lives in
     the stacked carries and staged inputs (visit orders, PRNG subkeys, data
     draws).  `record(t, carry, losses, t_l)` sees seed-stacked carry/losses.
     Returns the final stacked carry.
+
+    `mesh` shards the leading seed axis across every device of the given
+    mesh (pure GSPMD — the vmapped scan is compiled unchanged, only the
+    input layouts change, so per-lane trajectories stay bit-exact).  The
+    seed count must divide `mesh.size`; a non-divisible sweep logs a
+    warning and runs unsharded rather than silently padding lanes.
     """
     p0 = plans[0]
     assert p0.obs is None, "telemetry is unsupported in vmapped sweeps"
     assert all(p.body is p0.body for p in plans), "sweep plans must share a body"
     assert all(np.array_equal(np.asarray(p.trained), np.asarray(p0.trained)) for p in plans), \
         "sweep plans must share the trained-round schedule (full participation)"
+    assert p0.chunk_fn is None, \
+        "mesh-sharded plans (sharding.fed.shard_plan) cannot be swept — the " \
+        "client axes are already mapped to devices; shard the seed axis " \
+        "instead via run_scan_sweep(mesh=...)"
     carry = jax.tree.map(lambda *ls: jnp.stack(ls), *[p.carry for p in plans])
 
     def stage(idxs):
         return jax.tree.map(lambda *ls: np.stack(ls), *[p.stage(idxs) for p in plans])
+
+    if mesh is not None and len(plans) % mesh.size != 0:
+        _log.warning(
+            "sweep of %d seeds does not divide mesh of %d devices — "
+            "running unsharded", len(plans), mesh.size,
+        )
+        mesh = None
+    if mesh is not None:
+        # GSPMD: lay the seed axis over all mesh devices; the compiler
+        # partitions the vmapped scan lane-by-lane (per-lane bit-exact)
+        seed_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(tuple(mesh.axis_names))
+        )
+        carry = jax.device_put(carry, seed_sh)
+        p0 = dataclasses.replace(
+            p0,
+            consts=jax.device_put(
+                p0.consts, jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())),
+            xs_put=lambda xs: jax.device_put(xs, seed_sh),
+        )
 
     return _run_chunks(sweep_chunk_fn(p0.body), carry, stage, p0,
                        record, last_slice=lambda leaf: leaf[:, -1])
@@ -730,6 +775,7 @@ def _run_chunks(chunk, carry, stage, plan: ScanPlan, record, *, last_slice) -> P
     and fire `record` at every eval round."""
     obs = plan.obs
     tapped = obs is not None and obs.taps
+    xs_put = plan.xs_put if plan.xs_put is not None else jax.device_put
     trained_idx = np.flatnonzero(np.asarray(plan.trained))
     last_losses, last_t = None, None
     pos = 0
@@ -739,7 +785,7 @@ def _run_chunks(chunk, carry, stage, plan: ScanPlan, record, *, last_slice) -> P
             take = min(plan.chunk_rounds, n_t - pos)
             idxs = trained_idx[pos : pos + take]
             with maybe_span(obs, "stage"):
-                xs = jax.device_put(stage(idxs))
+                xs = xs_put(stage(idxs))
             with maybe_span(obs, "scan_chunk"):
                 carry, ys = chunk(carry, xs, plan.consts)
                 if tapped:

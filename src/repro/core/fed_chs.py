@@ -68,6 +68,7 @@ from repro.data.sources import scatter_put, stage_chunk
 from repro.optim.local import LocalOpt, PlainSGD
 from repro.optim.schedules import Schedule, paper_sqrt_schedule
 from repro.part import Sampler, is_full_participation, participation_mask
+from repro.sharding.fed import resolve_mesh, shard_plan
 
 
 @dataclasses.dataclass
@@ -98,9 +99,9 @@ class FedCHSConfig:
                                            # (AvailabilityAwareScheduler)
     track_events: bool = True              # False: bits only, no CommEvent stream
                                            # (saves memory at --full scale)
-    scan_rounds: bool = True               # whole-run lax.scan executor (falls back
-                                           # to the looped path under `dynamic`,
-                                           # which needs per-round host decisions)
+    scan_rounds: bool = True               # whole-run lax.scan executor (all
+                                           # topologies: dynamic IoV/LEO graphs
+                                           # replay host-side — seed-deterministic)
     chunk_rounds: int = 32                 # scanned mode: rounds staged/scanned per
                                            # chunk (bounds staged-batch memory)
     seed: int = 0
@@ -108,6 +109,15 @@ class FedCHSConfig:
     obs: Any = None                        # repro.obs.RunTelemetry: in-graph taps
                                            # + host spans; None (default) keeps the
                                            # compiled graphs byte-for-byte unchanged
+    mesh: Any = None                       # jax Mesh with axes ("clusters",
+                                           # "clients"): shard the scanned round's
+                                           # stacked client axis over the devices
+                                           # (repro.sharding.fed, bit-identical).
+                                           # None adopts an ambient federation mesh
+                                           # (sharding.ctx.model_mesh) if one is
+                                           # published, else runs the byte-for-byte
+                                           # single-device path.  Looped runs
+                                           # (scan_rounds=False) ignore it.
 
 
 def _make_scheduler(task: FLTask, config: FedCHSConfig, topo, m0: int):
@@ -127,14 +137,18 @@ def _make_scheduler(task: FLTask, config: FedCHSConfig, topo, m0: int):
 def _fed_chs_scannable(task: FLTask, config: FedCHSConfig) -> bool:
     """Whether this run can take the whole-run scan path bit-identically.
 
-    Only dynamic topologies can't: IoV/LEO per-round graphs genuinely need
-    per-round host decisions (the looped path's reason to exist).  Ragged
-    cluster sizes used to force stacked-leaf QSGD onto the looped driver
-    (padding to n_max shifted block alignment); with per-leaf block
-    boundaries and per-sender fold_in keys every channel is now
-    padding-invariant, so ragged clusters scan bit-identically too.
+    Always True now.  Ragged cluster sizes used to force stacked-leaf QSGD
+    onto the looped driver (padding to n_max shifted block alignment); with
+    per-leaf block boundaries and per-sender fold_in keys every channel is
+    padding-invariant.  Dynamic topologies used to need per-round host
+    decisions; IoV/LEO graphs are seed-deterministic functions of the round
+    index, so `Scheduler.precompute(dynamic=...)` replays the whole visit
+    order host-side (step-exact with the looped driver's
+    `set_topology`/`advance` sequence).  Kept as a function: it documents
+    the gate and gives future genuinely-unscannable configs a seam.
     """
-    return config.dynamic is None
+    del task, config
+    return True
 
 
 def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
@@ -303,7 +317,6 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
     `params_of(carry)` extracts the model params, `traffic(track_events)`
     yields the deferred per-round ledger entries.
     """
-    assert config.dynamic is None, "dynamic topologies need the looped path"
     source.reset(config.seed)
     assert config.local_steps % config.local_epochs == 0, "K must divide by E"
     K, E = config.local_steps, config.local_epochs
@@ -311,7 +324,14 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
     sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
     lrs = np.array([sched_fn(k) for k in range(K)], dtype=np.float32)
 
-    topo = make_topology(config.topology, task.num_clusters, seed=config.topology_seed)
+    dyn = None
+    if config.dynamic is not None:
+        from repro.core.dynamics import make_dynamic
+
+        dyn = make_dynamic(config.dynamic, task.num_clusters, seed=config.topology_seed)
+        topo = dyn(0)
+    else:
+        topo = make_topology(config.topology, task.num_clusters, seed=config.topology_seed)
     rng = np.random.default_rng(config.seed)
     m0 = (
         int(rng.integers(task.num_clusters))
@@ -320,8 +340,9 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
     )
     full_part = is_full_participation(config.sampler)
     scheduler = _make_scheduler(task, config, topo, m0)
-    # visit order incl. m(R): round R-1's ES->ES hop names its receiver
-    ms = scheduler.precompute(config.rounds + 1)
+    # visit order incl. m(R): round R-1's ES->ES hop names its receiver;
+    # dynamic (IoV/LEO) graphs replay seed-deterministically inside
+    ms = scheduler.precompute(config.rounds + 1, dynamic=dyn)
 
     R = config.rounds
     members_of = task.cluster_members
@@ -450,6 +471,18 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
     plan = ScanPlan(body=body, carry=carry, consts=consts, stage=stage,
                     trained=trained, rounds=R, eval_every=config.eval_every,
                     chunk_rounds=config.chunk_rounds, obs=config.obs)
+
+    mesh = resolve_mesh(config.mesh)
+    if mesh is not None:
+        # population sharding: the active cluster's client axis spreads over
+        # the whole mesh (one cluster trains per round — see sharding.fed)
+        if grad_mode:
+            plan = shard_plan(plan, mesh, "grad", model=engine.model,
+                              clients=n_max)
+        else:
+            plan = shard_plan(plan, mesh, "cluster_delta", model=engine.model,
+                              channel=channel, opt=engine.local_opt,
+                              clients=n_max)
 
     down_bits = DenseChannel(config.bits_per_param).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())

@@ -84,7 +84,7 @@ class FedCHSScheduler:
         """
         return list(self.precompute(rounds))
 
-    def precompute(self, rounds: int) -> np.ndarray:
+    def precompute(self, rounds: int, dynamic=None) -> np.ndarray:
         """Precompute the whole run's visit order as one int array.
 
         The 2-step rule (and its latency-/availability-aware variants, whose
@@ -95,12 +95,23 @@ class FedCHSScheduler:
         the host.  Replays `advance()` on a state copy — `self` is not
         mutated, and the replay is step-exact with the looped drivers'
         advances (including the `state.step`-indexed availability probes).
+
+        `dynamic` (a `core.dynamics` callable t -> Topology) replays a
+        dynamic network: the graph is swapped to `dynamic(t)` before the
+        advance that leaves round t, exactly where the looped driver calls
+        `set_topology` — IoV/LEO graphs are seed-deterministic functions of
+        the round index, so the whole visit order is just as precomputable.
+        The scheduler's own topology is restored after the replay.
         """
         saved = SchedulerState(self.state.current, self.state.visit_counts.copy(), self.state.step)
+        saved_topo = self.topology
         order = [self.state.current]
-        for _ in range(rounds - 1):
+        for t in range(rounds - 1):
+            if dynamic is not None:
+                self.set_topology(dynamic(t))
             order.append(self.advance())
         self.state = saved
+        self.topology = saved_topo
         return np.asarray(order, dtype=np.int64)
 
 

@@ -46,7 +46,7 @@ _PLANNERS = {
 }
 
 
-def run_sweep(task: FLTask, config, seeds) -> list[RunResult]:
+def run_sweep(task: FLTask, config, seeds, *, mesh=None) -> list[RunResult]:
     """Run `config` at every seed in `seeds` as one vmapped scanned dispatch.
 
     `config` is any of the four driver configs; returns one `RunResult` per
@@ -54,8 +54,16 @@ def run_sweep(task: FLTask, config, seeds) -> list[RunResult]:
     dataclasses.replace(config, seed=s))` calls would — bit-identically in
     Fed-CHS grad mode and WRWGD, within ~1 ulp/round for delta modes (see
     the module docstring for the exact fidelity contract).
+
+    `mesh` device-shards the leading seed axis (GSPMD, per-lane bit-exact —
+    see `engine.run_scan_sweep`); it is exclusive with `config.mesh`, which
+    shards *within* a single run's client axes.
     """
     name, planner = _PLANNERS[type(config)]
+    assert getattr(config, "mesh", None) is None, \
+        "run_sweep shards the seed axis — a config.mesh (client-axis " \
+        "sharding) cannot be combined with a vmapped sweep; pass " \
+        "run_sweep(mesh=...) instead"
     assert config.scan_rounds, \
         "run_sweep is inherently scanned — a scan_rounds=False config asks " \
         "for looped-exact trajectories, which a vmapped sweep cannot " \
@@ -68,7 +76,7 @@ def run_sweep(task: FLTask, config, seeds) -> list[RunResult]:
         "chunk boundaries to materialize taps at; profile a single run instead"
     if isinstance(config, FedCHSConfig):
         assert _fed_chs_scannable(task, config), \
-            "this Fed-CHS config needs the looped driver (dynamic topology)"
+            "this Fed-CHS config cannot take the scanned path"
 
     seeds = list(seeds)
     plans, params_ofs, traffics = [], [], []
@@ -92,7 +100,7 @@ def run_sweep(task: FLTask, config, seeds) -> list[RunResult]:
             l_i = None if losses is None else losses[i]
             recorders[i].record(t, p_i, l_i)
 
-    carry = run_scan_sweep(plans, record)
+    carry = run_scan_sweep(plans, record, mesh=mesh)
     stacked = params_of(carry)
     results = []
     for i in range(len(seeds)):

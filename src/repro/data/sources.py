@@ -87,6 +87,20 @@ def stage_chunk(source: DataSource, plan, alloc) -> Batch:
     return batch
 
 
+def put_sharded(batch: Batch, shardings) -> Batch:
+    """Move a staged host pytree to the device mesh, leaf-wise.
+
+    `shardings` mirrors `batch` with a (Named)Sharding per leaf.  jax slices
+    each host (numpy) leaf per shard before transfer, so the global stacked
+    (chunk, clusters, clients, B, ...) tensor is never materialized on any
+    single device — each device receives exactly its client/cluster window.
+    This is the staged-gather counterpart of `bulk_batches`: bulk staging
+    keeps the HOST work off the Python floor, `put_sharded` keeps the DEVICE
+    footprint per-shard.  The sharded scan path installs it as
+    `ScanPlan.xs_put`; the default path keeps plain `jax.device_put`."""
+    return jax.device_put(batch, shardings)
+
+
 def bulk_batches(source: DataSource, client: int, count: int) -> Batch:
     """`count` sequential draws for one client, stacked (count, B, ...).
 

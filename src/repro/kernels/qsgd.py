@@ -6,8 +6,8 @@ TPU adaptation notes (vs the CPU/GPU reference implementations of QSGD):
     so each grid step streams a contiguous HBM slab through VMEM once;
   * block = 1024 keeps the lane dimension a multiple of 128 (VPU lane width)
     and the per-row reduction (the block L2 norm) a single-lane-axis reduce;
-  * stochastic rounding consumes an explicit uniform tensor (generated with
-    jax.random outside) instead of on-chip RNG — keeps the kernel a pure
+  * stochastic rounding consumes an explicit uniform tensor (generated
+    outside — see `ops._cheap_uniform`) instead of on-chip RNG — keeps the kernel a pure
     function, bit-identical to ref.py, and validated under interpret=True.
 
 The fused quantize→pack / unpack→dequantize pair emits/consumes the packed
@@ -35,6 +35,14 @@ from jax.experimental import pallas as pl
 from repro.kernels.ref import qsgd_code_bits
 
 ROWS_PER_TILE = 8  # 8 x 1024 f32 = 32 KiB per input tile; 4 tensors in flight << 16 MiB VMEM
+
+
+def _auto_rows(n_blocks: int) -> int:
+    """Tile height when the caller doesn't pin one: 8 rows (32 KiB tiles)
+    keeps the tail-pad waste small for the many-small-leaves case; from 256
+    blocks (1 MiB of input) up, 64-row tiles amortize the per-grid-step
+    dispatch 8x while 4 tensors in flight still sit far under VMEM."""
+    return 64 if n_blocks >= 256 else ROWS_PER_TILE
 
 
 def _pad_rows(arrs, n_blocks: int, rows_per_tile: int):
@@ -75,10 +83,11 @@ def _interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("s", "rows_per_tile"))
 def qsgd_quantize_blocks(
-    v: jnp.ndarray, u: jnp.ndarray, *, s: int, rows_per_tile: int = ROWS_PER_TILE
+    v: jnp.ndarray, u: jnp.ndarray, *, s: int, rows_per_tile: int | None = None
 ):
     """v, u: (n_blocks, block) f32 -> (q int8, norms f32). Any n_blocks."""
     n_blocks, block = v.shape
+    rows_per_tile = rows_per_tile or _auto_rows(n_blocks)
     (v, u), padded = _pad_rows([v, u], n_blocks, rows_per_tile)
     grid = (padded // rows_per_tile,)
     s_arr = jnp.full((1,), float(s), jnp.float32)
@@ -105,9 +114,10 @@ def qsgd_quantize_blocks(
 
 @functools.partial(jax.jit, static_argnames=("s", "rows_per_tile"))
 def qsgd_dequantize_blocks(
-    q: jnp.ndarray, norms: jnp.ndarray, *, s: int, rows_per_tile: int = ROWS_PER_TILE
+    q: jnp.ndarray, norms: jnp.ndarray, *, s: int, rows_per_tile: int | None = None
 ):
     n_blocks, block = q.shape
+    rows_per_tile = rows_per_tile or _auto_rows(n_blocks)
     (q, norms), padded = _pad_rows([q, norms], n_blocks, rows_per_tile)
     grid = (padded // rows_per_tile,)
     s_arr = jnp.full((1,), float(s), jnp.float32)
@@ -182,11 +192,12 @@ def _unpack_dequantize_kernel(payload_ref, n_ref, v_ref, *, s: int, bits: int):
 
 @functools.partial(jax.jit, static_argnames=("s", "rows_per_tile"))
 def qsgd_quantize_pack_blocks(
-    v: jnp.ndarray, u: jnp.ndarray, *, s: int, rows_per_tile: int = ROWS_PER_TILE
+    v: jnp.ndarray, u: jnp.ndarray, *, s: int, rows_per_tile: int | None = None
 ):
     """Fused quantize + bit-pack: v, u (n_blocks, block) f32 ->
     (payload uint32 (n_blocks, bits*block/32), norms f32 (n_blocks,))."""
     n_blocks, block = v.shape
+    rows_per_tile = rows_per_tile or _auto_rows(n_blocks)
     assert block % 32 == 0, block
     bits = qsgd_code_bits(s)
     words = bits * (block // 32)
@@ -219,11 +230,12 @@ def qsgd_unpack_dequantize_blocks(
     *,
     s: int,
     block: int,
-    rows_per_tile: int = ROWS_PER_TILE,
+    rows_per_tile: int | None = None,
 ):
     """Fused unpack + dequantize: (n_blocks, bits*block/32) uint32 payload +
     (n_blocks,) f32 norms -> (n_blocks, block) f32."""
     n_blocks = payload.shape[0]
+    rows_per_tile = rows_per_tile or _auto_rows(n_blocks)
     bits = qsgd_code_bits(s)
     assert payload.shape[1] == bits * (block // 32), (payload.shape, bits, block)
     (payload, norms), padded = _pad_rows([payload, norms], n_blocks, rows_per_tile)

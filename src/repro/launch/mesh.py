@@ -6,7 +6,11 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import.
 """
 from __future__ import annotations
 
+import logging
+
 import jax
+
+_log = logging.getLogger(__name__)
 
 
 def _make_mesh(shape, axes, devices) -> jax.sharding.Mesh:
@@ -35,13 +39,54 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def make_debug_mesh(data: int = 1, model: int = 1, pod: int | None = None):
-    """Tiny mesh over however many real devices exist (tests)."""
+    """Tiny mesh over however many real devices exist (tests).
+
+    Falls back to a single-device mesh (with a logged warning, not an
+    error) when the requested shape exceeds `jax.device_count()`, so
+    examples written against a forced-device count still run on 1-device
+    CPU."""
     shape = (pod, data, model) if pod else (data, model)
     axes = ("pod", "data", "model") if pod else ("data", "model")
     n = 1
     for s in shape:
         n *= s
+    if n > jax.device_count():
+        _log.warning(
+            "debug mesh %s needs %d devices but only %d exist — "
+            "falling back to a single-device mesh",
+            dict(zip(axes, shape)), n, jax.device_count(),
+        )
+        shape = tuple(1 for _ in shape)
+        n = 1
     return _make_mesh(shape, axes, jax.devices()[:n])
+
+
+def make_federation_mesh(clusters: int = 1, clients: int | None = None):
+    """The population mesh for device-sharded FL runs: axes
+    ``("clusters", "clients")`` (see `repro.sharding.fed`).
+
+    `clients=None` spreads all remaining devices across the client axis.
+    Publish it to the drivers either explicitly (``config.mesh``) or
+    ambiently via `sharding.ctx.model_mesh`::
+
+        with model_mesh(make_federation_mesh(clusters=2, clients=4)):
+            run_fed_chs(task, config)   # sharded; mesh=None configs adopt it
+
+    Falls back to a single-device mesh with a logged warning when the
+    requested shape exceeds `jax.device_count()` — a mesh=None-equivalent
+    run, never an error."""
+    if clients is None:
+        clients = max(jax.device_count() // clusters, 1)
+    n = clusters * clients
+    if n > jax.device_count():
+        _log.warning(
+            "federation mesh (clusters=%d, clients=%d) needs %d devices but "
+            "only %d exist — falling back to a single-device mesh",
+            clusters, clients, n, jax.device_count(),
+        )
+        clusters = clients = n = 1
+    return _make_mesh((clusters, clients), ("clusters", "clients"),
+                      jax.devices()[:n])
 
 
 POD_CHIPS = 256

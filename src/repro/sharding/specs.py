@@ -161,3 +161,68 @@ def named_shardings(mesh: Mesh, pspecs: PyTree) -> PyTree:
         lambda s: NamedSharding(mesh, s), pspecs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# --------------------------------------------------------------------------
+# federation mesh: the whole-run engine's stacked pytrees
+# --------------------------------------------------------------------------
+
+FED_AXES = ("clusters", "clients")
+
+
+def fed_engine_pspecs(kind: str) -> dict:
+    """PartitionSpecs for the engine scan-body pytrees on a federation mesh.
+
+    One entry per scan-body kind (`engine.scan_*_body` / their
+    `sharding.fed` mesh twins), keyed by the body's (carry, xs, ys) trees:
+
+      * ``"grad"`` — `scan_grad_body` (WRWGD walks, Fed-CHS Eq.-(5) mode).
+        carry = params, replicated; x["batch"] (K, n, B, ...) shards the
+        flat client axis over BOTH mesh axes.
+      * ``"delta"`` — `scan_delta_body` (FedAvg).  carry = (params,
+        opt_state (n, ...)): params replicated, opt rows sharded with the
+        clients; x["batch"] (J, n, E, B, ...).
+      * ``"cluster_delta"`` — `scan_cluster_delta_body` (Fed-CHS delta
+        mode).  Only ONE cluster trains per round, so the opt stack's
+        cluster axis (M, n, ...) stays unsharded and its client axis shards
+        over the whole mesh.
+      * ``"multi"`` — `scan_multi_body` (3-tier HFL): batch
+        (J, M, n_max, E, B, ...) and opt (M, n_max, ...) shard clusters
+        over "clusters" and in-cluster clients over "clients".
+
+    Schedule rows (gammas/mask/es_weights) and PRNG subkey chains are
+    replicated — the sharded bodies slice their local window so the
+    full-width aggregation einsums see the unsharded operand layout.
+    Specs cover the leading stacked dims; trailing feature dims are
+    replicated (trailing-None elision).  The staged-xs trees add a leading
+    chunk axis on top of the batch specs (`fed._xs_shardings`).
+    """
+    flat = P(FED_AXES)
+    if kind == "grad":
+        return {
+            "carry": P(),
+            "xs": {"batch": P(None, FED_AXES), "gammas": P()},
+            "ys": P(),
+        }
+    if kind == "delta":
+        return {
+            "carry": (P(), flat),
+            "xs": {"batch": P(None, FED_AXES), "gammas": P(), "mask": P(),
+                   "subs": P()},
+            "ys": P(),
+        }
+    if kind == "cluster_delta":
+        return {
+            "carry": (P(), P(None, FED_AXES)),
+            "xs": {"m": P(), "batch": P(None, FED_AXES), "gammas": P(),
+                   "mask": P(), "subs": P()},
+            "ys": P(),
+        }
+    if kind == "multi":
+        return {
+            "carry": (P(), P("clusters", "clients")),
+            "xs": {"batch": P(None, "clusters", "clients"), "gammas": P(),
+                   "mask": P(), "es_weights": P(), "subs": P(), "es_subs": P()},
+            "ys": P(),
+        }
+    raise ValueError(f"unknown engine scan-body kind: {kind!r}")

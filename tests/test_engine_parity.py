@@ -505,6 +505,25 @@ def test_scan_parity_fed_chs_samplers(small_task):
                                            availability_scheduler=True))
 
 
+def test_scan_parity_fed_chs_dynamic_topologies(small_task):
+    """Dynamic networks (IoV rewiring, LEO visibility windows) were the last
+    scan_rounds=False fallback.  The graph sequence is a seed-deterministic
+    function of the round index, so `Scheduler.precompute(dynamic=...)`
+    replays the whole visit order host-side — swapping in `dynamic(t)`
+    exactly where the looped driver calls `set_topology` — and the scanned
+    executor runs dynamic cells like any static topology."""
+    for dyn in ("iov", "leo"):
+        _assert_scan_matches_loop(run_fed_chs, small_task,
+                                  FedCHSConfig(rounds=6, local_steps=6,
+                                               eval_every=2, seed=1,
+                                               dynamic=dyn))
+        _assert_scan_matches_loop(run_fed_chs, small_task,
+                                  FedCHSConfig(rounds=4, local_steps=4,
+                                               local_epochs=2, eval_every=2,
+                                               seed=0, dynamic=dyn,
+                                               qsgd_levels=16))
+
+
 def test_scan_parity_fedavg(small_task):
     _assert_scan_matches_loop(run_fedavg, small_task,
                               FedAvgConfig(rounds=3, local_steps=5, qsgd_levels=8,
