@@ -1,0 +1,78 @@
+"""The async drivers' two jitted kernels: local updates and weighted folds.
+
+The synchronous engine fuses dispatch -> local train -> fold into one
+barrier-round graph; the async event loop has to split them, because the
+updates a fold consumes were computed at *different* times on *different*
+model versions.  Both halves reuse the engine's building blocks verbatim —
+`oracles.local_opt_steps` for the client step and `engine.compress_uplinks`
+for per-sender channel keys — so a full-quorum, zero-staleness async fold
+reproduces the synchronous `cluster_round` arithmetic (the anchor pinned in
+tests/test_async_fl.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.channels import Channel
+from repro.core.engine import compress_uplinks, dummy_subs
+from repro.core.oracles import local_opt_steps
+from repro.models.fed import FedModel
+from repro.optim.local import LocalOpt
+from repro.utils import tree_add, tree_sub
+
+PyTree = Any
+
+
+@functools.cache
+def client_updates_fn(model: FedModel, channel: Channel, opt: LocalOpt):
+    """jit: (params, opt_state (n,...), batch (n,E,B,...), lrs (E,), sub) ->
+    (deltas (n,...), new_opt (n,...), losses (n,)).
+
+    Each of the n clients runs E local optimizer steps from the SAME
+    broadcast params (exactly `engine._masked_round_body`'s interaction with
+    J=1); the uploaded deltas traverse the channel with per-sender
+    `fold_in(sub, slot)` keys (`compress_uplinks`), so compression is
+    identical whether the cohort later folds together or one by one."""
+    multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
+
+    def fn(params, opt_state, batch, lrs, sub):
+        with jax.named_scope("local_train"):
+            new_params, new_opt, losses = multi_local(params, opt_state, batch, lrs)
+        deltas = jax.vmap(lambda np_: tree_sub(np_, params))(new_params)
+        with jax.named_scope("uplink"):
+            deltas = compress_uplinks(channel, deltas, sub)
+        return deltas, new_opt, losses
+
+    return jax.jit(fn)
+
+
+@functools.cache
+def fold_fn(model: FedModel):
+    """jit: (params, deltas (j, ...), weights (j,)) -> params + sum_i w_i d_i.
+
+    The einsum is the engine's aggregation expression; the async drivers
+    supply renormalized staleness-discounted weights instead of the sync
+    gammas."""
+    del model  # cache key only — folds depend on the params structure alone
+
+    def fn(params, deltas, weights):
+        agg = jax.tree.map(
+            lambda d: jnp.einsum("n,n...->...", weights, d), deltas
+        )
+        return tree_add(params, agg)
+
+    return jax.jit(fn)
+
+
+def stack_updates(deltas: list[PyTree]) -> PyTree:
+    """Stack per-update delta pytrees along a new leading fold axis."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *deltas)
+
+
+def no_subs(count: int = 1):
+    """Placeholder per-dispatch key for non-stochastic channels."""
+    return dummy_subs(count)[0] if count == 1 else dummy_subs(count)

@@ -1,0 +1,407 @@
+"""Event-driven Fed-CHS: the ES->ES chain fires on quorum/deadline.
+
+The synchronous driver advances one barrier round per ES visit; here the
+netsim timeline *is* the control flow.  Activation a of the chain:
+
+  1. The model lands at ES m(a) at simulated time t_a (the visit order is
+     the paper's 2-step rule — time-free, so it is precomputed exactly as
+     the sync scanned driver does).
+  2. The ES broadcasts to the cluster members the availability trace says
+     are up; each dispatched client's broadcast -> K-local-steps -> upload
+     chain gets a deterministic arrival time from the `NetworkModel`
+     (stragglers, heterogeneity, shared ingress all apply).
+  3. The ES fires at `fire_time` — the quorum_frac-th arrival, capped by
+     `deadline_s`.  On-time updates fold with staleness tau=0; late ones
+     land in the ES's bounded `StalenessBuffer` and fold (HiFlash-style
+     discounted by ``gamma * (1+tau)^(-alpha)``, tau in model versions)
+     when the chain next visits this ES — or are evicted once they exceed
+     `max_staleness`.
+  4. One ES->ES hop to m(a+1); its transfer time advances the clock.
+
+With AlwaysOn clients, quorum 1.0, no deadline and alpha arbitrary, every
+fold is full-cohort at tau=0 and the arithmetic reproduces the synchronous
+`run_fed_chs(local_epochs=K)` trajectory (tests/test_async_fl.py).
+
+Continuous checkpointing: `checkpoint=` saves the COMPLETE run state at
+every `checkpoint_every`-th activation boundary — params, per-cluster opt
+stacks, buffered update deltas, the PRNG chain position, per-client data
+draw counts, the simulated clock, ledger state and eval logs — via
+`checkpoint.save_run_state`.  `resume=True` restores all of it, so a run
+killed between two activations continues *bit-identical* to one that was
+never interrupted (tests/test_resume_parity.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.async_fl.arrivals import dispatch_cohort, fire_time
+from repro.async_fl.buffer import StalenessBuffer, Update, staleness_weight
+from repro.async_fl.compute import client_updates_fn, fold_fn, no_subs, stack_updates
+from repro.checkpoint.io import load_run_state, run_state_exists, save_run_state
+from repro.comm.channels import Channel, DenseChannel, channel_wire_bits, make_channel
+from repro.core.engine import split_chain
+from repro.core.ledger import CommLedger
+from repro.core.scheduler import FedCHSScheduler
+from repro.core.simulation import FLTask, RunRecorder, RunResult
+from repro.core.topology import make_topology
+from repro.models.fed import as_fed_model
+from repro.netsim.links import NetworkModel, edge_cloud_network
+from repro.optim.local import LocalOpt, PlainSGD
+from repro.optim.schedules import Schedule, paper_sqrt_schedule
+from repro.part import AlwaysOn, AvailabilityTrace
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class AsyncFedCHSConfig:
+    rounds: int = 60                       # activations (ES visits)
+    local_steps: int = 10                  # K local steps per dispatched update
+    topology: str = "random_sparse"
+    topology_seed: int = 0
+    initial_cluster: int | None = None
+    network: NetworkModel | None = None    # physical layer; default
+                                           # edge_cloud_network()
+    trace: AvailabilityTrace | None = None # per-(client, version) churn;
+                                           # default AlwaysOn
+    quorum_frac: float = 1.0               # fire at the ceil(frac*cohort)-th
+                                           # arrival ...
+    deadline_s: float | None = None        # ... capped by this wait (seconds)
+    staleness_alpha: float = 0.5           # discount exponent (1+tau)^(-alpha)
+    max_staleness: int | None = 8          # drop updates older than this many
+                                           # model versions (None: unbounded)
+    renormalize: bool = False              # True: fold weights sum to 1
+                                           # (full-mass partial folds); False
+                                           # keeps raw discounted gammas — the
+                                           # sync-anchor-exact choice
+    eval_every: int = 10
+    bits_per_param: int = 32
+    qsgd_levels: int | None = None
+    channel: Channel | None = None
+    local_opt: LocalOpt | None = None
+    track_events: bool = True
+    seed: int = 0
+    schedule: Schedule | None = None       # local step k -> eta_k (the Eq.(5)
+                                           # within-visit decay, as sync)
+    checkpoint: str | None = None          # path prefix for continuous state
+    checkpoint_every: int = 1              # activations between saves
+    resume: bool = False                   # load the checkpoint if present
+    on_checkpoint: Any = None              # service hook: called with the next
+                                           # activation index after every save
+                                           # (progress reporting; the serve
+                                           # --federation kill switch)
+
+
+@dataclasses.dataclass
+class _AsyncState:
+    """Everything the event loop carries across activations."""
+
+    activation: int
+    sim_time: float
+    params: PyTree
+    opt_states: dict            # cluster -> stacked (n_m, ...) opt pytree
+    buffers: dict               # cluster -> StalenessBuffer
+    key: jax.Array
+    losses: Any                 # last fold's (j,) losses, or None
+    ledger: CommLedger
+    recorder: RunRecorder
+    sim_eval_times: list
+    draw_counts: list = dataclasses.field(default_factory=list)
+
+
+def _resolve(config: AsyncFedCHSConfig):
+    network = config.network or edge_cloud_network()
+    trace = config.trace or AlwaysOn()
+    channel = (
+        config.channel
+        if config.channel is not None
+        else make_channel(config.qsgd_levels, config.bits_per_param)
+    )
+    opt = config.local_opt or PlainSGD()
+    return network, trace, channel, opt
+
+
+def _visit_order(task: FLTask, config: AsyncFedCHSConfig) -> np.ndarray:
+    topo = make_topology(config.topology, task.num_clusters,
+                         seed=config.topology_seed)
+    rng = np.random.default_rng(config.seed)
+    m0 = (
+        int(rng.integers(task.num_clusters))
+        if config.initial_cluster is None
+        else config.initial_cluster
+    )
+    return FedCHSScheduler(topo, task.cluster_sizes, initial=m0).precompute(
+        config.rounds + 1
+    )
+
+
+# --------------------------------------------------------------------------
+# checkpoint plumbing
+# --------------------------------------------------------------------------
+
+
+def _state_arrays(state: _AsyncState) -> tuple[PyTree, dict]:
+    pending_arrays: dict[str, PyTree] = {}
+    pending_meta = []
+    i = 0
+    for m in sorted(state.buffers):
+        for u in state.buffers[m].updates:
+            k = f"u{i}"
+            pending_arrays[k] = u.delta
+            pending_meta.append({
+                "key": k, "client": u.client, "cluster": u.cluster,
+                "version": u.version, "arrival": u.arrival, "gamma": u.gamma,
+            })
+            i += 1
+    arrays = {
+        "params": state.params,
+        "key": state.key,
+        "opt": {str(m): s for m, s in state.opt_states.items()},
+        "pending": pending_arrays,
+    }
+    meta = {
+        "algo": "async_fed_chs",
+        "activation": state.activation,
+        "sim_time": state.sim_time,
+        "pending": pending_meta,
+        "dropped": {str(m): b.dropped for m, b in state.buffers.items()},
+        "opt_clusters": sorted(state.opt_states),
+        "ledger": state.ledger.state_dict(),
+        "recorder": {
+            "rounds": state.recorder.rounds_log,
+            "acc": state.recorder.acc_log,
+            "loss": state.recorder.loss_log,
+            "sim": state.sim_eval_times,
+        },
+        "losses_shape": None if state.losses is None
+        else list(np.shape(state.losses)),
+    }
+    if state.losses is not None:
+        arrays["losses"] = state.losses
+    return arrays, meta
+
+
+def save_async_state(path: str, state: _AsyncState) -> None:
+    arrays, meta = _state_arrays(state)
+    meta["draw_counts"] = list(state.draw_counts)
+    save_run_state(path, arrays, meta)
+
+
+def load_async_state(path: str, task: FLTask, config: AsyncFedCHSConfig,
+                      engine_like) -> _AsyncState:
+    """Rebuild the full event-loop state from a `save_run_state` checkpoint.
+
+    The meta sidecar is read first: it names the pending-update keys and the
+    visited clusters, which is what lets us construct the `like` structure
+    `load_pytree` verifies the arrays against."""
+    params0, init_opt = engine_like
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    like = {
+        "params": params0,
+        "key": jax.random.PRNGKey(0),
+        "opt": {
+            str(m): init_opt(params0, len(task.cluster_members[int(m)]))
+            for m in meta["opt_clusters"]
+        },
+        "pending": {p["key"]: params0 for p in meta["pending"]},
+    }
+    if meta["losses_shape"] is not None:
+        like["losses"] = np.zeros(meta["losses_shape"], np.float32)
+    arrays, meta = load_run_state(path, like)
+
+    buffers: dict[int, StalenessBuffer] = {}
+    for p in meta["pending"]:
+        m = int(p["cluster"])
+        buffers.setdefault(
+            m, StalenessBuffer(max_staleness=config.max_staleness)
+        ).add(Update(
+            client=int(p["client"]), cluster=m, version=int(p["version"]),
+            arrival=float(p["arrival"]), gamma=float(p["gamma"]),
+            delta=arrays["pending"][p["key"]],
+        ))
+    for m_s, n in meta["dropped"].items():
+        buffers.setdefault(
+            int(m_s), StalenessBuffer(max_staleness=config.max_staleness)
+        ).dropped = int(n)
+
+    ledger = CommLedger(track_events=config.track_events)
+    ledger.load_state(meta["ledger"])
+    recorder = RunRecorder(task, config.rounds, config.eval_every)
+    recorder.rounds_log = list(meta["recorder"]["rounds"])
+    recorder.acc_log = list(meta["recorder"]["acc"])
+    recorder.loss_log = list(meta["recorder"]["loss"])
+
+    task.source.fast_forward(meta["draw_counts"])
+
+    state = _AsyncState(
+        activation=int(meta["activation"]),
+        sim_time=float(meta["sim_time"]),
+        params=arrays["params"],
+        opt_states={int(m): s for m, s in arrays["opt"].items()},
+        buffers=buffers,
+        key=arrays["key"],
+        losses=arrays.get("losses"),
+        ledger=ledger,
+        recorder=recorder,
+        sim_eval_times=list(meta["recorder"]["sim"]),
+    )
+    return state
+
+
+# --------------------------------------------------------------------------
+# the event loop
+# --------------------------------------------------------------------------
+
+
+def run_async_fed_chs(task: FLTask, config: AsyncFedCHSConfig) -> RunResult:
+    network, trace, channel, opt = _resolve(config)
+    model = as_fed_model(task.model)
+    K = config.local_steps
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    lrs = np.asarray([sched_fn(k) for k in range(K)], dtype=np.float32)
+
+    ms = _visit_order(task, config)
+    d = task.num_params()
+    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
+    updates = client_updates_fn(model, channel, opt)
+    fold = fold_fn(model)
+
+    def init_opt(params, n):
+        state = opt.init(params)
+        return jax.tree.map(
+            lambda leaf: jax.numpy.broadcast_to(leaf[None], (n,) + leaf.shape),
+            state,
+        )
+
+    task.reset_loaders(config.seed)
+    if config.resume and config.checkpoint and run_state_exists(config.checkpoint):
+        state = load_async_state(
+            config.checkpoint, task, config, (task.init_params(), init_opt)
+        )
+    else:
+        state = _AsyncState(
+            activation=0,
+            sim_time=0.0,
+            params=task.init_params(),
+            opt_states={},
+            buffers={},
+            key=jax.random.PRNGKey(config.seed + 1),
+            losses=None,
+            ledger=CommLedger(track_events=config.track_events),
+            recorder=RunRecorder(task, config.rounds, config.eval_every),
+            sim_eval_times=[],
+        )
+
+    ledger, recorder = state.ledger, state.recorder
+    for a in range(state.activation, config.rounds):
+        m = int(ms[a])
+        members = task.cluster_members[m]
+        es = f"es:{m}"
+        gammas = task.cluster_weights(m)  # float32, member order
+        buf = state.buffers.setdefault(
+            m, StalenessBuffer(max_staleness=config.max_staleness)
+        )
+
+        # stale evictions: the bits were spent; meter them at their terminal
+        # staleness so the histogram records what bounded staleness discarded
+        for u in buf.evict_stale(a):
+            ledger.record("client_to_es", up_bits, round=a, phase=1,
+                          sender=f"client:{u.client}", receiver=f"es:{u.cluster}",
+                          staleness=a - u.version)
+
+        # dispatch this activation's cohort (availability probed at version a)
+        dispatches = dispatch_cohort(
+            network, trace, server=es, cluster=m, members=list(members),
+            version=a, start=state.sim_time, down_bits=down_bits,
+            up_bits=up_bits, num_params=d, batch_size=task.batch_size,
+            local_steps=K,
+        )
+        cohort = [dsp.client for dsp in dispatches]
+        cohort_updates: list[Update] = []
+        if cohort:
+            slots = [members.index(i) for i in cohort]
+            # stage K draws per dispatched client, member order — clients
+            # that are asleep consume nothing (their stream doesn't advance)
+            per_client = [task.sample_client_batches(i, K) for i in cohort]
+            batch = jax.tree.map(lambda *ls: jax.numpy.stack(ls), *per_client)
+            if m not in state.opt_states:
+                state.opt_states[m] = init_opt(state.params, len(members))
+            opt_rows = jax.tree.map(
+                lambda l: l[np.asarray(slots)], state.opt_states[m]
+            )
+            sub = no_subs()
+            if channel.stochastic:
+                state.key, subs = split_chain(state.key, 1)
+                sub = subs[0]
+            deltas, new_opt, losses = updates(
+                state.params, opt_rows, batch, jax.numpy.asarray(lrs), sub
+            )
+            state.opt_states[m] = jax.tree.map(
+                lambda l, ns: l.at[np.asarray(slots)].set(ns),
+                state.opt_states[m], new_opt,
+            )
+            state.losses = losses
+            for j, dsp in enumerate(dispatches):
+                cohort_updates.append(Update(
+                    client=dsp.client, cluster=m, version=a,
+                    arrival=dsp.arrival, gamma=float(gammas[slots[j]]),
+                    delta=jax.tree.map(lambda l, j=j: l[j], deltas),
+                ))
+            for dsp in dispatches:
+                ledger.record("es_to_client", down_bits, round=a, phase=0,
+                              sender=es, receiver=f"client:{dsp.client}")
+
+        t_fire = fire_time(dispatches, quorum_frac=config.quorum_frac,
+                           deadline_s=config.deadline_s, start=state.sim_time)
+
+        folded = buf.take_arrived(t_fire)
+        for u in cohort_updates:
+            (folded if u.arrival <= t_fire else buf.updates).append(u)
+        folded.sort(key=lambda u: (u.version, u.arrival, u.client))
+
+        if folded:
+            w = np.asarray(
+                [staleness_weight(u.gamma, a - u.version, config.staleness_alpha)
+                 for u in folded],
+                np.float32,
+            )
+            if config.renormalize:
+                w = w / w.sum()
+            state.params = fold(
+                state.params, stack_updates([u.delta for u in folded]),
+                jax.numpy.asarray(w),
+            )
+            for u in folded:
+                ledger.record("client_to_es", up_bits, round=a, phase=1,
+                              sender=f"client:{u.client}", receiver=es,
+                              staleness=a - u.version)
+
+        # ES -> ES hop: the chain moves on at the fire time
+        nxt = int(ms[a + 1])
+        hop_s = network.transfer_time("es_to_es", es, f"es:{nxt}", down_bits,
+                                      round_idx=a, phase=2)
+        ledger.record("es_to_es", down_bits, round=a, phase=2,
+                      sender=es, receiver=f"es:{nxt}")
+        ledger.snapshot(a)
+        state.sim_time = t_fire + hop_s
+
+        if recorder.should_eval(a):
+            state.sim_eval_times.append(t_fire)
+        recorder.record(a, state.params, state.losses)
+
+        state.activation = a + 1
+        if config.checkpoint and (a + 1) % config.checkpoint_every == 0:
+            state.draw_counts = list(task.source.draw_counts)
+            save_async_state(config.checkpoint, state)
+            if config.on_checkpoint is not None:
+                config.on_checkpoint(a + 1)
+
+    res = recorder.result("async_fed_chs", ledger, state.params)
+    return dataclasses.replace(res, sim_times=list(state.sim_eval_times))

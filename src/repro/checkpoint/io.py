@@ -2,6 +2,22 @@
 
 npz-based (no external deps): leaves are stored under their tree paths, so a
 checkpoint is stable across process restarts and readable with plain numpy.
+
+Two layers:
+
+  * `save_pytree` / `load_pytree` — one pytree of arrays per npz file, with a
+    `__pytree_meta__` record (leaf order + treedef string) that `load_pytree`
+    verifies so a checkpoint written for one structure can never be silently
+    mis-mapped onto another.
+  * `save_run_state` / `load_run_state` — a whole resumable run: an arbitrary
+    array pytree (params, opt-state stacks, staleness buffers, PRNG keys)
+    plus a JSON meta sidecar (cursors, draw counts, ledger state, recorder
+    logs).  Writes are atomic (tmp + rename) so a process killed mid-save
+    leaves either the previous complete checkpoint or the new one, never a
+    torn file — the property the kill-and-resume parity tests lean on.
+
+The legacy Fed-CHS helpers `save_fl_state` / `load_fl_state` remain as thin
+wrappers for round-granular scheduler state.
 """
 from __future__ import annotations
 
@@ -28,6 +44,10 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+def _atomic_replace(tmp: str, dst: str) -> None:
+    os.replace(tmp, dst)
+
+
 def save_pytree(path: str, tree: PyTree) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -44,20 +64,107 @@ def save_pytree(path: str, tree: PyTree) -> None:
     arrays[_META_KEY] = np.frombuffer(
         json.dumps({"order": order, "treedef": str(treedef)}).encode(), dtype=np.uint8
     )
-    np.savez(path, **arrays)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    _atomic_replace(tmp, path)
+
+
+def _read_meta(data, path: str) -> dict | None:
+    if _META_KEY not in data:
+        return None
+    try:
+        return json.loads(bytes(data[_META_KEY]).decode())
+    except (ValueError, UnicodeDecodeError) as e:
+        raise ValueError(f"{path}: corrupt {_META_KEY} record: {e}") from e
 
 
 def load_pytree(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of `like` (names must match)."""
+    """Restore into the structure of `like`.
+
+    The stored `__pytree_meta__` (leaf order + treedef) is verified against
+    `like` — a structure mismatch raises instead of silently mis-mapping
+    leaves; a missing leaf or a shape mismatch names the leaf and the file.
+    """
     with np.load(path) as data:
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        order = [_path_str(kp) for kp, _ in flat]
+        meta = _read_meta(data, path)
+        if meta is not None:
+            if meta.get("order") != order:
+                stored, want = meta.get("order", []), order
+                missing = [n for n in want if n not in stored]
+                extra = [n for n in stored if n not in want]
+                raise ValueError(
+                    f"{path}: checkpoint leaf order does not match the requested "
+                    f"structure (stored {len(stored)} leaves, want {len(want)}; "
+                    f"missing={missing[:5]}, unexpected={extra[:5]})"
+                )
+            if meta.get("treedef") != str(treedef):
+                raise ValueError(
+                    f"{path}: checkpoint treedef mismatch — stored "
+                    f"{meta.get('treedef')!r}, want {str(treedef)!r}"
+                )
         leaves = []
-        for keypath, leaf in flat:
-            name = _path_str(keypath)
+        for (keypath, leaf), name in zip(flat, order):
+            if name not in data:
+                raise KeyError(
+                    f"{path}: checkpoint has no leaf {name!r} "
+                    f"(available: {sorted(k for k in data.files if k != _META_KEY)[:8]}...)"
+                )
             arr = data[name]
-            assert arr.shape == tuple(leaf.shape), f"{name}: {arr.shape} != {leaf.shape}"
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(
+                    f"{path}: leaf {name!r} has shape {arr.shape}, "
+                    f"want {tuple(leaf.shape)}"
+                )
             leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
         return jax.tree.unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------
+# generalized resumable run state: arrays npz + JSON meta sidecar
+# --------------------------------------------------------------------------
+
+
+def save_run_state(path: str, arrays: PyTree, meta: dict) -> None:
+    """Persist one resumable run checkpoint.
+
+    `arrays` is any pytree of arrays (params, opt-state stacks, buffer
+    contents, raw PRNG key data); `meta` is a JSON-serialisable dict
+    (round/event cursors, simulated clock, per-client draw counts, ledger
+    state, recorder logs).  Both writes are atomic; meta is written LAST so
+    its presence certifies a complete checkpoint."""
+    save_pytree(path + ".arrays.npz", arrays)
+    tmp = path + ".meta.json.tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+    _atomic_replace(tmp, path + ".meta.json")
+
+
+def load_run_state(path: str, like_arrays: PyTree) -> tuple[PyTree, dict]:
+    """Load a `save_run_state` checkpoint; returns ``(arrays, meta)``."""
+    meta_path = path + ".meta.json"
+    if not os.path.exists(meta_path):
+        raise FileNotFoundError(
+            f"{meta_path}: no complete checkpoint at {path!r} "
+            "(meta sidecar missing — run was never checkpointed or the save "
+            "was interrupted before the arrays finished)"
+        )
+    with open(meta_path) as f:
+        meta = json.load(f)
+    arrays = load_pytree(path + ".arrays.npz", like_arrays)
+    return arrays, meta
+
+
+def run_state_exists(path: str) -> bool:
+    return os.path.exists(path + ".meta.json")
+
+
+# --------------------------------------------------------------------------
+# legacy Fed-CHS round-state helpers
+# --------------------------------------------------------------------------
 
 
 def save_fl_state(

@@ -59,7 +59,11 @@ class WRWGDConfig:
     eval_every: int = 10
     bits_per_param: int = 32
     seed: int = 0
-    schedule: Schedule | None = None
+    schedule: Schedule | None = None  # walk round t -> eta_t, constant over the
+                                      # K local steps of that visit; default
+                                      # eta_t = 1/(K sqrt(t+1)) (B.1 decay
+                                      # indexed by the GLOBAL round — see
+                                      # run_wrwgd)
     obs: Any = None                    # repro.obs.RunTelemetry; None = the
                                        # byte-for-byte untapped fast path
     mesh: Any = None                   # jax Mesh ("clusters", "clients");
@@ -99,13 +103,28 @@ def _precompute_walk(task: FLTask, config: WRWGDConfig):
     return np.asarray(visits), np.asarray(trains), hops
 
 
+def _walk_round_lrs(config: WRWGDConfig) -> np.ndarray:
+    """(R, K) step sizes: row t is eta_t repeated over the K local steps.
+
+    The random walk revisits clients forever, so the decaying schedule must
+    be indexed by the GLOBAL walk round t — restarting it at eta_0 on every
+    visit (the old behaviour) keeps the step size permanently large and the
+    single-client updates never anneal: the model rattles between client
+    optima instead of converging (final_acc ~0.67 on the tier-1 task vs
+    ~0.93 with per-round decay).  Within one visit the K local steps share
+    eta_t, matching the per-iteration decay of Ayache & El Rouayheb's
+    random-walk SGD where one walk step IS one SGD iteration."""
+    K = config.local_steps
+    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
+    etas = np.asarray([sched_fn(t) for t in range(config.rounds)], np.float32)
+    return np.repeat(etas[:, None], K, axis=1)
+
+
 def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
     if config.scan_rounds:
         return _run_wrwgd_scanned(task, config)
     task.reset_loaders(config.seed)
-    K = config.local_steps
-    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
-    lrs = jnp.asarray([sched_fn(k) for k in range(K)], dtype=jnp.float32)
+    lrs_r = jnp.asarray(_walk_round_lrs(config))
 
     params = task.init_params()
     d = task.num_params()
@@ -126,10 +145,11 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
     for t in range(config.rounds):
         if trains_r[t]:
             batch = jax.tree.map(
-                lambda a: a[:, None], task.sample_client_batches(int(visits[t]), K)
+                lambda a: a[:, None],
+                task.sample_client_batches(int(visits[t]), config.local_steps),
             )  # (K, 1, B, ...): a walk step is a 1-client cluster running Eq.(5)
             with maybe_span(obs, "round"):
-                out = engine.grad_round(params, batch, gamma_one, lrs, taps=taps)
+                out = engine.grad_round(params, batch, gamma_one, lrs_r[t], taps=taps)
                 params, losses, tele = out if taps else (*out, None)
             if tele is not None:
                 obs.record_round(t, tele)
@@ -153,8 +173,7 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
     """Whole-run `ScanPlan` + deferred glue (see `fed_chs._fed_chs_scan_plan`)."""
     source.reset(config.seed)
     K = config.local_steps
-    sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
-    lrs = np.asarray([sched_fn(k) for k in range(K)], dtype=np.float32)
+    lrs_r = _walk_round_lrs(config)
 
     params = task.init_params()
     d = task.num_params()
@@ -177,13 +196,13 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
              for client, cs in occ.items()],
             lambda a: (C, K, 1) + a.shape[1:],
         )
-        return {"batch": batch, "gammas": ones[idxs]}
+        return {"batch": batch, "gammas": ones[idxs], "lrs": lrs_r[idxs]}
 
     taps = config.obs is not None and config.obs.taps
     plan = ScanPlan(
         body=scan_grad_body(engine.model, taps),
         carry=params,
-        consts={"lrs": jnp.asarray(lrs)},
+        consts={},
         stage=stage,
         trained=trains,
         rounds=R,

@@ -517,15 +517,18 @@ class RoundEngine:
 @functools.cache
 def scan_grad_body(model: FedModel, taps: bool = False):
     """Whole-run body, Eq. (5) grad mode.  carry: params.
-    x: {"batch": (K, n_max, B, ...), "gammas": (n_max,)} (padded client slots
-    carry zero gamma weight — exact-zero contributions).  consts: {"lrs": (K,)}.
-    Emits the per-step gamma-weighted losses (K,); with `taps` the ys are
-    (losses, tele) so the chunk runner can split the stacked telemetry off."""
+    x: {"batch": (K, n_max, B, ...), "gammas": (n_max,), "lrs": (K,)} (padded
+    client slots carry zero gamma weight — exact-zero contributions; the step
+    sizes are staged per round so decaying schedules can track the GLOBAL
+    round index, e.g. WRWGD's walk).  Emits the per-step gamma-weighted
+    losses (K,); with `taps` the ys are (losses, tele) so the chunk runner
+    can split the stacked telemetry off."""
     phase = grad_phase(model)
 
     def body(params, x, consts):
+        del consts
         with jax.named_scope("local_train"):
-            new_params, losses = phase(params, x["batch"], x["gammas"], consts["lrs"])
+            new_params, losses = phase(params, x["batch"], x["gammas"], x["lrs"])
         if taps:
             return new_params, (losses, grad_taps(params, new_params, x["gammas"]))
         return new_params, losses

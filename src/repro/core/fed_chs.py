@@ -118,6 +118,14 @@ class FedCHSConfig:
                                            # published, else runs the byte-for-byte
                                            # single-device path.  Looped runs
                                            # (scan_rounds=False) ignore it.
+    checkpoint: str | None = None          # path prefix: save the full run state
+                                           # every checkpoint_every rounds (forces
+                                           # the looped path — the scanned executor
+                                           # has no round boundary to save at)
+    checkpoint_every: int = 1
+    resume: bool = False                   # load the checkpoint if present; the
+                                           # resumed run is bit-identical to one
+                                           # that was never interrupted
 
 
 def _make_scheduler(task: FLTask, config: FedCHSConfig, topo, m0: int):
@@ -151,8 +159,76 @@ def _fed_chs_scannable(task: FLTask, config: FedCHSConfig) -> bool:
     return True
 
 
+def _save_sync_state(path: str, task, t_next: int, params, opt_states, key,
+                     losses, scheduler, ledger, recorder) -> None:
+    """Persist the looped driver's complete round-boundary state (atomic)."""
+    from repro.checkpoint.io import save_run_state
+
+    arrays = {
+        "params": params,
+        "key": key,
+        "losses": losses,
+        "opt": {str(m): s for m, s in opt_states.items()},
+    }
+    meta = {
+        "algo": "fed_chs",
+        "round": t_next,
+        "scheduler": {
+            "current": int(scheduler.state.current),
+            "visit_counts": [int(c) for c in scheduler.state.visit_counts],
+            "step": int(scheduler.state.step),
+        },
+        "opt_clusters": sorted(opt_states),
+        "losses_shape": list(np.shape(losses)),
+        "draw_counts": list(task.source.draw_counts),
+        "ledger": ledger.state_dict(),
+        "recorder": {
+            "rounds": recorder.rounds_log,
+            "acc": recorder.acc_log,
+            "loss": recorder.loss_log,
+        },
+    }
+    save_run_state(path, arrays, meta)
+
+
+def _load_sync_state(path: str, task, params0, engine, scheduler, ledger,
+                     recorder):
+    """Restore the looped driver's state; returns (t, params, opt_states,
+    key, losses).  Mutates scheduler/ledger/recorder/data-source in place."""
+    import json
+
+    from repro.checkpoint.io import load_run_state
+
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    like = {
+        "params": params0,
+        "key": jax.random.PRNGKey(0),
+        "losses": np.zeros(meta["losses_shape"], np.float32),
+        "opt": {
+            str(m): engine.init_opt_state(
+                params0, len(task.cluster_members[int(m)]))
+            for m in meta["opt_clusters"]
+        },
+    }
+    arrays, meta = load_run_state(path, like)
+    st = meta["scheduler"]
+    scheduler.state.current = int(st["current"])
+    scheduler.state.visit_counts = np.asarray(st["visit_counts"], np.int64)
+    scheduler.state.step = int(st["step"])
+    ledger.load_state(meta["ledger"])
+    recorder.rounds_log = list(meta["recorder"]["rounds"])
+    recorder.acc_log = list(meta["recorder"]["acc"])
+    recorder.loss_log = list(meta["recorder"]["loss"])
+    task.source.fast_forward(meta["draw_counts"])
+    opt_states = {int(m): s for m, s in arrays["opt"].items()}
+    return (int(meta["round"]), arrays["params"], opt_states, arrays["key"],
+            arrays["losses"])
+
+
 def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
-    if config.scan_rounds and _fed_chs_scannable(task, config):
+    if (config.scan_rounds and _fed_chs_scannable(task, config)
+            and not config.checkpoint):
         return _run_fed_chs_scanned(task, config)
     task.reset_loaders(config.seed)
     assert config.local_steps % config.local_epochs == 0, "K must divide by E"
@@ -211,7 +287,17 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
     recorder = RunRecorder(task, config.rounds, config.eval_every, obs=obs)
     m = scheduler.state.current
     losses = jnp.full((1,), jnp.nan)  # stays nan until a first trained round
-    for t in range(config.rounds):
+    start_round = 0
+    if config.resume and config.checkpoint:
+        from repro.checkpoint.io import run_state_exists
+
+        if run_state_exists(config.checkpoint):
+            (start_round, params, opt_states, key, losses) = _load_sync_state(
+                config.checkpoint, task, params, engine, scheduler, ledger,
+                recorder,
+            )
+            m = scheduler.state.current
+    for t in range(start_round, config.rounds):
         members = task.cluster_members[m]
         participating = (
             members if full_part else config.sampler.participants(t, members)
@@ -293,6 +379,10 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
                       sender=f"es:{prev_m}", receiver=f"es:{m}")
         engine.end_round(ledger, t)
         recorder.record(t, params, losses)
+        if config.checkpoint and (t + 1) % config.checkpoint_every == 0:
+            _save_sync_state(config.checkpoint, task, t + 1, params,
+                             opt_states, key, losses, scheduler, ledger,
+                             recorder)
 
     return recorder.result("fed_chs", ledger, params)
 
@@ -433,17 +523,22 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
     if grad_mode:
         # leaves (C, K, n_max, B, ...); per-client draws (occ*K, B, ...) land
         # at [cs, :, slot] as (occ, K, B, ...)
+        # Fed-CHS restarts the B.1 within-round decay every round (Eq. (5)),
+        # so the staged per-round lrs rows are all identical
+        lrs_r = np.broadcast_to(np.asarray(lrs, np.float32), (R, K))
+
         def stage(idxs):
             batch = _stage_batches(
                 idxs,
                 reshape=lambda n_occ, dl: dl.reshape(n_occ, K, *dl.shape[1:]),
                 alloc=lambda C, a: (C, K, n_max) + a.shape[1:],
             )
-            return {"batch": batch, "gammas": gammas_r[idxs]}
+            return {"batch": batch, "gammas": gammas_r[idxs],
+                    "lrs": np.ascontiguousarray(lrs_r[idxs])}
 
         body = scan_grad_body(engine.model, taps)
         carry = params
-        consts = {"lrs": jnp.asarray(lrs)}
+        consts = {}
         params_of = lambda c: c  # noqa: E731
     else:
         # leaves (C, J, n_max, E, B, ...); per-client draws reshape to

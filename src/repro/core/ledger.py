@@ -72,6 +72,10 @@ class CommLedger:
     history: list = dataclasses.field(default_factory=list)  # (round, total_bits) snapshots
     events: list = dataclasses.field(default_factory=list)   # CommEvent stream
     track_events: bool = True  # False drops metadata (saves memory at --full scale)
+    staleness: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int)
+    )  # histogram: staleness tau (in fold versions) -> message count; fed by
+    #    the async drivers' fold-in path (tau=0 for on-time updates)
 
     def record(
         self,
@@ -83,20 +87,53 @@ class CommLedger:
         phase: int = 0,
         sender: str | None = None,
         receiver: str | None = None,
+        staleness: int | None = None,
     ) -> None:
         """Meter `count` messages of `n_bits` over `hop`.
 
         With (round, sender, receiver) metadata, also appends `count`
         structured `CommEvent`s for the network simulator; aggregates are
-        identical either way.
+        identical either way.  `staleness` (async drivers: how many model
+        versions behind the fold this update was computed at) feeds the
+        per-message staleness histogram.
         """
         assert hop in HOPS, f"unknown hop {hop}"
         assert n_bits >= 0 and count >= 0
         self.bits[hop] += n_bits * count
         self.messages[hop] += count
+        if staleness is not None:
+            self.staleness[int(staleness)] += count
         if self.track_events and round is not None:
             ev = CommEvent(round, phase, hop, sender or "?", receiver or "?", n_bits)
             self.events.extend([ev] * count)
+
+    def staleness_histogram(self) -> dict[int, int]:
+        """{tau: messages folded at staleness tau}, sorted by tau."""
+        return dict(sorted(self.staleness.items()))
+
+    def state_dict(self) -> dict:
+        """JSON-serialisable snapshot of the full ledger, for run checkpoints
+        (`checkpoint.save_run_state`).  `load_state` restores bit-identically:
+        aggregates, history, staleness histogram, and (when tracked) the
+        structured event stream."""
+        return {
+            "bits": dict(self.bits),
+            "messages": dict(self.messages),
+            "history": [list(h) for h in self.history],
+            "events": [list(e) for e in self.events],
+            "track_events": self.track_events,
+            "staleness": {str(k): v for k, v in self.staleness.items()},
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.bits = defaultdict(int, state["bits"])
+        self.messages = defaultdict(int, state["messages"])
+        self.history = [tuple(h) for h in state["history"]]
+        self.events = [CommEvent(*e) for e in state["events"]]
+        self.track_events = bool(state["track_events"])
+        self.staleness = defaultdict(
+            int, {int(k): v for k, v in state.get("staleness", {}).items()}
+        )
 
     def snapshot(self, round_idx: int) -> None:
         self.history.append((round_idx, self.total_bits()))

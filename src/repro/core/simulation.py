@@ -253,6 +253,9 @@ class RunResult:
     final_params: PyTree
     metric_mode: str = "max"  # "max": accuracy-like; "min": perplexity-like
     telemetry: Any = None  # repro.obs.RunTelemetry when the run carried one
+    sim_times: list | None = None  # simulated wall-clock (s) at each eval —
+    #   set by the event-driven async drivers (repro.async_fl), where time is
+    #   what the run executes rather than a netsim replay after the fact
 
     def _empty_metric(self) -> float:
         # an empty log must read as WORST-possible, whatever the metric's
@@ -282,6 +285,16 @@ class RunResult:
     def bits_to_accuracy(self, gamma: float) -> int | None:
         r = self.rounds_to_accuracy(gamma)
         return None if r is None else self.ledger.bits_until(r)
+
+    def sim_time_to_accuracy(self, gamma: float) -> float | None:
+        """First simulated wall-clock second at which the metric crosses
+        `gamma` — only for runs that carry `sim_times` (async drivers)."""
+        if self.sim_times is None:
+            return None
+        for t_s, a in zip(self.sim_times, self.test_acc):
+            if self._reached(a, gamma):
+                return t_s
+        return None
 
 
 def evaluate(model: Classifier | FedModel, params: PyTree, eval_data,

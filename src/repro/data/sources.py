@@ -133,8 +133,26 @@ class ArraySource:
         self.loaders = [
             ClientLoader(self.dataset, c, self.batch_size, seed=seed) for c in self.clients
         ]
+        self.draw_counts = [0] * self.num_clients
+
+    def fast_forward(self, draw_counts: list[int]) -> None:
+        """Resume mid-run: advance each client's rng stream to an absolute
+        batch-draw position by drawing and discarding indices — the generator
+        state after `fast_forward([n, ...])` is bit-identical to `n` live
+        draws, so a resumed run re-issues the exact remaining batches."""
+        assert len(draw_counts) == self.num_clients
+        for c, n in enumerate(draw_counts):
+            delta = int(n) - self.draw_counts[c]
+            assert delta >= 0, (
+                f"client {c}: cannot rewind an rng stream "
+                f"({self.draw_counts[c]} -> {n}); reset() first"
+            )
+            if delta:
+                self.loaders[c].next_indices(delta)
+                self.draw_counts[c] = int(n)
 
     def next_batch(self, client: int) -> Batch:
+        self.draw_counts[client] += 1
         x, y = self.loaders[client].next_batch()
         return {"x": x, "y": y}
 
@@ -145,6 +163,7 @@ class ArraySource:
         evolution — see `ClientLoader.next_indices`) but pays ONE dataset
         gather instead of `count`, which is what keeps the scanned drivers'
         chunk staging off the Python floor."""
+        self.draw_counts[client] += count
         idx = self.loaders[client].next_indices(count).reshape(count, self.batch_size)
         return {"x": self.dataset.train_x[idx], "y": self.dataset.train_y[idx]}
 

@@ -199,7 +199,7 @@ def sharded_grad_body(model, n: int):
             p = jax.tree.map(lambda w, g: w - lr_k * g, p, agg)
             return p, jnp.dot(gammas, losses)
 
-        return jax.lax.scan(step, params, (x["batch"], consts["lrs"]))
+        return jax.lax.scan(step, params, (x["batch"], x["lrs"]))
 
     return body
 

@@ -201,7 +201,7 @@ def fed_engine_pspecs(kind: str) -> dict:
     if kind == "grad":
         return {
             "carry": P(),
-            "xs": {"batch": P(None, FED_AXES), "gammas": P()},
+            "xs": {"batch": P(None, FED_AXES), "gammas": P(), "lrs": P()},
             "ys": P(),
         }
     if kind == "delta":

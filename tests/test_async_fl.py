@@ -1,0 +1,222 @@
+"""Async federation drivers (repro.async_fl).
+
+The load-bearing cells:
+  * sync anchor — full-quorum AlwaysOn async Fed-CHS is BIT-identical to
+    the synchronous `run_fed_chs(local_epochs=K)` (the async event loop
+    degenerates to barrier rounds when every update arrives on time);
+  * in-process kill-and-resume — under churn + stragglers + partial
+    quorum, params/metrics/ledger/staleness of a checkpointed-and-resumed
+    run equal an uninterrupted one bit-for-bit;
+  * the buffer/arrival units that make the event loop deterministic.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.async_fl import (
+    AsyncFedCHSConfig,
+    AsyncPSConfig,
+    Dispatch,
+    StalenessBuffer,
+    Update,
+    fire_time,
+    run_async_fed_chs,
+    run_async_fedavg,
+    run_async_hier,
+    staleness_weight,
+)
+from repro.core.fed_chs import FedCHSConfig, run_fed_chs
+from repro.netsim.links import edge_cloud_network
+from repro.part import BernoulliTrace
+
+
+def _params_equal(a, b) -> float:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return max(
+        float(np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64)).max())
+        for x, y in zip(la, lb)
+    )
+
+
+# --------------------------------------------------------------------------
+# units: buffer + staleness discount + fire time
+# --------------------------------------------------------------------------
+
+
+def test_staleness_weight():
+    assert staleness_weight(0.5, 0, 0.7) == 0.5  # tau=0: discount is exactly 1
+    assert staleness_weight(1.0, 3, 0.5) == pytest.approx(0.5)
+    assert staleness_weight(1.0, 1, 0.0) == 1.0  # alpha=0: undiscounted FedBuff
+
+
+def _u(client, version, arrival):
+    return Update(client=client, cluster=0, version=version, arrival=arrival,
+                  gamma=1.0, delta=None)
+
+
+def test_buffer_take_is_totally_ordered():
+    buf = StalenessBuffer(max_staleness=None)
+    for u in [_u(3, 2, 5.0), _u(1, 1, 9.0), _u(2, 1, 9.0), _u(0, 1, 2.0)]:
+        buf.add(u)
+    out = buf.take()
+    assert [(u.version, u.arrival, u.client) for u in out] == [
+        (1, 2.0, 0), (1, 9.0, 1), (1, 9.0, 2), (2, 5.0, 3)]
+    assert len(buf) == 0
+
+
+def test_buffer_eviction_bound():
+    buf = StalenessBuffer(max_staleness=2)
+    buf.add(_u(0, 0, 1.0))
+    buf.add(_u(1, 3, 1.0))
+    evicted = buf.evict_stale(current_version=4)  # tau=4 > 2 for version 0
+    assert [u.client for u in evicted] == [0]
+    assert buf.dropped == 1 and [u.client for u in buf.updates] == [1]
+
+
+def test_take_arrived_splits_on_time():
+    buf = StalenessBuffer()
+    buf.add(_u(0, 0, 1.0))
+    buf.add(_u(1, 0, 5.0))
+    ready = buf.take_arrived(now=2.0)
+    assert [u.client for u in ready] == [0]
+    assert [u.client for u in buf.updates] == [1]
+
+
+def _d(client, arrival):
+    return Dispatch(client=client, cluster=0, version=0, start=0.0,
+                    arrival=arrival)
+
+
+def test_fire_time_quorum_and_deadline():
+    ds = [_d(0, 1.0), _d(1, 2.0), _d(2, 10.0)]
+    assert fire_time(ds, quorum_frac=1.0, deadline_s=None, start=0.0) == 10.0
+    # ceil(3 * 0.5) = 2nd arrival
+    assert fire_time(ds, quorum_frac=0.5, deadline_s=None, start=0.0) == 2.0
+    # deadline caps the wait for the straggler
+    assert fire_time(ds, quorum_frac=1.0, deadline_s=4.0, start=0.0) == 4.0
+    # empty cohort: pass-through fires at the deadline (or immediately)
+    assert fire_time([], quorum_frac=1.0, deadline_s=3.0, start=7.0) == 10.0
+    assert fire_time([], quorum_frac=1.0, deadline_s=None, start=7.0) == 7.0
+
+
+# --------------------------------------------------------------------------
+# the sync anchor: async degenerates to the synchronous chain
+# --------------------------------------------------------------------------
+
+
+def test_async_fed_chs_matches_sync_at_full_quorum(small_task):
+    """AlwaysOn + quorum 1.0 + no deadline: every activation folds its full
+    cohort at staleness 0, so the fold arithmetic must reproduce the
+    synchronous driver's J=1 delta round BIT-exactly."""
+    R, K = 8, 4
+    ra = run_async_fed_chs(small_task, AsyncFedCHSConfig(
+        rounds=R, local_steps=K, eval_every=2, initial_cluster=0,
+        quorum_frac=1.0, deadline_s=None, renormalize=False))
+    rs = run_fed_chs(small_task, FedCHSConfig(
+        rounds=R, local_steps=K, local_epochs=K, eval_every=2,
+        initial_cluster=0))
+    assert _params_equal(ra.final_params, rs.final_params) == 0.0
+    assert ra.test_acc == rs.test_acc
+    # simulated time exists and advances (the sync run has no sim_times)
+    assert ra.sim_times is not None and len(ra.sim_times) == len(ra.test_acc)
+    assert all(b > a for a, b in zip(ra.sim_times, ra.sim_times[1:]))
+    assert rs.sim_times is None
+
+
+def _churn_config(**over):
+    kw = dict(
+        rounds=10, local_steps=4, eval_every=2, initial_cluster=0,
+        quorum_frac=0.6, deadline_s=2.0, staleness_alpha=0.5, max_staleness=3,
+        trace=BernoulliTrace(p=0.7, seed=3),
+        network=edge_cloud_network(straggler_frac=0.25, straggler_slowdown=6.0,
+                                   heterogeneity=0.5, seed=1),
+    )
+    kw.update(over)
+    return AsyncFedCHSConfig(**kw)
+
+
+def test_async_fed_chs_deterministic(small_task):
+    r1 = run_async_fed_chs(small_task, _churn_config())
+    r2 = run_async_fed_chs(small_task, _churn_config())
+    assert _params_equal(r1.final_params, r2.final_params) == 0.0
+    assert r1.test_acc == r2.test_acc and r1.sim_times == r2.sim_times
+    assert r1.ledger.bits == r2.ledger.bits
+
+
+def test_async_fed_chs_staleness_is_recorded(small_task):
+    res = run_async_fed_chs(small_task, _churn_config())
+    hist = res.ledger.staleness_histogram()
+    assert hist and 0 in hist  # on-time folds dominate
+    assert sum(hist.values()) > 0
+    # under partial quorum + churn some updates fold (or evict) late
+    assert any(tau > 0 for tau in hist)
+
+
+def test_async_kill_and_resume_in_process(small_task, tmp_path):
+    """The continuous checkpoint carries EVERYTHING: a run restarted from the
+    mid-run checkpoint finishes bit-identical to one never interrupted —
+    params, metrics, sim clock, comm bits, and the staleness histogram."""
+    full = run_async_fed_chs(small_task, _churn_config())
+
+    ck = os.path.join(tmp_path, "state")
+    run_async_fed_chs(small_task, _churn_config(rounds=5, checkpoint=ck))
+    resumed = run_async_fed_chs(
+        small_task, _churn_config(checkpoint=ck, resume=True))
+
+    assert _params_equal(full.final_params, resumed.final_params) == 0.0
+    assert full.test_acc == resumed.test_acc
+    assert full.sim_times == resumed.sim_times
+    assert full.ledger.bits == resumed.ledger.bits
+    assert (full.ledger.staleness_histogram()
+            == resumed.ledger.staleness_histogram())
+
+
+def test_async_checkpoint_hook_fires(small_task, tmp_path):
+    seen = []
+    cfg = _churn_config(rounds=4, checkpoint=os.path.join(tmp_path, "s"),
+                        checkpoint_every=2, on_checkpoint=seen.append)
+    run_async_fed_chs(small_task, cfg)
+    assert seen == [2, 4]
+
+
+# --------------------------------------------------------------------------
+# async PS baselines
+# --------------------------------------------------------------------------
+
+
+def _ps_config(**over):
+    kw = dict(rounds=8, local_steps=4, quorum_k=4, eval_every=2,
+              trace=BernoulliTrace(p=0.8, seed=3),
+              network=edge_cloud_network(straggler_frac=0.25, seed=1))
+    kw.update(over)
+    return AsyncPSConfig(**kw)
+
+
+@pytest.mark.parametrize("run", [run_async_fedavg, run_async_hier])
+def test_async_ps_drivers_run_and_meter(small_task, run):
+    res = run(small_task, _ps_config())
+    assert len(res.test_acc) == len(res.sim_times)
+    assert all(np.isfinite(a) for a in res.test_acc)
+    assert all(b >= a for a, b in zip(res.sim_times, res.sim_times[1:]))
+    hist = res.ledger.staleness_histogram()
+    assert sum(hist.values()) > 0
+    assert res.ledger.total_bits() > 0
+
+
+@pytest.mark.parametrize("run", [run_async_fedavg, run_async_hier])
+def test_async_ps_deterministic(small_task, run):
+    r1 = run(small_task, _ps_config(rounds=5))
+    r2 = run(small_task, _ps_config(rounds=5))
+    assert _params_equal(r1.final_params, r2.final_params) == 0.0
+    assert r1.sim_times == r2.sim_times
+
+
+def test_sim_time_to_accuracy(small_task):
+    res = run_async_fed_chs(small_task, AsyncFedCHSConfig(
+        rounds=6, local_steps=4, eval_every=2, initial_cluster=0))
+    gamma = res.test_acc[-1]
+    t = res.sim_time_to_accuracy(gamma)
+    assert t is not None and t in res.sim_times
+    assert res.sim_time_to_accuracy(2.0) is None  # unreachable target

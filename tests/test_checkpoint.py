@@ -1,11 +1,25 @@
-"""Checkpoint round-trips: pytrees + resumable FL state."""
+"""Checkpoint round-trips: pytrees + resumable FL state.
+
+The hardening cells pin the failure modes `load_pytree` must catch loudly:
+a checkpoint written for one structure can never be silently mis-mapped
+onto another — structure drift raises naming the leaves, never truncates.
+"""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import load_fl_state, load_pytree, save_fl_state, save_pytree
+from repro.checkpoint import (
+    load_fl_state,
+    load_pytree,
+    load_run_state,
+    run_state_exists,
+    save_fl_state,
+    save_pytree,
+    save_run_state,
+)
 
 
 def test_pytree_roundtrip(tmp_path):
@@ -52,3 +66,113 @@ def test_resume_continues_identically(small_task, tmp_path):
     s2.state.visit_counts = counts
     s2.state.current = cur
     assert [s1.advance() for _ in range(10)] == [s2.advance() for _ in range(10)]
+
+
+# --------------------------------------------------------------------------
+# hardening: structure drift must raise loudly, naming the leaf + file
+# --------------------------------------------------------------------------
+
+
+def test_load_pytree_structure_mismatch_names_leaves(tmp_path):
+    path = os.path.join(tmp_path, "a.npz")
+    save_pytree(path, {"w": jnp.ones((2, 2)), "b": jnp.zeros(3)})
+    with pytest.raises(ValueError, match=r"missing=\['extra'\]"):
+        load_pytree(path, {"w": jnp.ones((2, 2)), "b": jnp.zeros(3),
+                           "extra": jnp.zeros(1)})
+    with pytest.raises(ValueError, match=r"unexpected=\['b'\]"):
+        load_pytree(path, {"w": jnp.ones((2, 2))})
+
+
+def test_load_pytree_treedef_mismatch(tmp_path):
+    path = os.path.join(tmp_path, "t.npz")
+    save_pytree(path, {"x": [jnp.zeros(2), jnp.zeros(2)]})
+    # same leaf order strings but a different container structure
+    with pytest.raises(ValueError, match="treedef mismatch"):
+        load_pytree(path, {"x": {"0": jnp.zeros(2), "1": jnp.zeros(2)}})
+
+
+def test_load_pytree_shape_mismatch_names_leaf(tmp_path):
+    path = os.path.join(tmp_path, "s.npz")
+    save_pytree(path, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError, match=r"leaf 'w' has shape \(2, 2\)"):
+        load_pytree(path, {"w": jnp.ones((4, 4))})
+
+
+def test_load_pytree_missing_leaf_names_it(tmp_path):
+    """A legacy npz without the meta record falls back to key lookup — a
+    missing key must raise KeyError naming the leaf, not truncate."""
+    path = os.path.join(tmp_path, "legacy.npz")
+    np.savez(path, w=np.ones((2, 2)))  # no __pytree_meta__ at all
+    with pytest.raises(KeyError, match="no leaf 'b'"):
+        load_pytree(path, {"w": jnp.ones((2, 2)), "b": jnp.zeros(3)})
+
+
+def test_run_state_roundtrip_and_atomicity(tmp_path):
+    base = os.path.join(tmp_path, "run")
+    assert not run_state_exists(base)
+    arrays = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+              "key": jax.random.PRNGKey(7),
+              "pending": {"u0": {"w": jnp.ones((2, 3))}}}
+    meta = {"round": 5, "sim_time": 12.5, "draw_counts": [3, 1, 4]}
+    save_run_state(base, arrays, meta)
+    assert run_state_exists(base)
+    like = jax.tree.map(jnp.zeros_like, arrays)
+    back, meta2 = load_run_state(base, like)
+    assert meta2 == meta
+    for a, b in zip(jax.tree.leaves(arrays), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # no stray .tmp files survive an atomic save
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_load_run_state_missing_meta_is_incomplete(tmp_path):
+    base = os.path.join(tmp_path, "torn")
+    # arrays landed but the meta sidecar (written LAST) did not: the
+    # checkpoint must read as absent, not half-present
+    save_pytree(base + ".arrays.npz", {"w": jnp.zeros(2)})
+    assert not run_state_exists(base)
+    with pytest.raises(FileNotFoundError, match="meta sidecar missing"):
+        load_run_state(base, {"w": jnp.zeros(2)})
+
+
+def test_ledger_state_roundtrip():
+    from repro.core.ledger import CommLedger
+
+    led = CommLedger(track_events=True)
+    led.record("client_to_es", 100, round=0, phase=1, sender="client:1",
+               receiver="es:0", staleness=0)
+    led.record("client_to_es", 100, round=1, phase=1, sender="client:2",
+               receiver="es:0", staleness=3)
+    led.record("es_to_es", 50, round=1, phase=2, sender="es:0", receiver="es:1")
+    led.snapshot(1)
+
+    led2 = CommLedger(track_events=True)
+    led2.load_state(led.state_dict())
+    assert led2.bits == led.bits and led2.messages == led.messages
+    assert led2.history == led.history and led2.events == led.events
+    assert led2.staleness_histogram() == {0: 1, 3: 1}
+
+
+def test_array_source_fast_forward_parity(small_task):
+    """Draw-and-discard fast-forward reproduces the stream position exactly:
+    the next batch after fast_forward equals the next batch of an
+    uninterrupted source with the same draw history."""
+    src = small_task.source
+    src.reset(0)
+    for c, n in [(0, 3), (1, 1), (5, 2)]:
+        for _ in range(n):
+            src.next_batch(c)
+    counts = list(src.draw_counts)
+    nxt = {c: src.next_batch(c) for c in (0, 1, 5)}
+
+    src.reset(0)
+    src.fast_forward(counts)
+    assert src.draw_counts == counts
+    for c in (0, 1, 5):
+        a, b = nxt[c], src.next_batch(c)
+        np.testing.assert_array_equal(np.asarray(a["x"]), np.asarray(b["x"]))
+    # rewinding is impossible by construction
+    src.reset(0)
+    src.next_batch(0)
+    with pytest.raises(AssertionError, match="rewind"):
+        src.fast_forward([0] * src.num_clients)

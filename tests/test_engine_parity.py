@@ -151,8 +151,9 @@ def ref_fedavg(task, config):
 def ref_wrwgd(task, config):
     task.reset_loaders(config.seed)
     K = config.local_steps
+    # the walk's decaying schedule is indexed by the GLOBAL round t (constant
+    # over the K local steps of one visit) — see wrwgd._walk_round_lrs
     sched_fn = config.schedule or paper_sqrt_schedule(K, half=False)
-    lrs = jnp.asarray([sched_fn(k) for k in range(K)], dtype=jnp.float32)
 
     topo = make_topology(config.topology, task.num_clients, seed=config.topology_seed)
     rng = np.random.default_rng(config.seed)
@@ -164,7 +165,8 @@ def ref_wrwgd(task, config):
     rounds_log, acc_log, loss_log = [], [], []
     for t in range(config.rounds):
         b = task.sample_client_batches(current, K)
-        params, loss = local(params, b["x"], b["y"], lrs)
+        lrs_t = jnp.full((K,), sched_fn(t), dtype=jnp.float32)
+        params, loss = local(params, b["x"], b["y"], lrs_t)
 
         nbrs = list(topo.neighbors(current))
         if config.weighting == "data_size":
