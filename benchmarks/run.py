@@ -25,7 +25,8 @@ def main() -> None:
                     help="paper-scale settings (hours on CPU); default is reduced")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig2,fig3,fig4,kernels,roofline,"
-                         "engine,timeacc,participation,population,asyncfl")
+                         "engine,timeacc,participation,population,asyncfl,"
+                         "lmscale")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_core.json (suite, rows, wall-clock; for the "
                          "engine suite also the scanned-vs-looped speedups) and "
@@ -48,7 +49,7 @@ def main() -> None:
         return
 
     from benchmarks import engine_speedup, fig2_comm, fig3_hparams, fig4_partial_het
-    from benchmarks import fig_async, fig_participation, fig_population
+    from benchmarks import fig_async, fig_lm_scale, fig_participation, fig_population
     from benchmarks import fig_time_to_acc, kernels_micro, roofline, table1_accuracy
 
     suites = {
@@ -63,6 +64,7 @@ def main() -> None:
         "participation": fig_participation.run,  # churn: bits + deadline replay
         "population": fig_population.run,  # device-mesh sharded client axis
         "asyncfl": fig_async.run,  # async event-loop vs sync barrier chain
+        "lmscale": fig_lm_scale.run,  # microbatch peak memory + bf16 wire
     }
     selected = args.only.split(",") if args.only else list(suites)
 
@@ -173,6 +175,29 @@ def main() -> None:
             failures.append(
                 f"asyncfl: async Fed-CHS beat sync in no scenario "
                 f"(best {best:.2f}x <= 1.00x simulated time-to-accuracy)")
+    if "lmscale" in suite_results:
+        # the memory gate: client_microbatch=1 must at least HALVE the
+        # compiled peak-live bytes of the n=8 round vs the all-clients vmap —
+        # XLA's own memory analysis, so the number is structural, not timing
+        # noise.  The wire gate is exact arithmetic: the bf16 dense uplink is
+        # half the f32 message bit-for-bit or the ledger is lying.
+        headline = {}
+        for row in suite_results["lmscale"]["rows"]:
+            s = _speedup(row["derived"])
+            if s is not None:
+                headline[row["name"]] = {"ratio": s, "ref": row["derived"]}
+            if row["name"] == "lmscale/peak_bytes_mb1" and s is not None:
+                if s < fig_lm_scale.GATE_PEAK:
+                    failures.append(
+                        f"{row['name']}: {s:.2f}x < "
+                        f"{fig_lm_scale.GATE_PEAK:.2f}x peak reduction "
+                        "vs vmapped")
+            if (row["name"] == "lmscale/dense_wire_bf16"
+                    and not row["derived"].endswith("_exact")):
+                failures.append(
+                    f"{row['name']}: bf16 wire not exactly half the f32 "
+                    f"dense message ({row['derived']})")
+        payload["lmscale_headline"] = headline
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"\nwrote {os.path.normpath(BENCH_JSON)}")

@@ -12,6 +12,27 @@ def dense_message_bits(num_params: int, bits_per_param: int = 32) -> int:
     return num_params * bits_per_param
 
 
+# itemsize * 8 of every dtype a dense wire may carry, kept jax-free so the
+# ledger layer can price messages without importing jax (the engine-side
+# mirror is repro.core.precision._SUPPORTED; a test pins the two in sync)
+DTYPE_BITS = {
+    "float32": 32,
+    "bfloat16": 16,
+    "float16": 16,
+    "float8_e4m3fn": 8,
+}
+
+
+def dtype_bits(dtype: str) -> int:
+    """Bits per parameter of a dense wire carrying `dtype` values."""
+    try:
+        return DTYPE_BITS[dtype]
+    except KeyError:
+        raise ValueError(
+            f"no wire width for dtype {dtype!r} (choose {sorted(DTYPE_BITS)})"
+        ) from None
+
+
 def qsgd_code_bits(levels: int) -> int:
     """Bits per packed QSGD entry: the sign is folded into the code
     (c = q + s in [0, 2s]) so one entry costs ceil(log2(2s+1)) bits — equal,

@@ -45,9 +45,11 @@ import dataclasses
 from typing import Any, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 
 from repro.comm.bits import (
     dense_message_bits,
+    dtype_bits,
     packed_wire_bits,
     qsgd_code_bits,
     qsgd_message_bits,
@@ -95,17 +97,57 @@ def channel_wire_bits(channel: Channel, num_params: int, leaf_sizes=None) -> int
 
 @dataclasses.dataclass(frozen=True)
 class DenseChannel:
-    """Uncompressed float transport — the identity transform."""
+    """Uncompressed float transport.
+
+    With the default ``wire_dtype=None`` the transform is the identity and
+    `message_bits` prices `bits_per_param` per entry — byte-for-byte the
+    historical dense channel.  Setting ``wire_dtype`` (e.g. ``"bfloat16"``
+    from a `core.precision.Precision` policy) makes the wire real: `compress`
+    round-trips every leaf through that dtype IN-GRAPH (so the lossy cast is
+    part of the compiled round and `phase_bytes` sees the narrow tensors),
+    `encode`/`decode`/`wire_bits` expose the exact payload the honesty test
+    measures, and `bits_per_param` is overridden to the dtype's width — the
+    ledger prices what actually travels, so a bf16 wire halves every dense
+    message exactly."""
 
     bits_per_param: int = 32
+    wire_dtype: str | None = None
     stochastic: bool = dataclasses.field(default=False, init=False)
     per_message: bool = dataclasses.field(default=False, init=False)
 
+    def __post_init__(self):
+        if self.wire_dtype is not None:
+            # pricing follows the wire: the declared width is the dtype's
+            object.__setattr__(self, "bits_per_param", dtype_bits(self.wire_dtype))
+
     def compress(self, tree: PyTree, key: jax.Array) -> PyTree:
-        return tree
+        if self.wire_dtype is None:
+            return tree
+        wire = jnp.dtype(self.wire_dtype)
+        with jax.named_scope("wire_cast"):
+            return jax.tree.map(lambda a: a.astype(wire).astype(a.dtype), tree)
 
     def message_bits(self, num_params: int) -> int:
         return dense_message_bits(num_params, self.bits_per_param)
+
+    # -- wire-channel surface (only meaningful with a wire_dtype; the f32
+    # default is its own wire: encode is then a per-leaf identity) ----------
+
+    def encode(self, tree: PyTree, key: jax.Array = None) -> list:
+        wire = jnp.dtype(self.wire_dtype or "float32")
+        with jax.named_scope("wire_encode"):
+            return [{"payload": leaf.astype(wire)} for leaf in jax.tree.leaves(tree)]
+
+    def decode(self, wires: list, like: PyTree) -> PyTree:
+        leaves, treedef = jax.tree.flatten(like)
+        with jax.named_scope("wire_decode"):
+            return jax.tree.unflatten(
+                treedef,
+                [w["payload"].astype(leaf.dtype) for w, leaf in zip(wires, leaves)],
+            )
+
+    def wire_bits(self, leaf_sizes) -> int:
+        return sum(n * self.bits_per_param for n in leaf_sizes)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 import numpy as np
 
-from repro.comm.channels import Channel, DenseChannel, channel_wire_bits, make_channel
+from repro.comm.channels import Channel, DenseChannel, channel_wire_bits
 from repro.core.engine import (
     RoundEngine,
     ScanPlan,
@@ -44,6 +44,11 @@ from repro.core.engine import (
     split_chain,
 )
 from repro.core.ledger import CommLedger
+from repro.core.precision import (
+    Precision,
+    downlink_bits_per_param,
+    resolve_channel,
+)
 from repro.core.simulation import FLTask, RunRecorder, RunResult
 from repro.data.sources import scatter_put, stage_chunk
 from repro.obs.trace import maybe_span
@@ -68,6 +73,11 @@ class FedAvgConfig:
     qsgd_levels: int | None = None
     channel: Channel | None = None  # explicit uplink channel
     local_opt: LocalOpt | None = None  # client-held optimizer (None = plain SGD)
+    client_microbatch: int | None = None  # at most this many client replicas
+                                          # train at once (None = full vmap)
+    precision: Precision | None = None    # mixed-precision policy: bf16
+                                          # client compute, f32 PS master,
+                                          # wire-dtype dense messages
     sampler: Sampler | None = None     # per-round participation (repro.part);
                                        # None / FullParticipation = seed-parity path
     track_events: bool = True          # False: bits only, no CommEvent stream
@@ -95,16 +105,17 @@ def run_fedavg(task: FLTask, config: FedAvgConfig) -> RunResult:
     params = task.init_params()
     d = task.num_params()
     ledger = CommLedger(track_events=config.track_events)
-    channel = (
-        config.channel
-        if config.channel is not None
-        else make_channel(config.qsgd_levels, config.bits_per_param)
-    )
-    engine = RoundEngine(task.model, channel, local_opt=config.local_opt)
+    channel = resolve_channel(config.precision, config.channel,
+                              config.qsgd_levels, config.bits_per_param)
+    engine = RoundEngine(task.model, channel, local_opt=config.local_opt,
+                         client_microbatch=config.client_microbatch,
+                         precision=config.precision)
     gammas = jnp.asarray(task.global_weights())
     key = jax.random.PRNGKey(config.seed + 1)
 
-    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    down_bits = DenseChannel(
+        downlink_bits_per_param(config.precision, config.bits_per_param)
+    ).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     obs = config.obs
@@ -179,12 +190,11 @@ def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
 
     params = task.init_params()
     d = task.num_params()
-    channel = (
-        config.channel
-        if config.channel is not None
-        else make_channel(config.qsgd_levels, config.bits_per_param)
-    )
-    engine = RoundEngine(task.model, channel, local_opt=config.local_opt)
+    channel = resolve_channel(config.precision, config.channel,
+                              config.qsgd_levels, config.bits_per_param)
+    engine = RoundEngine(task.model, channel, local_opt=config.local_opt,
+                         client_microbatch=config.client_microbatch,
+                         precision=config.precision)
 
     R = config.rounds
     n = task.num_clients
@@ -228,7 +238,8 @@ def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
         }
 
     taps = config.obs is not None and config.obs.taps
-    body = scan_delta_body(engine.model, channel, engine.local_opt, taps)
+    body = scan_delta_body(engine.model, channel, engine.local_opt, taps,
+                           config.client_microbatch, config.precision)
     plan = ScanPlan(
         body=body,
         carry=(params, engine.init_opt_state(params, n)),
@@ -243,10 +254,14 @@ def _fedavg_scan_plan(task: FLTask, source, config: FedAvgConfig):
 
     mesh = resolve_mesh(config.mesh)
     if mesh is not None:
+        assert config.client_microbatch is None, \
+            "client_microbatch and a federation mesh are mutually exclusive"
         plan = shard_plan(plan, mesh, "delta", model=engine.model,
                           channel=channel, opt=engine.local_opt, clients=n)
 
-    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    down_bits = DenseChannel(
+        downlink_bits_per_param(config.precision, config.bits_per_param)
+    ).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     def traffic(track_events: bool):

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.channels import Channel, DenseChannel, channel_wire_bits, make_channel
+from repro.comm.channels import Channel, DenseChannel, channel_wire_bits
 from repro.core.engine import (
     RoundEngine,
     ScanPlan,
@@ -43,6 +43,11 @@ from repro.core.engine import (
     split_chain,
 )
 from repro.core.ledger import CommLedger
+from repro.core.precision import (
+    Precision,
+    downlink_bits_per_param,
+    resolve_channel,
+)
 from repro.core.simulation import FLTask, RunRecorder, RunResult
 from repro.data.sources import scatter_put, stage_chunk
 from repro.obs.trace import maybe_span
@@ -63,6 +68,12 @@ class HierLocalQSGDConfig:
     channel: Channel | None = None     # explicit client->ES channel
     es_channel: Channel | None = None  # explicit ES->PS channel (defaults to channel)
     local_opt: LocalOpt | None = None  # client-held optimizer (None = plain SGD)
+    client_microbatch: int | None = None  # at most this many client replicas
+                                          # per cluster train at once
+                                          # (None = full vmap)
+    precision: Precision | None = None    # mixed-precision policy: bf16
+                                          # client compute, f32 master at the
+                                          # PS, wire-dtype dense messages
     sampler: Sampler | None = None     # per-round participation (repro.part);
                                        # None / FullParticipation = seed-parity path
     track_events: bool = True          # False: bits only, no CommEvent stream
@@ -113,16 +124,17 @@ def run_hier_local_qsgd(task: FLTask, config: HierLocalQSGDConfig) -> RunResult:
     params = task.init_params()
     d = task.num_params()
     ledger = CommLedger(track_events=config.track_events)
-    channel = (
-        config.channel
-        if config.channel is not None
-        else make_channel(config.qsgd_levels, config.bits_per_param)
-    )
+    channel = resolve_channel(config.precision, config.channel,
+                              config.qsgd_levels, config.bits_per_param)
     es_channel = config.es_channel if config.es_channel is not None else channel
-    engine = RoundEngine(task.model, channel, es_channel, local_opt=config.local_opt)
+    engine = RoundEngine(task.model, channel, es_channel, local_opt=config.local_opt,
+                         client_microbatch=config.client_microbatch,
+                         precision=config.precision)
     key = jax.random.PRNGKey(config.seed + 1)
 
-    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    down_bits = DenseChannel(
+        downlink_bits_per_param(config.precision, config.bits_per_param)
+    ).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
     es_up_bits = channel_wire_bits(es_channel, d, task.param_leaf_sizes())
 
@@ -234,13 +246,12 @@ def _hier_scan_plan(task: FLTask, source, config: HierLocalQSGDConfig):
 
     params = task.init_params()
     d = task.num_params()
-    channel = (
-        config.channel
-        if config.channel is not None
-        else make_channel(config.qsgd_levels, config.bits_per_param)
-    )
+    channel = resolve_channel(config.precision, config.channel,
+                              config.qsgd_levels, config.bits_per_param)
     es_channel = config.es_channel if config.es_channel is not None else channel
-    engine = RoundEngine(task.model, channel, es_channel, local_opt=config.local_opt)
+    engine = RoundEngine(task.model, channel, es_channel, local_opt=config.local_opt,
+                         client_microbatch=config.client_microbatch,
+                         precision=config.precision)
 
     M = task.num_clusters
     gammas_full, mask_full = task.padded_cluster_weights()
@@ -332,7 +343,7 @@ def _hier_scan_plan(task: FLTask, source, config: HierLocalQSGDConfig):
     taps = config.obs is not None and config.obs.taps
     plan = ScanPlan(
         body=scan_multi_body(engine.model, channel, es_channel, engine.local_opt,
-                             taps),
+                             taps, config.client_microbatch, config.precision),
         carry=(params, engine.init_opt_state(params, M, n_max)),
         consts={"lrs": jnp.asarray(lrs.reshape(interactions, E))},
         stage=stage,
@@ -345,11 +356,15 @@ def _hier_scan_plan(task: FLTask, source, config: HierLocalQSGDConfig):
 
     mesh = resolve_mesh(config.mesh)
     if mesh is not None:
+        assert config.client_microbatch is None, \
+            "client_microbatch and a federation mesh are mutually exclusive"
         plan = shard_plan(plan, mesh, "multi", model=engine.model,
                           channel=channel, es_channel=es_channel,
                           opt=engine.local_opt, clusters=M, clients=n_max)
 
-    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    down_bits = DenseChannel(
+        downlink_bits_per_param(config.precision, config.bits_per_param)
+    ).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
     es_up_bits = channel_wire_bits(es_channel, d, task.param_leaf_sizes())
 

@@ -58,6 +58,10 @@ class WRWGDConfig:
     chunk_rounds: int = 32             # scanned mode: rounds staged per chunk
     eval_every: int = 10
     bits_per_param: int = 32
+    client_microbatch: int | None = None  # accepted for config-surface parity
+                                          # with the other drivers; a walk
+                                          # visits ONE client per round, so
+                                          # any value degrades to mb=1
     seed: int = 0
     schedule: Schedule | None = None  # walk round t -> eta_t, constant over the
                                       # K local steps of that visit; default
@@ -130,7 +134,8 @@ def run_wrwgd(task: FLTask, config: WRWGDConfig) -> RunResult:
     d = task.num_params()
     ledger = CommLedger(track_events=config.track_events)
     channel = DenseChannel(config.bits_per_param)
-    engine = RoundEngine(task.model, channel)
+    engine = RoundEngine(task.model, channel,
+                         client_microbatch=config.client_microbatch)
     hop_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
     gamma_one = jnp.ones((1,), jnp.float32)
 
@@ -178,7 +183,8 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
     params = task.init_params()
     d = task.num_params()
     channel = DenseChannel(config.bits_per_param)
-    engine = RoundEngine(task.model, channel)
+    engine = RoundEngine(task.model, channel,
+                         client_microbatch=config.client_microbatch)
     visits, trains, hops = _precompute_walk(task, config)
     R = config.rounds
     ones = np.ones((R, 1), np.float32)
@@ -200,7 +206,7 @@ def _wrwgd_scan_plan(task: FLTask, source, config: WRWGDConfig):
 
     taps = config.obs is not None and config.obs.taps
     plan = ScanPlan(
-        body=scan_grad_body(engine.model, taps),
+        body=scan_grad_body(engine.model, taps, config.client_microbatch),
         carry=params,
         consts={},
         stage=stage,

@@ -55,6 +55,38 @@ Round modes
   weight and their deltas are masked to zero before compression), plus the
   ES->PS compress/aggregate/broadcast step, all inside one jit.
 
+Memory & precision
+------------------
+Two orthogonal execution knobs on `RoundEngine` rescale the same round
+computation from MLP toys to 0.6B-param LM clients on one host:
+
+* `client_microbatch` — the delta/grad rounds above historically vmapped the
+  E local steps over ALL n clients of the active cluster: n model replicas
+  (plus n activation sets under AD) live simultaneously.  With
+  `client_microbatch=mb` the engine scans over ceil(n/mb) client groups and
+  accumulates the gamma-weighted aggregate in place
+  (`_microbatched_cluster_step`), so peak memory is O(mb) replicas + the one
+  master copy.  Grad mode stays BIT-identical (the per-step gradient stack
+  feeds the unchanged einsum — `oracles.grad_phase`); delta modes match the
+  vmapped aggregate to ≤1 ulp per interaction (exact at mb >= n) because
+  only the reduction ORDER changes.
+* `precision` — a `core.precision.Precision` policy: clients compute
+  (forward/backward, local opt steps, raw deltas) in `precision.compute`
+  (bf16 halves replica + activation bytes); the authoritative params the ES
+  holds — the whole-run scan carry — and the delta accumulator stay in
+  `precision.master`; dense wires travel at `precision.wire` width via
+  `DenseChannel(wire_dtype=...)`, which the ledger prices exactly.  Casts
+  are tagged ("precision_cast" / "master_accumulate") for
+  roofline.attribution.  Grad mode — the paper-literal Eq. (5) arm —
+  ignores the policy.
+
+Both default to None, which traces the exact pre-knob graphs byte-for-byte
+(same functools.cache entries, no inserted ops) — the default-path parity
+contract in tests/test_engine_parity.py.  `scan_chunk_fn` additionally
+donates the staged per-chunk xs on donation-capable backends, so a chunked
+LM run's live set is master state + one chunk of batches + one microbatch
+of activations.
+
 Participation
 -------------
 Per-round participation (repro.part) flows into the rounds as masks riding
@@ -90,6 +122,7 @@ import numpy as np
 from repro.comm.channels import Channel, DenseChannel
 from repro.core.ledger import CommLedger
 from repro.core.oracles import grad_phase, local_opt_steps
+from repro.core.precision import Precision, cast_floats, compute_cast, master_cast
 from repro.models.fed import FedModel, as_fed_model
 from repro.obs.taps import delta_taps, grad_taps, tree_client_norms
 from repro.obs.trace import maybe_span
@@ -146,7 +179,8 @@ def dummy_subs(*lead: int) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 
-def compress_uplinks(channel: Channel, deltas: PyTree, sub: jax.Array) -> PyTree:
+def compress_uplinks(channel: Channel, deltas: PyTree, sub: jax.Array,
+                     slots: jax.Array | None = None) -> PyTree:
     """Compress a stacked uplink (leading sender axis on every leaf).
 
     `per_message` channels (every lossy channel: QSGD/sign-SGD encode each
@@ -158,10 +192,16 @@ def compress_uplinks(channel: Channel, deltas: PyTree, sub: jax.Array) -> PyTree
     carries, so a run padded to n_max senders (the whole-run scan path) hands
     each real sender the exact key the unpadded looped path would.  Padded
     slots carry zero deltas, which every wire channel encodes to zero norms
-    and decodes to exact zeros.  Dense transforms the stack directly."""
+    and decodes to exact zeros.  Dense transforms the stack directly.
+
+    `slots` overrides the per-sender key indices: the microbatched client
+    path compresses one GROUP of the stacked uplink at a time and passes the
+    group's global slot ids, so client i's message is keyed identically
+    whether its group holds 1, 2, or all n senders."""
     if getattr(channel, "per_message", False):
-        n = jax.tree.leaves(deltas)[0].shape[0]
-        slots = jnp.arange(n)
+        if slots is None:
+            n = jax.tree.leaves(deltas)[0].shape[0]
+            slots = jnp.arange(n)
         return jax.vmap(
             lambda d, i: channel.compress(d, jax.random.fold_in(sub, i))
         )(deltas, slots)
@@ -169,13 +209,17 @@ def compress_uplinks(channel: Channel, deltas: PyTree, sub: jax.Array) -> PyTree
 
 
 @functools.cache
-def _grad_round_fn(model: FedModel, taps: bool = False):
+def _grad_round_fn(model: FedModel, taps: bool = False,
+                   microbatch: int | None = None):
     """Eq. (5) literal (see `oracles.grad_phase`): batch leaves (K, n, B, ...),
     gammas (n,), lrs (K,). Returns (params, per-step gamma-weighted losses).
     With `taps`, additionally returns the grad-mode tele dict (obs/taps.py).
     Telemetry variants are SEPARATE cache entries: the taps=False graph is
-    the exact pre-telemetry round, so the obs=None fast path costs nothing."""
-    phase = grad_phase(model)
+    the exact pre-telemetry round, so the obs=None fast path costs nothing.
+    `microbatch` bounds concurrent client forward/backward passes at
+    BIT-IDENTICAL output (`oracles.grad_phase`); grad mode is the
+    paper-literal f32 path, so there is no precision knob here."""
+    phase = grad_phase(model, microbatch)
 
     def round_fn(params, batch, gammas, lrs):
         with jax.named_scope("local_train"):
@@ -211,7 +255,8 @@ def _scan_and_tap_last(interaction, carry, xs, taps):
 
 @functools.cache
 def _delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt,
-                    taps: bool = False):
+                    taps: bool = False, microbatch: int | None = None,
+                    precision: Precision | None = None):
     """Delta mode: scan over J = K/E interactions; each interaction runs E
     local optimizer steps per client (vmapped), pushes channel-compressed
     deltas, and applies the gamma-weighted aggregate.
@@ -221,20 +266,53 @@ def _delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt,
     `taps` also the per-round tele dict (a final-interaction snapshot — see
     `_scan_and_tap_last`).  The round phases are `jax.named_scope`-tagged
     (metadata only — numerics are untouched) so
-    roofline.attribution.phase_bytes can bill a whole round."""
+    roofline.attribution.phase_bytes can bill a whole round.
+
+    `microbatch` routes the interaction through `_microbatched_cluster_step`
+    (peak params/activations O(microbatch) instead of O(n) model copies;
+    ≤1-ulp vs the vmapped aggregate — see the helper's docstring).
+    `precision` is the mixed-precision policy (core/precision.py): compute
+    runs in `precision.compute`, the carry params/aggregation stay in the
+    master dtype.  Both default to None, which traces the exact
+    pre-mixed-precision vmapped graph byte-for-byte."""
+    if microbatch is not None:
+        assert not taps, "telemetry taps are unsupported with client_microbatch"
+        step = _microbatched_cluster_step(
+            local_opt_steps(model, opt), channel, int(microbatch), precision)
+
+        def mb_round_fn(params, opt_state, batch, gammas, lrs, subs):
+            ones = jnp.ones_like(gammas)
+
+            def interaction(carry, inp):
+                p, s = carry
+                b, lr, sub = inp
+                new_p, new_s, losses = step(p, s, b, gammas, ones, lr, sub)
+                return (new_p, new_s), jnp.mean(losses)
+
+            (p, s), losses = jax.lax.scan(interaction, (params, opt_state),
+                                          (batch, lrs, subs))
+            return p, s, losses
+
+        return _jit_round(mb_round_fn)
+
     multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
     def round_fn(params, opt_state, batch, gammas, lrs, subs):
         def interaction(carry, inp, tap=False):
             p, s = carry
             b, lr, sub = inp
+            p_c = compute_cast(p, precision)
             with jax.named_scope("local_train"):
-                new_p, new_s, losses = multi_local(p, s, b, lr)
+                new_p, new_s, losses = multi_local(
+                    p_c, s, compute_cast(b, precision), compute_cast(lr, precision))
             with jax.named_scope("uplink"):
-                raw = jax.tree.map(lambda a, base: a - base[None], new_p, p)
+                raw = jax.tree.map(lambda a, base: a - base[None], new_p, p_c)
                 deltas = compress_uplinks(channel, raw, sub)
+            deltas = master_cast(deltas, precision)
             with jax.named_scope("intra_agg"):
-                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+                agg = jax.tree.map(
+                    lambda dl: jnp.einsum("n,n...->...", gammas.astype(dl.dtype), dl),
+                    deltas)
                 new_params = tree_add(p, agg)
             loss = jnp.mean(losses)
             out = (loss, delta_taps(raw, tree_sub(new_params, p),
@@ -259,34 +337,146 @@ def _freeze_masked(mask: jax.Array, new_state: PyTree, old_state: PyTree) -> PyT
     )
 
 
+def _microbatched_cluster_step(local_fn, channel: Channel, mb: int,
+                               precision: Precision | None):
+    """One cluster interaction with at most `mb` concurrent client replicas.
+
+    The memory-lean core of `client_microbatch`: instead of vmapping the E
+    local steps over all n clients (n model copies + n activation sets live
+    at once), clients are processed in ceil(n/mb) groups of `mb` by a
+    `lax.scan` that accumulates the gamma-weighted aggregate in place — the
+    live set is ONE master params tree + `mb` compute-dtype replicas.  The
+    tail group is padded with slot-0 replicas carrying zero gamma AND zero
+    mask, so pad work contributes exact zeros and pad opt-state/losses are
+    sliced off before returning.
+
+    Numerics contract (pinned by tests/test_engine_parity.py): per-client
+    local trajectories are BIT-IDENTICAL to the vmapped path (vmap width
+    does not change per-lane arithmetic) and group uplinks are keyed with
+    the clients' GLOBAL slot ids (`compress_uplinks(slots=...)`), so the
+    deltas entering aggregation are bit-equal too.  Only the aggregation
+    ORDER changes: `acc += einsum(gamma_group, delta_group)` vs one full
+    einsum — XLA may contract the two differently, so aggregated params
+    match to ≤1 ulp per interaction (exact when mb >= n: a single group's
+    einsum IS the full einsum).  Grad mode needs none of this caveat — see
+    `oracles.grad_phase`.
+
+    Under a `precision` policy the helper is also the mixed-precision hot
+    path: params/batch/lr are cast to `precision.compute` once per
+    interaction (tagged "precision_cast"), the group deltas are cast up
+    (tagged "master_accumulate") into a master-dtype accumulator, and the
+    returned params stay master-dtype — the ES never holds a compute-dtype
+    authority copy.
+
+    Returns ``step(params, opt_state, batch, gammas, mask, lrs, sub) ->
+    (new_params, new_opt_state, per-client losses (n,))`` with batch leaves
+    (n, E, B, ...), opt-state leaves (n, ...), gammas/mask (n,), lrs (E,).
+    """
+    multi_local = jax.vmap(local_fn, in_axes=(None, 0, 0, None))
+
+    def step(p, s, b, gammas, mask, lrs, sub):
+        n = gammas.shape[0]
+        pad = (-n) % mb
+        groups = (n + pad) // mb
+        if pad:
+            zeros = lambda v: jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+            rep = lambda a: jnp.concatenate(
+                [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])])
+            gammas, mask = zeros(gammas), zeros(mask)
+            b = jax.tree.map(rep, b)
+            s = jax.tree.map(rep, s)
+        group = lambda a: a.reshape((groups, mb) + a.shape[1:])
+
+        p_c = compute_cast(p, precision)
+        lrs_c = compute_cast(lrs, precision)
+        b = compute_cast(b, precision)
+        acc0 = jax.tree.map(jnp.zeros_like, p)  # master-dtype accumulator
+
+        def one_group(acc, inp):
+            s_j, b_j, g_j, msk_j, slots_j = inp
+            with jax.named_scope("local_train"):
+                new_p, new_s, losses = multi_local(p_c, s_j, b_j, lrs_c)
+                new_s = _freeze_masked(msk_j, new_s, s_j)
+            with jax.named_scope("uplink"):
+                raw = jax.tree.map(
+                    lambda a: a * msk_j.astype(a.dtype).reshape((-1,) + (1,) * (a.ndim - 1)),
+                    jax.tree.map(lambda a, base: a - base[None], new_p, p_c),
+                )
+                deltas = compress_uplinks(channel, raw, sub, slots=slots_j)
+            deltas = master_cast(deltas, precision)
+            with jax.named_scope("intra_agg"):
+                acc = jax.tree.map(
+                    lambda a, dl: a + jnp.einsum(
+                        "n,n...->...", g_j.astype(a.dtype), dl.astype(a.dtype)),
+                    acc, deltas)
+            return acc, (new_s, losses)
+
+        xs = (jax.tree.map(group, s), jax.tree.map(group, b), group(gammas),
+              group(mask), group(jnp.arange(n + pad)))
+        acc, (new_s, losses) = jax.lax.scan(one_group, acc0, xs)
+        new_params = tree_add(p, acc)
+        new_s = jax.tree.map(lambda a: a.reshape((n + pad,) + a.shape[2:])[:n], new_s)
+        return new_params, new_s, losses.reshape(n + pad)[:n]
+
+    return step
+
+
 @functools.cache
 def _masked_round_body(model: FedModel, channel: Channel, opt: LocalOpt,
-                       taps: bool = False):
+                       taps: bool = False, microbatch: int | None = None,
+                       precision: Precision | None = None):
     """The pure (unjitted) masked delta round — shared verbatim by the
     per-round compiled function (`_masked_delta_round_fn`) and the whole-run
     scan bodies below, so the looped and scanned paths trace the exact same
     computation.  With `taps` the round additionally returns the tele dict
     (mask-weighted, a final-interaction snapshot — see `_scan_and_tap_last`);
     taps=False is its own cache entry tracing the exact pre-telemetry
-    graph."""
+    graph.  `microbatch`/`precision` as in `_delta_round_fn` (the microbatch
+    path routes through `_microbatched_cluster_step`; None/None traces the
+    pre-mixed-precision graph byte-for-byte)."""
+    if microbatch is not None:
+        assert not taps, "telemetry taps are unsupported with client_microbatch"
+        step = _microbatched_cluster_step(
+            local_opt_steps(model, opt), channel, int(microbatch), precision)
+
+        def mb_round_fn(params, opt_state, batch, gammas, mask, lrs, subs):
+            def interaction(carry, inp):
+                p, s = carry
+                b, lr, sub = inp
+                new_p, new_s, losses = step(p, s, b, gammas, mask, lr, sub)
+                loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+                return (new_p, new_s), loss
+
+            (p, s), losses = jax.lax.scan(interaction, (params, opt_state),
+                                          (batch, lrs, subs))
+            return p, s, losses
+
+        return mb_round_fn
+
     multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
     def round_fn(params, opt_state, batch, gammas, mask, lrs, subs):
         def interaction(carry, inp, tap=False):
             p, s = carry
             b, lr, sub = inp
+            p_c = compute_cast(p, precision)
             with jax.named_scope("local_train"):
-                new_p, new_s, losses = multi_local(p, s, b, lr)
+                new_p, new_s, losses = multi_local(
+                    p_c, s, compute_cast(b, precision), compute_cast(lr, precision))
                 new_s = _freeze_masked(mask, new_s, s)
             with jax.named_scope("uplink"):
                 raw = jax.tree.map(
-                    lambda a, base: (a - base[None]) * mask.reshape((-1,) + (1,) * (a.ndim - 1)),
+                    lambda a, base: (a - base[None])
+                    * mask.astype(a.dtype).reshape((-1,) + (1,) * (a.ndim - 1)),
                     new_p,
-                    p,
+                    p_c,
                 )
                 deltas = compress_uplinks(channel, raw, sub)
+            deltas = master_cast(deltas, precision)
             with jax.named_scope("intra_agg"):
-                agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", gammas, dl), deltas)
+                agg = jax.tree.map(
+                    lambda dl: jnp.einsum("n,n...->...", gammas.astype(dl.dtype), dl),
+                    deltas)
                 new_params = tree_add(p, agg)
             loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
             out = (loss, delta_taps(raw, tree_sub(new_params, p),
@@ -301,7 +491,8 @@ def _masked_round_body(model: FedModel, channel: Channel, opt: LocalOpt,
 
 @functools.cache
 def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt,
-                           taps: bool = False):
+                           taps: bool = False, microbatch: int | None = None,
+                           precision: Precision | None = None):
     """Delta mode with a per-client participation mask (n,): masked-out
     clients contribute zero delta (their slot is zeroed before compression),
     are excluded from the loss average, and keep their `LocalOpt` state
@@ -310,12 +501,14 @@ def _masked_delta_round_fn(model: FedModel, channel: Channel, opt: LocalOpt,
     `_delta_round_fn`; the unmasked function stays untouched so the default
     full-participation path is bit-identical to the pre-participation stack.
     """
-    return _jit_round(_masked_round_body(model, channel, opt, taps))
+    return _jit_round(_masked_round_body(model, channel, opt, taps,
+                                         microbatch, precision))
 
 
 @functools.cache
 def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt,
-                      taps: bool = False):
+                      taps: bool = False, microbatch: int | None = None,
+                      precision: Precision | None = None):
     """Pure (unjitted) 3-tier HFL global round, vmapped over all M clusters at
     once — shared by `_multi_round_fn` and the whole-run scan body.
     batch leaves: (J, M, n_max, E, B, ...), opt_state leaves: (M, n_max, ...),
@@ -325,7 +518,15 @@ def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, op
     Returns (params, opt_state, per-(interaction, cluster) losses (J, M));
     with `taps` also a per-cluster (M,) tele dict (a final-interaction
     snapshot — see `_scan_and_tap_last` — + "es_comp_err" for the ES->PS
-    channel).  taps=False traces the exact pre-telemetry graph."""
+    channel).  taps=False traces the exact pre-telemetry graph.
+    `microbatch`/`precision` as in `_delta_round_fn`: the per-cluster
+    interaction routes through `_microbatched_cluster_step` (the M-cluster
+    vmap stays — peak is M * microbatch compute replicas), and cluster/PS
+    params stay master-dtype."""
+    if microbatch is not None:
+        assert not taps, "telemetry taps are unsupported with client_microbatch"
+        mb_step = _microbatched_cluster_step(
+            local_opt_steps(model, opt), channel, int(microbatch), precision)
     multi_local = jax.vmap(local_opt_steps(model, opt), in_axes=(None, 0, 0, None))
 
     def round_fn(params, opt_state, batch, gammas, mask, es_weights, lrs, subs, es_subs):
@@ -338,22 +539,34 @@ def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, op
             cp, s = carry
             b, lr, sub = inp
 
+            def one_cluster_mb(p_m, s_m, b_m, g_m, msk_m, sub_m):
+                new_pm, new_s, losses = mb_step(p_m, s_m, b_m, g_m, msk_m, lr, sub_m)
+                loss = jnp.sum(losses * msk_m) / jnp.maximum(jnp.sum(msk_m), 1.0)
+                return new_pm, new_s, loss
+
             def one_cluster(p_m, s_m, b_m, g_m, msk_m, sub_m):
+                p_mc = compute_cast(p_m, precision)
                 with jax.named_scope("local_train"):
-                    new_p, new_s, losses = multi_local(p_m, s_m, b_m, lr)
+                    new_p, new_s, losses = multi_local(
+                        p_mc, s_m, compute_cast(b_m, precision),
+                        compute_cast(lr, precision))
                     # masked slots (padding OR dropped-out clients) keep their opt
                     # state frozen; for real participating slots the select is a
                     # bit-exact identity, so default-path parity holds
                     new_s = _freeze_masked(msk_m, new_s, s_m)
                 with jax.named_scope("uplink"):
                     raw = jax.tree.map(
-                        lambda a, base: (a - base[None]) * msk_m.reshape((-1,) + (1,) * (a.ndim - 1)),
+                        lambda a, base: (a - base[None])
+                        * msk_m.astype(a.dtype).reshape((-1,) + (1,) * (a.ndim - 1)),
                         new_p,
-                        p_m,
+                        p_mc,
                     )
                     deltas = compress_uplinks(channel, raw, sub_m)
+                deltas = master_cast(deltas, precision)
                 with jax.named_scope("intra_agg"):
-                    agg = jax.tree.map(lambda dl: jnp.einsum("n,n...->...", g_m, dl), deltas)
+                    agg = jax.tree.map(
+                        lambda dl: jnp.einsum("n,n...->...", g_m.astype(dl.dtype), dl),
+                        deltas)
                     new_pm = tree_add(p_m, agg)
                 # a fully-dropped cluster has sum(mask) == 0: its loss reads 0
                 # and its params stay at the broadcast model (zero deltas)
@@ -362,7 +575,8 @@ def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, op
                                         g_m, msk_m)) if tap else loss
                 return new_pm, new_s, out
 
-            cp, s, ys = jax.vmap(one_cluster)(cp, s, b, gammas, mask, sub)
+            cluster_fn = one_cluster_mb if microbatch is not None else one_cluster
+            cp, s, ys = jax.vmap(cluster_fn)(cp, s, b, gammas, mask, sub)
             return (cp, s), ys
 
         out = _scan_and_tap_last(interaction, (cparams0, opt_state),
@@ -392,9 +606,11 @@ def _multi_round_body(model: FedModel, channel: Channel, es_channel: Channel, op
 
 @functools.cache
 def _multi_round_fn(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt,
-                    taps: bool = False):
+                    taps: bool = False, microbatch: int | None = None,
+                    precision: Precision | None = None):
     """Compiled `_multi_round_body` (the per-round 3-tier HFL entry point)."""
-    return _jit_round(_multi_round_body(model, channel, es_channel, opt, taps))
+    return _jit_round(_multi_round_body(model, channel, es_channel, opt, taps,
+                                        microbatch, precision))
 
 
 # --------------------------------------------------------------------------
@@ -411,22 +627,41 @@ class RoundEngine:
     uplinks; `es_channel` (3-tier HFL only) compresses ES -> PS uplinks and
     defaults to `channel`.  `local_opt` is the client-held local optimizer;
     the default `PlainSGD` is the seed-parity Eq. (5) step.
+
+    `client_microbatch` bounds how many client replicas train concurrently
+    inside a round (None = the historical all-clients vmap): peak memory
+    drops from O(n) to O(microbatch) model copies — bit-identical in grad
+    mode, ≤1 ulp in delta modes (`_microbatched_cluster_step`).
+    `precision` is the mixed-precision policy (core/precision.py): clients
+    compute in `precision.compute` while the engine's authoritative params
+    and delta aggregation stay in `precision.master`; grad mode (the
+    paper-literal Eq. (5) path) ignores it.  Both default to None, which
+    keeps every compiled graph byte-for-byte the pre-knob round.
     """
 
     model: FedModel
     channel: Channel = DenseChannel()
     es_channel: Channel | None = None
     local_opt: LocalOpt | None = None  # None -> PlainSGD()
+    client_microbatch: int | None = None
+    precision: Precision | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "model", as_fed_model(self.model))
         if self.local_opt is None:
             object.__setattr__(self, "local_opt", PlainSGD())
+        if self.client_microbatch is not None:
+            assert self.client_microbatch >= 1
 
     def init_opt_state(self, params: PyTree, *lead: int) -> PyTree:
         """Fresh stacked per-client optimizer state with leading axes `lead`
         (e.g. `(n,)` for one cluster, `(M, n_max)` for 3-tier HFL).  Empty
-        pytree (zero cost) for the default stateless SGD."""
+        pytree (zero cost) for the default stateless SGD.  Under a
+        `precision` policy the state is seeded from the COMPUTE-dtype params:
+        client-held moments live at compute width (only the ES keeps f32
+        state), matching the dtype the local steps update them at."""
+        if self.precision is not None:
+            params = cast_floats(params, self.precision.compute)
         state = self.local_opt.init(params)
         for n in reversed(lead):
             state = jax.tree.map(
@@ -435,7 +670,8 @@ class RoundEngine:
         return state
 
     def grad_round(self, params, batch, gammas, lrs, *, taps=False):
-        return _grad_round_fn(self.model, taps)(params, batch, gammas, lrs)
+        return _grad_round_fn(self.model, taps, self.client_microbatch)(
+            params, batch, gammas, lrs)
 
     def cluster_round(self, params, batch, gammas, lrs, subs=None, opt_state=None,
                       mask=None, *, taps=False):
@@ -453,9 +689,11 @@ class RoundEngine:
         if opt_state is None:
             opt_state = self.init_opt_state(params, n)
         if mask is None:
-            fn = _delta_round_fn(self.model, self.channel, self.local_opt, taps)
+            fn = _delta_round_fn(self.model, self.channel, self.local_opt, taps,
+                                 self.client_microbatch, self.precision)
             return fn(params, opt_state, batch, gammas, lrs, subs)
-        fn = _masked_delta_round_fn(self.model, self.channel, self.local_opt, taps)
+        fn = _masked_delta_round_fn(self.model, self.channel, self.local_opt, taps,
+                                    self.client_microbatch, self.precision)
         return fn(params, opt_state, batch, gammas, jnp.asarray(mask), lrs, subs)
 
     def multi_cluster_round(
@@ -471,7 +709,7 @@ class RoundEngine:
             opt_state = self.init_opt_state(params, M, mask.shape[1])
         fn = _multi_round_fn(
             self.model, self.channel, self.es_channel or self.channel, self.local_opt,
-            taps,
+            taps, self.client_microbatch, self.precision,
         )
         return fn(params, opt_state, batch, gammas, mask, es_weights, lrs, subs, es_subs)
 
@@ -515,15 +753,17 @@ class RoundEngine:
 
 
 @functools.cache
-def scan_grad_body(model: FedModel, taps: bool = False):
+def scan_grad_body(model: FedModel, taps: bool = False,
+                   microbatch: int | None = None):
     """Whole-run body, Eq. (5) grad mode.  carry: params.
     x: {"batch": (K, n_max, B, ...), "gammas": (n_max,), "lrs": (K,)} (padded
     client slots carry zero gamma weight — exact-zero contributions; the step
     sizes are staged per round so decaying schedules can track the GLOBAL
     round index, e.g. WRWGD's walk).  Emits the per-step gamma-weighted
     losses (K,); with `taps` the ys are (losses, tele) so the chunk runner
-    can split the stacked telemetry off."""
-    phase = grad_phase(model)
+    can split the stacked telemetry off.  `microbatch` bounds concurrent
+    client backward passes bit-identically (`oracles.grad_phase`)."""
+    phase = grad_phase(model, microbatch)
 
     def body(params, x, consts):
         del consts
@@ -538,13 +778,14 @@ def scan_grad_body(model: FedModel, taps: bool = False):
 
 @functools.cache
 def scan_delta_body(model: FedModel, channel: Channel, opt: LocalOpt,
-                    taps: bool = False):
+                    taps: bool = False, microbatch: int | None = None,
+                    precision: Precision | None = None):
     """Whole-run body, delta mode over one fixed client set (FedAvg).
     carry: (params, opt_state (n, ...)).  x: {"batch": (J, n, E, B, ...),
     "gammas"/"mask": (n,), "subs": (J, 2)}.  consts: {"lrs": (J, E)}.
     Emits per-interaction masked mean losses (J,); with `taps` the ys are
-    (losses, tele)."""
-    round_fn = _masked_round_body(model, channel, opt, taps)
+    (losses, tele).  `microbatch`/`precision` as in `_delta_round_fn`."""
+    round_fn = _masked_round_body(model, channel, opt, taps, microbatch, precision)
 
     def body(carry, x, consts):
         params, opt_state = carry
@@ -562,13 +803,14 @@ def scan_delta_body(model: FedModel, channel: Channel, opt: LocalOpt,
 
 @functools.cache
 def scan_cluster_delta_body(model: FedModel, channel: Channel, opt: LocalOpt,
-                            taps: bool = False):
+                            taps: bool = False, microbatch: int | None = None,
+                            precision: Precision | None = None):
     """Whole-run body, delta mode with a per-round active cluster (Fed-CHS).
     carry: (params, opt_states (M, n_max, ...)) — the active cluster's rows
     are gathered/scattered by the scanned cluster index x["m"].
     x adds "m": () int32 to the `scan_delta_body` inputs (all padded to
-    n_max width)."""
-    round_fn = _masked_round_body(model, channel, opt, taps)
+    n_max width).  `microbatch`/`precision` as in `_delta_round_fn`."""
+    round_fn = _masked_round_body(model, channel, opt, taps, microbatch, precision)
 
     def body(carry, x, consts):
         params, opt_all = carry
@@ -597,13 +839,16 @@ def scan_cluster_delta_body(model: FedModel, channel: Channel, opt: LocalOpt,
 
 @functools.cache
 def scan_multi_body(model: FedModel, channel: Channel, es_channel: Channel, opt: LocalOpt,
-                    taps: bool = False):
+                    taps: bool = False, microbatch: int | None = None,
+                    precision: Precision | None = None):
     """Whole-run body, 3-tier HFL global rounds (Hier-Local-QSGD).
     carry: (params, opt_state (M, n_max, ...)).  x: {"batch": (J, M, n_max,
     E, B, ...), "gammas"/"mask": (M, n_max), "es_weights": (M,), "subs":
     (J, M, 2), "es_subs": (M, 2)}.  Emits losses (J, M); with `taps` the ys
-    are (losses, tele) with per-cluster (M,) tele leaves."""
-    round_fn = _multi_round_body(model, channel, es_channel, opt, taps)
+    are (losses, tele) with per-cluster (M,) tele leaves.
+    `microbatch`/`precision` as in `_multi_round_body`."""
+    round_fn = _multi_round_body(model, channel, es_channel, opt, taps,
+                                 microbatch, precision)
 
     def body(carry, x, consts):
         params, opt_state = carry
@@ -633,10 +878,25 @@ def _chunk_of(body):
 
 @functools.cache
 def scan_chunk_fn(body):
-    """jit(chunk) — the whole-run hot loop.  The carry is donated where the
-    backend supports it (run-level buffer donation: params/opt-state buffers
-    are reused across chunks)."""
-    return _jit_round(_chunk_of(body))
+    """jit(chunk) — the whole-run hot loop.  Where the backend supports
+    buffer donation (tpu/gpu; CPU donation only warns), BOTH chunk inputs
+    are donated:
+
+      * the carry (argnum 0) — run-level: params/opt-state buffers are
+        reused across chunks, so the master params exist once;
+      * the staged xs (argnum 1) — chunk-level: `_run_chunks` stages a
+        FRESH xs pytree per chunk via `device_put` and never touches it
+        again, so donating hands its batch buffers back to the allocator
+        as the scan consumes them.
+
+    Together with `client_microbatch` this is what pins the LM run's live
+    set at (master params + opt states) + one chunk of staged batches +
+    one microbatch of activations.  `consts` (argnum 2) is deliberately NOT
+    donated: it is reused by every chunk of the run."""
+    fn = _chunk_of(body)
+    if jax.default_backend() in ("tpu", "gpu"):
+        return jax.jit(fn, donate_argnums=(0, 1))
+    return jax.jit(fn)
 
 
 @functools.cache

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.channels import Channel, DenseChannel, channel_wire_bits, make_channel
+from repro.comm.channels import Channel, DenseChannel, channel_wire_bits
 from repro.core.engine import (
     RoundEngine,
     ScanPlan,
@@ -56,6 +56,11 @@ from repro.core.engine import (
     split_chain,
 )
 from repro.core.ledger import CommLedger
+from repro.core.precision import (
+    Precision,
+    downlink_bits_per_param,
+    resolve_channel,
+)
 from repro.core.scheduler import (
     AvailabilityAwareScheduler,
     FedCHSScheduler,
@@ -88,6 +93,18 @@ class FedCHSConfig:
                                            # qsgd_levels/bits_per_param
     local_opt: LocalOpt | None = None      # client-held optimizer; None = the
                                            # seed-parity plain-SGD Eq. (5) step
+    client_microbatch: int | None = None   # engine memory knob: at most this
+                                           # many client replicas train at once
+                                           # (None = the all-clients vmap);
+                                           # grad mode stays bit-identical,
+                                           # delta modes <=1 ulp/interaction
+    precision: Precision | None = None     # mixed-precision policy
+                                           # (core/precision.py): bf16 client
+                                           # compute, f32 master params at the
+                                           # ES, wire-dtype dense messages.
+                                           # None = the exact f32 seed path.
+                                           # Forces delta mode (grad mode is
+                                           # the paper-literal f32 arm).
     link_delay: Callable[[int, int], float] | None = None
                                            # ES-pair delay (seconds); switches the
                                            # scheduler to LatencyAwareScheduler
@@ -259,25 +276,31 @@ def run_fed_chs(task: FLTask, config: FedCHSConfig) -> RunResult:
     params = task.init_params()
     d = task.num_params()
     ledger = CommLedger(track_events=config.track_events)
-    channel = (
-        config.channel
-        if config.channel is not None
-        else make_channel(config.qsgd_levels, config.bits_per_param)
-    )
-    engine = RoundEngine(task.model, channel, local_opt=config.local_opt)
+    channel = resolve_channel(config.precision, config.channel,
+                              config.qsgd_levels, config.bits_per_param)
+    engine = RoundEngine(task.model, channel, local_opt=config.local_opt,
+                         client_microbatch=config.client_microbatch,
+                         precision=config.precision)
     key = jax.random.PRNGKey(config.seed + 1)
 
-    down_bits = DenseChannel(config.bits_per_param).message_bits(d)  # model broadcast
+    # model broadcast travels at the wire width under a precision policy
+    down_bits = DenseChannel(
+        downlink_bits_per_param(config.precision, config.bits_per_param)
+    ).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     # literal Eq. (5): E=1 dense plain-SGD interactions are gradient uplinks
     # fused into the per-step gamma-weighted SGD scan (explicit PlainSGD is
     # the same mathematical step, so it takes the same path as the default).
     # A non-full sampler forces delta mode: dropouts need the masked round.
+    # Mixed precision also forces delta mode — grad mode is the paper-literal
+    # f32 arm — as does a lossy dense wire (its cast must enter the uplink).
     grad_mode = (
         full_part
         and E == 1
         and isinstance(channel, DenseChannel)
+        and channel.wire_dtype is None
+        and config.precision is None
         and (config.local_opt is None or isinstance(config.local_opt, PlainSGD))
     )
     opt_states: dict[int, object] = {}  # cluster -> stacked client-held opt state
@@ -445,17 +468,18 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
 
     params = task.init_params()
     d = task.num_params()
-    channel = (
-        config.channel
-        if config.channel is not None
-        else make_channel(config.qsgd_levels, config.bits_per_param)
-    )
-    engine = RoundEngine(task.model, channel, local_opt=config.local_opt)
+    channel = resolve_channel(config.precision, config.channel,
+                              config.qsgd_levels, config.bits_per_param)
+    engine = RoundEngine(task.model, channel, local_opt=config.local_opt,
+                         client_microbatch=config.client_microbatch,
+                         precision=config.precision)
 
     grad_mode = (
         full_part
         and E == 1
         and isinstance(channel, DenseChannel)
+        and channel.wire_dtype is None
+        and config.precision is None
         and (config.local_opt is None or isinstance(config.local_opt, PlainSGD))
     )
     taps = config.obs is not None and config.obs.taps
@@ -536,7 +560,7 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
             return {"batch": batch, "gammas": gammas_r[idxs],
                     "lrs": np.ascontiguousarray(lrs_r[idxs])}
 
-        body = scan_grad_body(engine.model, taps)
+        body = scan_grad_body(engine.model, taps, config.client_microbatch)
         carry = params
         consts = {}
         params_of = lambda c: c  # noqa: E731
@@ -558,7 +582,9 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
                 "subs": subs_r[idxs],
             }
 
-        body = scan_cluster_delta_body(engine.model, channel, engine.local_opt, taps)
+        body = scan_cluster_delta_body(engine.model, channel, engine.local_opt,
+                                       taps, config.client_microbatch,
+                                       config.precision)
         carry = (params, engine.init_opt_state(params, M, n_max))
         consts = {"lrs": jnp.asarray(lrs.reshape(interactions, E))}
         params_of = lambda c: c[0]  # noqa: E731
@@ -569,6 +595,10 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
 
     mesh = resolve_mesh(config.mesh)
     if mesh is not None:
+        # mutually exclusive memory strategies: the mesh shards the client
+        # axis across devices, the microbatch scan folds it in time
+        assert config.client_microbatch is None, \
+            "client_microbatch and a federation mesh are mutually exclusive"
         # population sharding: the active cluster's client axis spreads over
         # the whole mesh (one cluster trains per round — see sharding.fed)
         if grad_mode:
@@ -579,7 +609,9 @@ def _fed_chs_scan_plan(task: FLTask, source, config: FedCHSConfig):
                               channel=channel, opt=engine.local_opt,
                               clients=n_max)
 
-    down_bits = DenseChannel(config.bits_per_param).message_bits(d)
+    down_bits = DenseChannel(
+        downlink_bits_per_param(config.precision, config.bits_per_param)
+    ).message_bits(d)
     up_bits = channel_wire_bits(channel, d, task.param_leaf_sizes())
 
     def traffic(track_events: bool):

@@ -56,17 +56,57 @@ def local_opt_steps(model: FedModel, opt: LocalOpt):
     return run
 
 
-def grad_phase(model: FedModel):
+def grad_phase(model: FedModel, microbatch: int | None = None):
     """Eq. (5) literal: scan over K steps of
     w <- w - eta_k * sum_n gamma_n grad_n(w, xi_{n,k}).
     batch leaves: (K, n, B, ...); gammas: (n,); lrs: (K,).
-    Returns (params, per-step gamma-weighted losses (K,))."""
+    Returns (params, per-step gamma-weighted losses (K,)).
+
+    `microbatch` bounds how many clients' forward/backward passes are live at
+    once: the all-clients vmap becomes a `lax.scan` over ceil(n/microbatch)
+    client groups (tail group padded with client-0 replicas, sliced off before
+    aggregation).  The per-step gradient STACK (n, ...) is still materialized
+    — Eq. (5) aggregates all n gradients jointly, and feeding the stack to the
+    very same einsum is what keeps the microbatched path BIT-IDENTICAL to the
+    vmapped one (per-client grads are vmap-width-invariant; pinned by
+    tests/test_engine_parity.py) — but activation memory drops from O(n) to
+    O(microbatch) model evaluations, which is the dominant term for LMs."""
     grad_fn = jax.vmap(jax.value_and_grad(model.loss), in_axes=(None, 0))
+
+    if microbatch is None:
+        per_step = grad_fn
+    else:
+        mb = int(microbatch)
+        assert mb >= 1
+
+        def per_step(p, b_k):
+            n = jax.tree.leaves(b_k)[0].shape[0]
+            pad = (-n) % mb
+            if pad:
+                b_k = jax.tree.map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])]
+                    ),
+                    b_k,
+                )
+            b_g = jax.tree.map(
+                lambda a: a.reshape(((n + pad) // mb, mb) + a.shape[1:]), b_k
+            )
+
+            def group(_, b_j):
+                return None, grad_fn(p, b_j)
+
+            _, (losses, grads) = jax.lax.scan(group, None, b_g)
+            losses = losses.reshape(n + pad)[:n]
+            grads = jax.tree.map(
+                lambda a: a.reshape((n + pad,) + a.shape[2:])[:n], grads
+            )
+            return losses, grads
 
     def phase(params, batch, gammas, lrs):
         def step(p, inp):
             b_k, lr_k = inp
-            losses, grads = grad_fn(p, b_k)
+            losses, grads = per_step(p, b_k)
             agg = jax.tree.map(lambda g: jnp.einsum("n,n...->...", gammas, g), grads)
             p = jax.tree.map(lambda w, g: w - lr_k * g, p, agg)
             return p, jnp.dot(gammas, losses)

@@ -18,16 +18,19 @@ Examples:
 """
 from __future__ import annotations
 
-import os
-
-if "XLA_FLAGS" not in os.environ:  # before any jax import
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 import argparse
+import os
 import time
 
 
 def main() -> None:
+    # Set before any jax BACKEND INIT (jax reads XLA_FLAGS lazily, at first
+    # use) — and only on the CLI path: importing this module (e.g. tests
+    # pulling in serve_loop) must not force a 512-device partition on the
+    # host process, which perturbs XLA:CPU's compute partitioning and with
+    # it the bit-exact engine parity pins.
+    if "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--arch", default=None,
                     help="model architecture (required except --federation)")

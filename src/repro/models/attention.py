@@ -6,10 +6,18 @@ the TPU-native equivalent of flash attention, and the shape the Pallas fast
 path in repro/kernels/flash_attention.py mirrors. Decode attends one query
 against a fixed-capacity cache (full or ring-buffered sliding window).
 
+With `cfg.use_flash` the training/prefill path routes through the Pallas
+kernel instead (`_flash_attention_ad`): the forward is the fused q-blocked
+kernel, and the backward recomputes attention via this module's blockwise
+oracle and differentiates THAT — the standard flash-attention recompute
+trade (no (T, S) residuals saved; the two implementations agree to kernel
+tolerance, pinned by tests/test_kernels.py).
+
 Shapes: x (B, T, D); q (B, T, H, hd); kv (B, S, Hkv, hd); caches (B, S, Hkv, hd).
 """
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
@@ -131,6 +139,36 @@ def blockwise_attention(
     return out.reshape(B, T, H, hd_v).astype(q.dtype)
 
 
+@functools.cache
+def _flash_attention_ad(causal: bool, window: int | None):
+    """Differentiable flash attention: Pallas kernel forward, blockwise-oracle
+    backward.  The kernel itself has no VJP rule (it is a fused forward); on
+    the backward pass we recompute the attention with `blockwise_attention`
+    — numerically the same online softmax — and transpose through that.
+    Residuals are just (q, k, v): activation memory stays O(T·hd), never
+    O(T·S), which is the whole point of putting flash on the training path."""
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        from repro.kernels.flash_attention import flash_attention
+
+        return flash_attention(q, k, v, causal=causal, window=window)
+
+    def fwd(q, k, v):
+        return fa(q, k, v), (q, k, v)
+
+    def bwd(res, ct):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q, k, v: blockwise_attention(q, k, v, causal=causal, window=window),
+            q, k, v,
+        )
+        return vjp(ct)
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int | None = None):
     """Single-step decode: q (B,1,H,hd) vs cache (B,S,Hkv,hd); positions
     >= cache_len are masked. Sliding-window caches are ring buffers, so all
@@ -179,7 +217,10 @@ def attention_forward(cfg: ArchConfig, p, x, *, window: int | None = None):
     B, T, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(T), (B, T))
     q, k, v = _project_qkv(cfg, p, x, positions)
-    out = blockwise_attention(q, k, v, causal=True, window=window)
+    if cfg.use_flash:
+        out = _flash_attention_ad(True, window)(q, k, v)
+    else:
+        out = blockwise_attention(q, k, v, causal=True, window=window)
     return out.reshape(B, T, -1) @ p["wo"]
 
 

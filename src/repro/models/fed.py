@@ -109,12 +109,22 @@ class LMFedModel:
 
     cfg: ArchConfig
     remat: bool = False
+    flash: bool = False   # route self-attention through the Pallas flash
+                          # kernel (sets cfg.use_flash); with remat=True this
+                          # is the memory-lean LM training configuration the
+                          # `client_microbatch` engine knob assumes
+
     metric_name: str = dataclasses.field(default="perplexity", init=False)
     metric_mode: str = dataclasses.field(default="min", init=False)
 
     @property
     def name(self) -> str:
         return f"lm-{self.cfg.name}"
+
+    def _run_cfg(self) -> ArchConfig:
+        if self.flash and not self.cfg.use_flash:
+            return dataclasses.replace(self.cfg, use_flash=True)
+        return self.cfg
 
     def init(self, key: jax.Array) -> PyTree:
         from repro.models import transformer as tf
@@ -124,7 +134,7 @@ class LMFedModel:
     def loss(self, params: PyTree, batch: Batch) -> jax.Array:
         from repro.models import transformer as tf
 
-        return tf.loss_fn(self.cfg, params, batch, remat=self.remat)
+        return tf.loss_fn(self._run_cfg(), params, batch, remat=self.remat)
 
     def eval_metric(self, params: PyTree, eval_data) -> float:
         """exp(mean next-token CE) over `eval_data`: a batch pytree with a

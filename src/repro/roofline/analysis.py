@@ -30,10 +30,15 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class HW:
     peak_flops: float = 197e12      # bf16 per chip
+    peak_flops_f32: float = 98.5e12  # f32 matmuls run the MXU at half rate
     hbm_bw: float = 819e9           # bytes/s per chip
     ici_bw: float = 50e9            # bytes/s per link
 
 V5E = HW()
+
+# dtypes the MXU runs at full (low-precision) rate; everything else — f32
+# master-weight matmuls above all — is priced at `peak_flops_f32`
+_FULL_RATE_DTYPES = ("bf16", "f16", "f8e4m3fn", "f8e5m2", "s8", "u8")
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -158,8 +163,13 @@ def analyze_hlo_text(text: str) -> dict:
                     trip_of_callee[callee] = trip
 
     flops = 0.0
+    flops_by_dtype = defaultdict(float)
     coll = defaultdict(float)
     visited_stack: list[str] = []
+
+    def _out_dtype(ins) -> str:
+        m = _SHAPE_RE.search(ins["shape"])
+        return m.group(1) if m else "?"
 
     def visit(cname: str, mult: float):
         if cname not in comps or cname in visited_stack:
@@ -169,9 +179,13 @@ def analyze_hlo_text(text: str) -> dict:
             op = ins["op"]
             if op == "dot":
                 nonlocal flops
-                flops += mult * _dot_flops(ins, shapes)
+                f = mult * _dot_flops(ins, shapes)
+                flops += f
+                flops_by_dtype[_out_dtype(ins)] += f
             elif op == "convolution":
-                flops += mult * _conv_flops(ins, shapes)
+                f = mult * _conv_flops(ins, shapes)
+                flops += f
+                flops_by_dtype[_out_dtype(ins)] += f
             elif any(op.startswith(c) for c in _COLLECTIVES):
                 base = _shape_bytes(ins["shape"])
                 key = next(c for c in _COLLECTIVES if op.startswith(c))
@@ -187,6 +201,7 @@ def analyze_hlo_text(text: str) -> dict:
         visit(entry, 1.0)
     return {
         "dot_flops_per_device": flops,
+        "dot_flops_by_dtype": dict(flops_by_dtype),
         "collective_bytes_per_device": dict(coll),
         "collective_total_bytes": float(sum(coll.values())),
     }
@@ -195,6 +210,8 @@ def analyze_hlo_text(text: str) -> dict:
 def analyze_compiled(compiled, *, hints: dict | None = None) -> dict:
     """Full record for one compiled lowering (per-device numbers)."""
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # per-device list in newer jax
+        ca = ca[0] if ca else {}
     raw_flops = float(ca.get("flops", 0.0) or 0.0)
     raw_bytes = float(ca.get("bytes accessed", 0.0) or 0.0)
     hlo = analyze_hlo_text(compiled.as_text())
@@ -219,6 +236,7 @@ def analyze_compiled(compiled, *, hints: dict | None = None) -> dict:
     return {
         "raw_flops_per_device": raw_flops,
         "dot_flops_per_device": scaled_flops,
+        "dot_flops_by_dtype": hlo["dot_flops_by_dtype"],
         "raw_bytes_per_device": raw_bytes,
         "scaled_bytes_per_device": raw_bytes * scale,
         "loop_scale_ratio": scale,
@@ -229,14 +247,41 @@ def analyze_compiled(compiled, *, hints: dict | None = None) -> dict:
     }
 
 
+def compute_seconds(record: dict, *, hw: HW = V5E) -> float:
+    """Dtype-aware compute term: each dot's flops are priced at the MXU rate
+    its OUTPUT dtype actually achieves — bf16/f16/f8 at `peak_flops`, f32
+    (and anything else) at `peak_flops_f32`.  A mixed-precision round is
+    mostly-bf16 with a thin f32 master/accumulate slice, and pricing it all
+    at the bf16 peak understates compute by up to 2x.  Records without the
+    dtype breakdown (older artifacts) fall back to the flat bf16 rate."""
+    by_dtype = record.get("dot_flops_by_dtype")
+    if not by_dtype:
+        return record["dot_flops_per_device"] / hw.peak_flops
+    return sum(
+        f / (hw.peak_flops if dt in _FULL_RATE_DTYPES else hw.peak_flops_f32)
+        for dt, f in by_dtype.items()
+    )
+
+
+def arithmetic_intensity(record: dict) -> float:
+    """FLOPs per HBM byte of the compiled program — compared against the
+    machine balance (`hw.peak_flops / hw.hbm_bw`) it says which side of the
+    roofline ridge a kernel sits on.  Bytes come from the dtype-priced shape
+    walk, so a bf16 activation stream (2 B/elt) doubles the intensity of the
+    same graph in f32 — exactly the effect the mixed-precision policy buys."""
+    b = record.get("scaled_bytes_per_device") or record.get("raw_bytes_per_device", 0.0)
+    return record["dot_flops_per_device"] / b if b else float("inf")
+
+
 def roofline_terms(record: dict, *, hw: HW = V5E) -> dict:
     """Seconds per term + the dominant bottleneck."""
-    compute = record["dot_flops_per_device"] / hw.peak_flops
+    compute = compute_seconds(record, hw=hw)
     memory = record["scaled_bytes_per_device"] / hw.hbm_bw
     collective = record["collective_bytes_per_device"] / hw.ici_bw
     terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
     dom = max(terms, key=terms.get)
-    return {**terms, "bound": dom.replace("_s", "")}
+    return {**terms, "bound": dom.replace("_s", ""),
+            "intensity_flops_per_byte": arithmetic_intensity(record)}
 
 
 def model_flops(param_count: int, tokens: float, *, kind: str = "train") -> float:

@@ -9,6 +9,11 @@ import pytest
 HYPOTHESIS_GUARDED = ("test_property.py", "test_property_moe.py",
                       "test_partition.py")
 
+# mixed files: mostly deterministic tests plus `if HAS_HYPOTHESIS:` property
+# suites — file-level collection always succeeds, so the guard must check
+# that at least one test with the given name prefix was actually collected
+HYPOTHESIS_GUARDED_PREFIXES = (("test_engine_parity.py", "test_property_"),)
+
 
 def pytest_addoption(parser):
     parser.addoption(
@@ -35,6 +40,19 @@ def pytest_collection_finish(session):
         raise pytest.UsageError(
             f"--require-hypothesis: no tests collected from {missing} — "
             "the property suites did not run.")
+    by_file: dict[str, set[str]] = {}
+    for item in session.items:
+        by_file.setdefault(
+            os.path.basename(item.nodeid.split("::")[0]), set()
+        ).add(item.name.split("[")[0])
+    missing_props = [
+        f"{f}::{prefix}*" for f, prefix in HYPOTHESIS_GUARDED_PREFIXES
+        if f in by_file and not any(n.startswith(prefix) for n in by_file[f])
+    ]
+    if missing_props:
+        raise pytest.UsageError(
+            f"--require-hypothesis: no property tests collected for "
+            f"{missing_props} — the embedded hypothesis suites did not run.")
 
 
 @pytest.fixture(scope="session")

@@ -104,3 +104,105 @@ def test_phase_bytes_attributes_qsgd_wire_cost_end_to_end():
     # the payload itself (4 blocks x 6-bit planes x 32 words x 4 B) plus the
     # uniform draw and intermediates: encode moves at least the payload bytes
     assert got["encode"] >= 4 * 6 * 32 * 4
+
+
+def test_phase_bytes_pins_bf16_dense_wire_roundtrip():
+    """DenseChannel(wire_dtype="bfloat16") encode/decode: the wire scopes
+    survive jit and the billed bytes are EXACTLY the payload widths — encode
+    emits the bf16 payload (2 B/param), decode rebuilds f32 (4 B/param)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm.channels import DenseChannel
+
+    ch = DenseChannel(wire_dtype="bfloat16")
+    leaf = jnp.zeros((1024,), jnp.float32)
+
+    enc_hlo = (
+        jax.jit(lambda t: ch.encode(t)).lower({"w": leaf}).compile().as_text()
+    )
+    got = phase_bytes(enc_hlo, {"encode": r"wire_encode"})
+    assert got["encode"] == 1024 * 2  # bf16 payload: 2 bytes per param
+
+    def dec(wires):
+        return ch.decode(wires, {"w": leaf})
+
+    dec_hlo = (
+        jax.jit(dec)
+        .lower([{"payload": leaf.astype(jnp.bfloat16)}])
+        .compile()
+        .as_text()
+    )
+    got = phase_bytes(dec_hlo, {"decode": r"wire_decode"})
+    assert got["decode"] == 1024 * 4  # rebuilt at f32: 4 bytes per param
+
+
+def test_phase_bytes_attributes_mixed_precision_round(small_task):
+    """A bf16 round bills nonzero bytes to precision_cast (the params/batch/lr
+    down-casts survive jit as tagged converts) on BOTH engine paths (vmapped
+    and microbatched).  The master up-cast of the deltas fuses into the
+    gamma-weighted einsum, so its bytes land under intra_agg — which must
+    therefore also be nonzero and larger than the bare f32 aggregate of the
+    no-precision round (the fused accumulate now reads bf16 and writes f32)."""
+    import jax.numpy as jnp
+
+    from repro.comm.channels import DenseChannel
+    from repro.core.engine import RoundEngine, _delta_round_fn
+    from repro.core.precision import Precision, dense_wire_channel
+
+    prec = Precision()
+    channel = dense_wire_channel(prec)
+    assert channel == DenseChannel(wire_dtype="bfloat16")
+    engine = RoundEngine(small_task.model, channel, precision=prec)
+    params = small_task.init_params()
+    n = len(small_task.cluster_members[0])
+    opt_state = engine.init_opt_state(params, n)
+    batch = small_task.sample_round_batches(0, 4, 2)
+    gammas = jnp.asarray(small_task.cluster_weights(0))
+    lrs = jnp.full((2, 2), 0.05, jnp.float32)
+    for mb in (None, 2):
+        fn = _delta_round_fn(engine.model, channel, engine.local_opt, False,
+                             mb, prec)
+        hlo = fn.lower(params, opt_state, batch, gammas, lrs,
+                       None).compile().as_text()
+        got = phase_bytes(hlo, {"cast": r"precision_cast",
+                                "agg": r"intra_agg|master_accumulate",
+                                "train": r"local_train"})
+        assert got.get("cast", 0.0) > 0.0, mb
+        assert got.get("agg", 0.0) > 0.0, mb
+        assert got.get("train", 0.0) > 0.0, mb
+        # training (fwd+bwd over E steps per client) still dominates
+        assert got["train"] > got["agg"], mb
+
+
+def test_compute_seconds_prices_f32_dots_at_half_rate():
+    from repro.roofline.analysis import HW, arithmetic_intensity, compute_seconds
+
+    hw = HW(peak_flops=200e12, peak_flops_f32=100e12)
+    rec = {"dot_flops_per_device": 3e12,
+           "dot_flops_by_dtype": {"bf16": 2e12, "f32": 1e12},
+           "scaled_bytes_per_device": 1.5e12}
+    assert compute_seconds(rec, hw=hw) == 2e12 / 200e12 + 1e12 / 100e12
+    assert arithmetic_intensity(rec) == 2.0
+    # records without the breakdown (older artifacts) use the flat bf16 rate
+    flat = {"dot_flops_per_device": 3e12}
+    assert compute_seconds(flat, hw=hw) == 3e12 / 200e12
+
+
+def test_analyze_hlo_dtype_breakdown():
+    """dot flops are split by output dtype so mixed-precision graphs can be
+    priced per MXU rate; a bf16 matmul lands under a low-precision key."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.roofline.analysis import analyze_hlo_text
+
+    def f(a, b):
+        return (a @ b).astype(jnp.float32)
+
+    a = jnp.zeros((64, 128), jnp.bfloat16)
+    b = jnp.zeros((128, 32), jnp.bfloat16)
+    rec = analyze_hlo_text(jax.jit(f).lower(a, b).compile().as_text())
+    want = 2.0 * 64 * 32 * 128
+    assert rec["dot_flops_per_device"] == want
+    assert sum(rec["dot_flops_by_dtype"].values()) == want

@@ -164,8 +164,24 @@ def test_wire_bits_matches_actual_payload():
         measured_bits = 8 * sum(
             w["payload"].size * 4 + w["norms"].size * 4 for w in wires)
         assert channel_wire_bits(ch, d, sizes) == measured_bits
-    # dense has no encode(): the helper falls back to message_bits(d)
+    # f32 dense: wire_bits and the flat formula agree (no block padding)
     assert channel_wire_bits(DenseChannel(), d, sizes) == dense_message_bits(d)
+    # a bf16 wire halves every dense message exactly
+    bf = DenseChannel(wire_dtype="bfloat16")
+    assert channel_wire_bits(bf, d, sizes) * 2 == dense_message_bits(d)
+    wires = bf.encode(tree)
+    assert 8 * sum(w["payload"].size * w["payload"].dtype.itemsize
+                   for w in wires) == channel_wire_bits(bf, d, sizes)
+
+
+def test_precision_dtype_table_sync():
+    """Every dtype a Precision policy names must be priceable by the wire
+    width table — the ledger can never meet a dtype it cannot price."""
+    from repro.comm.bits import dtype_bits
+    from repro.core.precision import _SUPPORTED
+
+    assert {dt: dtype_bits(dt) for dt in _SUPPORTED} == {
+        "float32": 32, "bfloat16": 16, "float16": 16, "float8_e4m3fn": 8}
 
 
 def test_signsgd_channel_properties():

@@ -35,6 +35,32 @@ def test_pytree_roundtrip(tmp_path):
         assert a.dtype == b.dtype
 
 
+def test_dual_dtype_pytree_roundtrip_bit_exact(tmp_path):
+    """A mixed-precision run state holds bf16 compute leaves AND f32 master
+    leaves in one pytree; every leaf must come back at its true dtype with
+    its exact bit pattern (ml_dtypes leaves are stored as same-width ints,
+    not widened to f32)."""
+    tree = {
+        "master": jnp.linspace(-1, 1, 33, dtype=jnp.float32),
+        "opt": {"mom": jnp.linspace(-2, 2, 33).astype(jnp.bfloat16)},
+        "wire": jnp.linspace(-1, 1, 9).astype(jnp.float8_e4m3fn),
+        "steps": jnp.arange(4, dtype=jnp.int32),
+    }
+    path = os.path.join(tmp_path, "dual.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8)
+        )
+    # native width on disk: the bf16 leaf is half the f32 leaf of equal length
+    import zipfile
+
+    sizes = {i.filename: i.file_size for i in zipfile.ZipFile(path).infolist()}
+    assert sizes["opt/mom.npy"] < sizes["master.npy"]
+
+
 def test_fl_state_roundtrip(tmp_path):
     params = {"w": jnp.ones((4, 4)), "b": jnp.zeros(4)}
     counts = np.array([3, 1, 2, 0], dtype=np.int64)

@@ -187,6 +187,32 @@ def test_ledger_matches_transmitted_payload_bytes(small_task, channel):
     assert ups and all(b == measured * 8 for b in ups)
 
 
+def test_ledger_matches_bf16_dense_wire_payload_bytes(small_task):
+    """Honesty for the mixed-precision dense wire: the bf16 payload
+    DenseChannel(wire_dtype="bfloat16") actually emits weighs exactly what the
+    ledger records — half the f32 dense message, with the downlink priced at
+    wire width too (the ES ships the compute-dtype model)."""
+    from repro.core.precision import Precision
+
+    channel = DenseChannel(wire_dtype="bfloat16")
+    params = small_task.init_params()
+    wires = channel.encode(params)
+    measured = sum(w["payload"].size * w["payload"].dtype.itemsize
+                   for w in wires)
+    d = small_task.num_params()
+    priced = channel_wire_bits(channel, d, small_task.param_leaf_sizes())
+    assert measured == priced // 8
+    assert priced * 2 == dense_message_bits(d)  # exactly half of f32 dense
+
+    res = run_fed_chs(small_task, FedCHSConfig(rounds=2, local_steps=2,
+                                               eval_every=10,
+                                               precision=Precision()))
+    ups = [e.n_bits for e in res.ledger.events if e.hop == "client_to_es"]
+    assert ups and all(b == measured * 8 for b in ups)
+    downs = [e.n_bits for e in res.ledger.events if e.hop == "es_to_client"]
+    assert downs and all(b == measured * 8 for b in downs)
+
+
 def test_fed_chs_event_stream_matches_aggregates(small_task):
     T, K = 3, 4
     res = run_fed_chs(small_task, FedCHSConfig(rounds=T, local_steps=K, eval_every=10))

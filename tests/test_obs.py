@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import FedCHSConfig, run_fed_chs
-from repro.core.ledger import CommEvent, CommLedger
+from repro.core.ledger import CommLedger
 from repro.core.simulation import RunResult
 from repro.netsim import Timeline, edge_cloud_network, replay_run
 from repro.netsim.events import JobTimes

@@ -74,3 +74,30 @@ def test_sync_fed_chs_resume_matches_scanned(small_task, tmp_path):
                for a, b in zip(la, lb))
     assert base.test_acc == resumed.test_acc
     assert base.ledger.bits == resumed.ledger.bits
+
+
+def test_mixed_precision_resume_bit_parity(small_task, tmp_path):
+    """Kill/resume under the full memory-lean configuration: bf16 compute +
+    f32 master (dual-dtype run state — bf16 momentum leaves and f32 params in
+    ONE checkpoint pytree) with the client-microbatched engine.  The resumed
+    run must be bit-identical to an uninterrupted one: the checkpoint stores
+    every leaf's exact bit pattern at its true dtype."""
+    from repro.core.fed_chs import FedCHSConfig, run_fed_chs
+    from repro.core.precision import Precision
+    from repro.optim.local import MomentumSGD
+
+    kw = dict(rounds=6, local_steps=4, local_epochs=2, eval_every=2,
+              initial_cluster=0, precision=Precision(), client_microbatch=2,
+              local_opt=MomentumSGD(), scan_rounds=False)
+    base = run_fed_chs(small_task, FedCHSConfig(**kw))
+
+    ck = os.path.join(tmp_path, "mp")
+    run_fed_chs(small_task, FedCHSConfig(**{**kw, "rounds": 3}, checkpoint=ck))
+    resumed = run_fed_chs(small_task,
+                          FedCHSConfig(**kw, checkpoint=ck, resume=True))
+
+    la, lb = jax.tree.leaves(base.final_params), jax.tree.leaves(resumed.final_params)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(la, lb))
+    assert base.test_acc == resumed.test_acc
+    assert base.ledger.bits == resumed.ledger.bits
